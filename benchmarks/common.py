@@ -1,0 +1,30 @@
+"""Shared helpers for the benchmark suite.
+
+Every benchmark prints CSV rows: name,us_per_call,derived
+  - us_per_call: mean microseconds per lock+unlock op (simulated time), or
+    wall time per call for kernel benches
+  - derived: the figure-specific statistic (throughput, speedup, ...)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.sim import SimConfig, SimResult, simulate
+
+EVENTS = 150_000
+
+
+def run(alg, nodes, tpn, locks, loc, b=(5, 20), events=EVENTS,
+        seed=0) -> SimResult:
+    return simulate(SimConfig(alg, nodes, tpn, locks, loc, b, seed),
+                    n_events=events)
+
+
+def us_per_op(r: SimResult) -> float:
+    lat = np.asarray(r.lat_ns)
+    lat = lat[lat >= 0]
+    return float(lat.mean()) / 1e3 if len(lat) else float("nan")
+
+
+def emit(name: str, us: float, derived) -> None:
+    print(f"{name},{us:.3f},{derived}", flush=True)

@@ -1,0 +1,26 @@
+"""Fig. 1: RDMA spinlock with 1k locks on 1 node — loopback saturation.
+
+Paper claim: throughput peaks at a few threads, then declines as loopback
+traffic drains PCIe bandwidth. ALock (no loopback) keeps scaling.
+"""
+from benchmarks.common import emit, run, us_per_op
+
+
+def main() -> None:
+    peak = 0.0
+    last = None
+    for tpn in (1, 2, 4, 8, 12, 16):
+        r = run("spinlock", 1, tpn, 1000, 1.0)
+        emit(f"fig1.spinlock.1node.t{tpn}", us_per_op(r),
+             f"{r.throughput_mops:.3f}Mops")
+        peak = max(peak, r.throughput_mops)
+        last = r.throughput_mops
+        a = run("alock", 1, tpn, 1000, 1.0)
+        emit(f"fig1.alock.1node.t{tpn}", us_per_op(a),
+             f"{a.throughput_mops:.3f}Mops")
+    emit("fig1.spinlock.collapse_ratio", 0.0,
+         f"{peak / max(last, 1e-9):.2f}x_peak_over_t16")
+
+
+if __name__ == "__main__":
+    main()

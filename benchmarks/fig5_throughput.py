@@ -1,0 +1,40 @@
+"""Fig. 5: throughput grid — nodes x contention x locality, 3 algorithms.
+
+Trends validated against the paper:
+  - 100% locality: ALock >> both competitors at every contention level;
+  - high contention (20 locks): spinlock/MCS overwhelmed, ALock passes
+    the lock and keeps scaling;
+  - low contention (1000 locks): the gap narrows but ALock still leads at
+    high locality.
+"""
+from benchmarks.common import emit, run, us_per_op
+
+GRID_NODES = (5, 10, 20)
+LOCKS = (20, 100, 1000)
+LOCALITY = (0.85, 0.95, 1.0)
+TPN = 8
+
+
+def main() -> None:
+    for nodes in GRID_NODES:
+        for locks in LOCKS:
+            for loc in LOCALITY:
+                best = {}
+                for alg in ("alock", "spinlock", "mcs"):
+                    r = run(alg, nodes, TPN, locks, loc)
+                    best[alg] = r.throughput_mops
+                    emit(f"fig5.{alg}.n{nodes}.k{locks}.loc{int(loc*100)}",
+                         us_per_op(r), f"{r.throughput_mops:.3f}Mops")
+                emit(f"fig5.gap.n{nodes}.k{locks}.loc{int(loc*100)}", 0.0,
+                     f"alock_over_spin={best['alock']/max(best['spinlock'],1e-9):.2f}x,"
+                     f"alock_over_mcs={best['alock']/max(best['mcs'],1e-9):.2f}x")
+    # thread scaling at the paper's largest config
+    for tpn in (2, 4, 8, 12):
+        r = run("alock", 20, tpn, 20, 0.95)
+        s = run("spinlock", 20, tpn, 20, 0.95)
+        emit(f"fig5.scaling.t{tpn}.n20.k20", us_per_op(r),
+             f"alock={r.throughput_mops:.3f}Mops,spin={s.throughput_mops:.3f}Mops")
+
+
+if __name__ == "__main__":
+    main()

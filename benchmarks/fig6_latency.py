@@ -1,0 +1,31 @@
+"""Fig. 6: latency CDF percentiles (p50/p90/p99) per algorithm/workload."""
+import numpy as np
+
+from benchmarks.common import emit, run
+
+NODES, TPN = 10, 8
+
+
+def main() -> None:
+    for locks in (20, 100, 1000):
+        for loc in (0.85, 0.95, 1.0):
+            rows = {}
+            for alg in ("alock", "spinlock", "mcs"):
+                r = run(alg, NODES, TPN, locks, loc)
+                lat = np.asarray(r.lat_ns)
+                lat = lat[lat >= 0]
+                if len(lat) == 0:
+                    continue
+                p50, p90, p99 = np.percentile(lat, [50, 90, 99])
+                rows[alg] = p50
+                emit(f"fig6.{alg}.k{locks}.loc{int(loc*100)}",
+                     float(p50) / 1e3,
+                     f"p50={p50/1e3:.2f}us,p90={p90/1e3:.2f}us,"
+                     f"p99={p99/1e3:.2f}us")
+            if "alock" in rows and "mcs" in rows:
+                emit(f"fig6.p50gap.k{locks}.loc{int(loc*100)}", 0.0,
+                     f"mcs_over_alock={rows['mcs']/max(rows['alock'],1e-9):.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Lock-primitive microbenchmarks: operation counts + kernel wall time.
+
+Uncontended op counts per Lock()+Unlock() (measured on the machine, not
+assumed): ALock-local = 0 RDMA ops; ALock-remote = 4 RDMA (swap, victim,
+read, release-CAS); competitors pay RDMA/loopback on every access.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import machine as mc
+
+
+def count_ops(alg, cohort):
+    st = mc.initial_state(1)
+    remote = local = 0
+    guard = 0
+    while True:
+        st, op = mc.MACHINES[alg](st, 0, cohort, (5, 20))
+        if op.kind == "remote":
+            remote += 1
+        elif op.kind == "local":
+            local += 1
+        guard += 1
+        if st.pc[0] == mc.NCS and guard > 1:
+            break
+        assert guard < 100
+    return remote, local
+
+
+def bench_wall(f, *args, iters=5):
+    f(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main() -> None:
+    for alg, cohort, name in (("alock", 0, "alock.local"),
+                              ("alock", 1, "alock.remote"),
+                              ("mcs", 1, "mcs"),
+                              ("spinlock", 1, "spinlock")):
+        r, l = count_ops(alg, cohort)
+        emit(f"micro.opcount.{name}", 0.0, f"remote_ops={r},local_ops={l}")
+
+    # jnp flash (model path) vs naive attention wall time on CPU
+    from repro.models.layers import _mask, _sdpa_h, blockwise_sdpa
+    B, S, K, R, hd = 1, 1024, 4, 1, 64
+    key = jax.random.key(0)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (B, S, K, R, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (B, S, K, hd))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    f1 = jax.jit(lambda q, k, v: blockwise_sdpa(
+        q, k, v, pos, causal=True, window=None, kv_chunk=256))
+    us1 = bench_wall(f1, q, k, v)
+    emit("micro.attn.flash_jnp.s1024", us1, "blockwise")
+
+    def naive(q, k, v):
+        m = _mask(pos, jnp.arange(S), causal=True, window=None)
+        return _sdpa_h(q.reshape(B, S, K * R, hd), jnp.repeat(k, R, 2),
+                       jnp.repeat(v, R, 2), m)
+    us2 = bench_wall(jax.jit(naive), q, k, v)
+    emit("micro.attn.naive.s1024", us2, f"flash_speedup={us2/us1:.2f}x")
+
+    # batched lock-table transition throughput (jnp twin of the kernel)
+    from repro.kernels.alock_tick.ref import alock_tick_ref
+    Tab, T, steps = 512, 4, 256
+    rng = np.random.default_rng(0)
+    sched = jnp.asarray(rng.integers(0, T, (Tab, steps)), jnp.int32)
+    coh = jnp.asarray([0, 0, 1, 1], jnp.int32)
+    z = lambda: jnp.zeros((Tab, T), jnp.int32)
+    args = (jnp.zeros((Tab, 2), jnp.int32), jnp.zeros((Tab,), jnp.int32),
+            jnp.full((Tab, T), mc.NCS, jnp.int32),
+            jnp.full((Tab, T), -1, jnp.int32), z(), z())
+    f3 = jax.jit(lambda *a: alock_tick_ref(*a, sched, coh,
+                                           jnp.asarray((5, 20), jnp.int32)))
+    us3 = bench_wall(f3, *args, iters=3)
+    emit("micro.alock_tick.tables512.steps256", us3,
+         f"{Tab*steps/us3:.1f}Msteps_per_s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Roofline table from the dry-run artifacts (artifacts/dryrun/*.json).
+
+Prints one row per (arch x shape x mesh): the three roofline terms in
+seconds, the dominant term, and MODEL_FLOPS/HLO_FLOPs. See EXPERIMENTS.md
+§Roofline for the narrative analysis.
+"""
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+ART = os.environ.get("DRYRUN_ART", "artifacts/dryrun")
+
+
+def rows(mesh_filter=None):
+    out = []
+    for f in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            continue
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        r.setdefault("variant", "opt" if "__opt" in f else "baseline")
+        out.append(r)
+    return out
+
+
+def main() -> None:
+    rs = rows()
+    if not rs:
+        emit("roofline.missing", 0.0,
+             "run: python -m repro.launch.dryrun --all")
+        return
+    for r in rs:
+        t = r["roofline"]
+        dom_s = max(t["compute_s"], t["memory_s"], t["collective_link_s"])
+        var = "." + r["variant"] if r.get("variant", "baseline") != \
+            "baseline" else ""
+        emit(
+            f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}{var}",
+            dom_s * 1e6,
+            f"compute={t['compute_s']:.2e}s,mem={t['memory_s']:.2e}s,"
+            f"coll={t['collective_s']:.2e}s,coll_link={t['collective_link_s']:.2e}s,"
+            f"dom={t['dominant']},useful={r['useful_flops_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

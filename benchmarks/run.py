@@ -1,0 +1,32 @@
+"""Benchmark entry point — one section per paper table/figure.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [section ...]
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+import sys
+import time
+
+from benchmarks import (fig1_loopback, fig4_budget, fig5_throughput,
+                        fig6_latency, microbench, roofline)
+
+SECTIONS = {
+    "fig1": fig1_loopback.main,
+    "fig4": fig4_budget.main,
+    "fig5": fig5_throughput.main,
+    "fig6": fig6_latency.main,
+    "micro": microbench.main,
+    "roofline": roofline.main,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(SECTIONS)
+    print("name,us_per_call,derived")
+    for name in which:
+        t0 = time.time()
+        SECTIONS[name]()
+        print(f"# section {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Serving example: train briefly on the affine-mod corpus, then serve
+batched requests and verify the engine's generations follow the learned
+process (tok[t+1] in {3*tok[t]+7+e mod m}).
+
+Run: PYTHONPATH=src python examples/serve_decode.py [--train-steps 150]
+"""
+import argparse
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from examples.train_tiny_lm import make_cfg
+except ModuleNotFoundError:   # run as a plain script
+    from train_tiny_lm import make_cfg
+from repro.serve.engine import Engine, ServeConfig
+from repro.train.data import SyntheticLM
+from repro.train.loop import LoopConfig, Trainer
+from repro.train.optimizer import OptConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--train-steps", type=int, default=150)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = make_cfg()
+    loop = LoopConfig(steps=args.train_steps, ckpt_every=10_000,
+                      ckpt_dir="artifacts/ckpt_serve_demo", seq_len=128,
+                      batch_per_shard=2, n_shards=4, log_every=50)
+    tr = Trainer(cfg, OptConfig(lr=3e-3, warmup_steps=30,
+                                total_steps=args.train_steps), loop)
+    state = tr.run(resume=False)
+    print("trained:", tr.history[-1])
+
+    ds = SyntheticLM(cfg.vocab, 64, args.batch)
+    prompts = ds.batch(0, 12345)["tokens"]
+    eng = Engine(cfg, state["params"],
+                 ServeConfig(max_new_tokens=args.new_tokens))
+    t0 = time.time()
+    out = eng.generate({"tokens": jnp.asarray(prompts)})
+    dt = time.time() - t0
+    m = ds.modulus
+    full = np.concatenate([prompts[:, -1:], out], axis=1)
+    ok = ((full[:, 1:] - (3 * full[:, :-1] + 7)) % m <= 2)
+    print(f"generated {out.shape} in {dt:.1f}s "
+          f"({out.size/dt:.0f} tok/s incl. prefill+compile)")
+    print(f"process-consistency of generated tokens: {ok.mean():.1%} "
+          f"(random would be {3/m:.1%})")
+    print("sample:", full[0][:16])
+
+
+if __name__ == "__main__":
+    main()

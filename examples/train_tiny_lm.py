@@ -1,0 +1,61 @@
+"""End-to-end training driver: a ~6M-parameter yi-family LM trained for a
+few hundred steps on the synthetic affine-mod corpus, with lease-guarded
+async checkpointing and restart-from-latest.
+
+Loss target: starts near ln(vocab)=7.6, converges toward the ln(3)=1.10
+noise floor. Run:
+
+  PYTHONPATH=src python examples/train_tiny_lm.py [--steps 300]
+  PYTHONPATH=src python examples/train_tiny_lm.py --resume   # restart
+"""
+import argparse
+import dataclasses
+import time
+
+from repro.configs import get_config
+from repro.configs.base import LayerSpec, uniform_groups
+from repro.train.loop import LoopConfig, Trainer
+from repro.train.optimizer import OptConfig
+
+
+def make_cfg():
+    base = get_config("yi-9b")
+    return dataclasses.replace(
+        base.tiny(),
+        name="yi-tiny-6m",
+        d_model=256, n_heads=8, n_kv_heads=4, head_dim=32,
+        d_ff=1024, vocab=2048,
+        groups=uniform_groups(4, LayerSpec(mixer="attn", ffn="mlp")),
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--ckpt", default="artifacts/ckpt_tiny_lm")
+    args = ap.parse_args()
+
+    cfg = make_cfg()
+    loop = LoopConfig(steps=args.steps, ckpt_every=100, ckpt_dir=args.ckpt,
+                      seq_len=128, batch_per_shard=2, n_shards=4,
+                      log_every=20)
+    opt = OptConfig(lr=3e-3, warmup_steps=30, total_steps=args.steps)
+    tr = Trainer(cfg, opt, loop)
+    from repro.models.params import param_count
+    from repro.models.model import model_specs
+    print(f"model: {cfg.name}, {param_count(model_specs(cfg)):,} params")
+    t0 = time.time()
+    state = tr.run(resume=args.resume)
+    dt = time.time() - t0
+    for h in tr.history:
+        print(f"  step {h['step']:4d}  loss {h['loss']:.4f}  "
+              f"gnorm {h['grad_norm']:.2f}")
+    tok_s = (args.steps * loop.batch_per_shard * loop.n_shards *
+             loop.seq_len) / max(dt, 1e-9)
+    print(f"done: {dt:.1f}s ({tok_s:.0f} tok/s on CPU), "
+          f"final step {int(state['step'])}; floor=ln(3)=1.10")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from artifacts."""
+import glob
+import json
+import sys
+
+
+def rows(pattern="artifacts/dryrun/*.json"):
+    out = []
+    for f in sorted(glob.glob(pattern)):
+        if "__opt" in f:
+            continue
+        out.append(json.load(open(f)))
+    return out
+
+
+def fmt(x, n=2):
+    return f"{x:.{n}f}" if isinstance(x, (int, float)) else str(x)
+
+
+def main():
+    rs = rows()
+    print("| arch | shape | mesh | status | compile_s | flops/chip | "
+          "compute_s | memory_s | coll_s (prompt) | coll_link_s | dominant |"
+          " useful | temp GB/chip |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in rs:
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"{r['status']}: {r.get('reason', r.get('error',''))[:40]}"
+                  " |  |  |  |  |  |  |  |  |  |")
+            continue
+        t = r["roofline"]
+        mem = (r.get("memory") or {}).get("temp_size_in_bytes", 0) / 1e9
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+              f"{fmt(r['compile_s'],1)} | {r['flops_per_chip']:.2e} | "
+              f"{t['compute_s']:.2e} | {t['memory_s']:.2e} | "
+              f"{t['collective_s']:.2e} | {t['collective_link_s']:.2e} | "
+              f"{t['dominant'].replace('_s','')} | "
+              f"{fmt(r['useful_flops_ratio'],3)} | {fmt(mem,1)} |")
+
+
+if __name__ == "__main__":
+    main()

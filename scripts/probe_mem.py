@@ -1,0 +1,57 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512" + (" --xla_dump_to=" + os.environ["XDUMP"] if os.environ.get("XDUMP") else "")
+import sys
+import dataclasses
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.launch import mesh as mesh_lib
+from repro.models import model as M
+from repro.models.params import tree_structs
+from repro.parallel import sharding as sh
+from repro.launch.dryrun import input_specs
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "gemma3-1b"
+variant = sys.argv[2] if len(sys.argv) > 2 else "grad"
+
+cfg = get_config(arch)
+if variant.endswith("-naive"):
+    cfg = dataclasses.replace(cfg, attn_impl="naive")
+if variant.endswith("-noremat"):
+    cfg = dataclasses.replace(cfg, remat="none")
+shape = SHAPES["train_4k"]
+mesh = mesh_lib.make_production_mesh(multi_pod=False)
+rules = sh.rules_for_shape("train", kv_divisible=False)
+
+pspecs = M.model_specs(cfg)
+p_structs = tree_structs(pspecs)
+p_shard = sh.tree_shardings(pspecs, rules, mesh)
+ins = input_specs(arch, "train_4k")
+b_structs = {k: v[0] for k, v in ins["batch"].items()}
+b_shard = {k: sh.named_sharding(v[0].shape, v[1], rules, mesh)
+           for k, v in ins["batch"].items()}
+
+if variant.startswith("fwd"):
+    def fn(params, batch):
+        x, aux, _ = M.forward_hidden(cfg, params, batch)
+        return x.sum()
+elif variant.startswith("loss"):
+    def fn(params, batch):
+        return M.loss_fn(cfg, params, batch)[0]
+elif variant.startswith("gradtrunk"):
+    def fn(params, batch):
+        def f(p):
+            x, aux, _ = M.forward_hidden(cfg, p, batch)
+            return x.astype(jnp.float32).sum()
+        return jax.grad(f)(params)
+else:  # grad
+    def fn(params, batch):
+        return jax.grad(lambda p: M.loss_fn(cfg, p, batch)[0])(params)
+
+with mesh, sh.sharding_ctx(mesh, rules):
+    c = jax.jit(fn, in_shardings=(p_shard, b_shard)).lower(
+        p_structs, b_structs).compile()
+m = c.memory_analysis()
+print(variant, arch, "temp GB:", m.temp_size_in_bytes / 1e9,
+      "args GB:", m.argument_size_in_bytes / 1e9)

@@ -1,0 +1,17 @@
+"""Architecture registry — importing this package registers all configs."""
+from repro.configs.base import (  # noqa: F401
+    LayerSpec, ModelConfig, ShapeConfig, SHAPES, all_arch_names,
+    cell_supported, get_config, register,
+)
+
+# one module per assigned architecture
+from repro.configs import internvl2_2b   # noqa: F401
+from repro.configs import whisper_base   # noqa: F401
+from repro.configs import minicpm3_4b    # noqa: F401
+from repro.configs import gemma3_1b      # noqa: F401
+from repro.configs import qwen2_72b      # noqa: F401
+from repro.configs import yi_9b          # noqa: F401
+from repro.configs import jamba_v01_52b  # noqa: F401
+from repro.configs import mixtral_8x7b   # noqa: F401
+from repro.configs import qwen2_moe_a27b # noqa: F401
+from repro.configs import mamba2_13b     # noqa: F401

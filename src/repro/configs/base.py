@@ -1,0 +1,209 @@
+"""Architecture + workload-shape configuration.
+
+A model is a stack of *groups*; each group is ``(pattern, repeats)`` where
+``pattern`` is a tuple of LayerSpec applied in order and the group is
+executed as a ``lax.scan`` over ``repeats`` stacked parameter copies
+(compile-time O(pattern), not O(layers)).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any
+
+import jax.numpy as jnp
+
+
+def pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    mixer: str = "attn"          # attn | mla | mamba2 | none
+    ffn: str = "mlp"             # mlp | moe | none
+    window: int | None = None    # sliding-window size (attn only)
+    cross_attn: bool = False     # decoder cross-attention (enc-dec)
+    causal: bool = True          # False for encoder self-attention
+    rope_theta: float | None = None  # per-layer override (gemma3 local/global)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    groups: tuple[tuple[tuple[LayerSpec, ...], int], ...]
+    # attention
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    pos_embed: str = "rope"        # rope | learned | none
+    max_seq: int = 524_288         # sizes the learned pos table if used
+    norm: str = "rmsnorm"          # rmsnorm | layernorm
+    qk_norm: bool = False
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    d_expert: int = 0
+    d_shared: int = 0              # shared-expert ffn width (0 = none)
+    capacity_factor: float = 1.25
+    # MLA (minicpm3)
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_rope_dim: int = 0
+    qk_nope_dim: int = 0
+    v_head_dim: int = 0
+    # mamba2 / SSD
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+    # encoder-decoder (whisper)
+    is_encdec: bool = False
+    enc_groups: tuple = ()
+    enc_seq: int = 1500            # stub frame-embedding length
+    # vlm
+    n_vision_tokens: int = 0       # stub patch-embedding prefix length
+    # misc
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    dtype: Any = jnp.bfloat16
+    # attention impl: 'auto' -> blockwise when seq > blockwise_min_seq
+    attn_impl: str = "auto"
+    blockwise_min_seq: int = 2048
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    remat: str = "full"            # none | full | dots
+    # --- beyond-paper optimization knobs (OFF for the faithful baseline;
+    # enabled by dryrun --opt; see EXPERIMENTS.md §Perf) ---
+    pad_heads_to: int = 0          # pad (MLA) heads for TP shardability
+    pad_experts_to: int = 0        # pad expert count for expert parallelism
+    banded_window_attn: bool = False  # band-limited attention for SWA layers
+    kv_cache_int8: bool = False    # quantized KV cache (decode memory term)
+    # sourcing tier from the assignment table
+    source: str = ""
+
+    @property
+    def padded_vocab(self) -> int:
+        return pad_to(self.vocab, 256)
+
+    @property
+    def n_layers(self) -> int:
+        return sum(len(p) * r for p, r in self.groups)
+
+    @property
+    def layer_list(self) -> list[LayerSpec]:
+        out = []
+        for pattern, r in self.groups:
+            for _ in range(r):
+                out.extend(pattern)
+        return out
+
+    @property
+    def d_inner(self) -> int:  # mamba2
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def unroll(self) -> "ModelConfig":
+        """Expand scan groups to repeat-1 groups (unrolled layers). Needed
+        when layers contain shard_map (XLA-CPU CHECK-crashes on
+        grad(scan(shard_map)) — see EXPERIMENTS.md §Perf/qwen2-moe)."""
+        out = []
+        for pattern, r in self.groups:
+            out.extend(((pattern, 1),) * r)
+        return replace(self, groups=tuple(out))
+
+    def tiny(self) -> "ModelConfig":
+        """Reduced same-family config for CPU smoke tests."""
+        def shrink_groups(groups):
+            out = []
+            for pattern, r in groups:
+                out.append((pattern, min(r, 2)))
+            return tuple(out)
+
+        return replace(
+            self,
+            d_model=64, n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads else 0,
+            head_dim=16, d_ff=128, vocab=503,  # prime vocab exercises padding
+            groups=shrink_groups(self.groups),
+            enc_groups=shrink_groups(self.enc_groups) if self.enc_groups else (),
+            enc_seq=24 if self.is_encdec else self.enc_seq,
+            n_vision_tokens=8 if self.n_vision_tokens else 0,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            d_expert=32 if self.d_expert else 0,
+            d_shared=64 if self.d_shared else 0,
+            # drop-free capacity: token dropping is shape-dependent, which
+            # would make decode-vs-forward equivalence tests meaningless
+            capacity_factor=float(max(self.n_experts, 1)),
+            q_lora_rank=32 if self.q_lora_rank else 0,
+            kv_lora_rank=16 if self.kv_lora_rank else 0,
+            qk_rope_dim=8 if self.qk_rope_dim else 0,
+            qk_nope_dim=16 if self.qk_nope_dim else 0,
+            v_head_dim=16 if self.v_head_dim else 0,
+            ssm_state=16 if self.ssm_state else 0,
+            ssm_head_dim=16 if self.ssm_state else 64,
+            ssm_chunk=8,
+            max_seq=4096,
+            q_chunk=8, kv_chunk=16,
+            dtype=jnp.float32, remat="none",
+        )
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str          # train | prefill | decode | long_decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeConfig("long_500k", "long_decode", 524_288, 1),
+}
+
+
+def uniform_groups(n_layers: int, spec: LayerSpec):
+    return (((spec,), n_layers),)
+
+
+_REGISTRY: dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    # import triggers registration of all arch modules
+    import repro.configs  # noqa: F401
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def all_arch_names() -> list[str]:
+    import repro.configs  # noqa: F401
+    return sorted(_REGISTRY)
+
+
+# Which cells are skipped (long_500k on pure full-attention families).
+LONG_CONTEXT_ARCHS = {"gemma3-1b", "jamba-v0.1-52b", "mixtral-8x7b", "mamba2-1.3b"}
+
+
+def cell_supported(arch: str, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+        return False, "full-attention family: 500k decode unsupported (DESIGN.md §5)"
+    return True, ""

@@ -1,0 +1,24 @@
+"""gemma3-1b — 5:1 local(sliding-window 512):global attention, 128k-class.
+[hf:google/gemma-3-1b-pt; unverified]  26L d_model=1152 4H (GQA kv=1)
+d_ff=6912 vocab=262144, head_dim=256, tied embeddings, QK-norm.
+Pattern: (5 local + 1 global) x 4 + 2 local = 26 layers.
+Local layers rope theta 10k; global layers 1M.
+"""
+from repro.configs.base import LayerSpec, ModelConfig, register
+
+_local = LayerSpec(mixer="attn", ffn="mlp", window=512, rope_theta=1e4)
+_global = LayerSpec(mixer="attn", ffn="mlp", rope_theta=1e6)
+
+CFG = register(ModelConfig(
+    name="gemma3-1b",
+    d_model=1152, n_heads=4, n_kv_heads=1, head_dim=256,
+    d_ff=6912, vocab=262144,
+    groups=(
+        ((_local, _local, _local, _local, _local, _global), 4),
+        ((_local, _local), 1),
+    ),
+    rope_theta=1e6,
+    qk_norm=True,
+    tie_embeddings=True,
+    source="hf:google/gemma-3-1b-pt; unverified",
+))

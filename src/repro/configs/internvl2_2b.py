@@ -1,0 +1,14 @@
+"""internvl2-2b — InternViT frontend (stub) + InternLM2-1.8B LM backbone.
+[arXiv:2404.16821; hf]  24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92553.
+"""
+from repro.configs.base import LayerSpec, ModelConfig, register, uniform_groups
+
+CFG = register(ModelConfig(
+    name="internvl2-2b",
+    d_model=2048, n_heads=16, n_kv_heads=8, head_dim=128,
+    d_ff=8192, vocab=92553,
+    groups=uniform_groups(24, LayerSpec(mixer="attn", ffn="mlp")),
+    rope_theta=1e6,
+    n_vision_tokens=256,            # stub patch embeddings, prefix-injected
+    source="arXiv:2404.16821; hf",
+))

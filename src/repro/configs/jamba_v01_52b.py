@@ -1,0 +1,27 @@
+"""jamba-v0.1-52b — hybrid Mamba+attention 7:1 interleave, MoE 16e top-2.
+[arXiv:2403.19887; hf]  32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=65536.  8-layer block x 4: attention at block index 4, MoE on odd
+indices (16 MoE layers total). No explicit positional encoding (the Mamba
+layers carry position). Jamba's Mamba-1 mixer is realized with our SSD mixer
+at matching dims (d_state=16, d_conv=4, expand=2) — see DESIGN.md §3.
+"""
+from repro.configs.base import LayerSpec, ModelConfig, register
+
+_m_mlp = LayerSpec(mixer="mamba2", ffn="mlp")
+_m_moe = LayerSpec(mixer="mamba2", ffn="moe")
+_a_mlp = LayerSpec(mixer="attn", ffn="mlp")
+_m_moe2 = LayerSpec(mixer="mamba2", ffn="moe")
+
+CFG = register(ModelConfig(
+    name="jamba-v0.1-52b",
+    d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab=65536,
+    groups=(
+        ((_m_mlp, _m_moe, _m_mlp, _m_moe, _a_mlp, _m_moe, _m_mlp, _m_moe),
+         4),
+    ),
+    pos_embed="none",
+    n_experts=16, top_k=2, d_expert=14336,
+    ssm_state=16, ssm_expand=2, ssm_head_dim=64, ssm_conv=4,
+    source="arXiv:2403.19887; hf",
+))

@@ -1,0 +1,16 @@
+"""mamba2-1.3b — attention-free SSM with SSD (state-space duality).
+[arXiv:2405.21060; unverified]  48L d_model=2048 vocab=50280 ssm_state=128,
+expand=2 (d_inner=4096), head_dim=64 (64 SSD heads), tied embeddings.
+"""
+from repro.configs.base import LayerSpec, ModelConfig, register, uniform_groups
+
+CFG = register(ModelConfig(
+    name="mamba2-1.3b",
+    d_model=2048, n_heads=16, n_kv_heads=16, head_dim=128,  # unused (no attn)
+    d_ff=0, vocab=50280,
+    groups=uniform_groups(48, LayerSpec(mixer="mamba2", ffn="none")),
+    pos_embed="none",
+    tie_embeddings=True,
+    ssm_state=128, ssm_expand=2, ssm_head_dim=64, ssm_conv=4,
+    source="arXiv:2405.21060; unverified",
+))

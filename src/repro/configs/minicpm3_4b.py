@@ -1,0 +1,15 @@
+"""minicpm3-4b — dense with Multi-head Latent Attention (MLA).
+[hf:openbmb/MiniCPM3-4B; hf]  62L d_model=2560 40H d_ff=6400 vocab=73448.
+MLA ranks: q_lora=768, kv_lora=256, qk_nope=64, qk_rope=32, v_head=64.
+"""
+from repro.configs.base import LayerSpec, ModelConfig, register, uniform_groups
+
+CFG = register(ModelConfig(
+    name="minicpm3-4b",
+    d_model=2560, n_heads=40, n_kv_heads=40, head_dim=96,
+    d_ff=6400, vocab=73448,
+    groups=uniform_groups(62, LayerSpec(mixer="mla", ffn="mlp")),
+    q_lora_rank=768, kv_lora_rank=256,
+    qk_nope_dim=64, qk_rope_dim=32, v_head_dim=64,
+    source="hf:openbmb/MiniCPM3-4B; hf",
+))

@@ -1,0 +1,16 @@
+"""mixtral-8x7b — 8 experts top-2 MoE with sliding-window attention (4096).
+[arXiv:2401.04088; hf]  32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=32000.
+"""
+from repro.configs.base import LayerSpec, ModelConfig, register, uniform_groups
+
+CFG = register(ModelConfig(
+    name="mixtral-8x7b",
+    d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab=32000,
+    groups=uniform_groups(
+        32, LayerSpec(mixer="attn", ffn="moe", window=4096)),
+    rope_theta=1e6,
+    n_experts=8, top_k=2, d_expert=14336,
+    source="arXiv:2401.04088; hf",
+))

@@ -1,0 +1,15 @@
+"""qwen2-moe-a2.7b — 60 routed experts top-4 + shared expert (4x width).
+[hf:Qwen/Qwen1.5-MoE-A2.7B; hf]  24L d_model=2048 16H (GQA kv=16)
+d_ff=1408 (per-expert) vocab=151936; shared expert d_ff=5632.
+"""
+from repro.configs.base import LayerSpec, ModelConfig, register, uniform_groups
+
+CFG = register(ModelConfig(
+    name="qwen2-moe-a2.7b",
+    d_model=2048, n_heads=16, n_kv_heads=16, head_dim=128,
+    d_ff=1408, vocab=151936,
+    groups=uniform_groups(24, LayerSpec(mixer="attn", ffn="moe")),
+    qkv_bias=True, rope_theta=1e6,
+    n_experts=60, top_k=4, d_expert=1408, d_shared=5632,
+    source="hf:Qwen/Qwen1.5-MoE-A2.7B; hf",
+))

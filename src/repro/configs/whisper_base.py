@@ -1,0 +1,24 @@
+"""whisper-base — encoder-decoder; conv frontend is a STUB (input_specs
+provides precomputed frame embeddings). [arXiv:2212.04356; unverified]
+6L d_model=512 8H (MHA kv=8) d_ff=2048 vocab=51865.
+
+Backbone-only per the assignment: decode_32k exercises a 32k self-attention
+KV cache on the decoder (real whisper caps at 448 positions — we follow the
+assigned shapes mechanically; see DESIGN.md §5).
+"""
+from repro.configs.base import LayerSpec, ModelConfig, register, uniform_groups
+
+CFG = register(ModelConfig(
+    name="whisper-base",
+    d_model=512, n_heads=8, n_kv_heads=8, head_dim=64,
+    d_ff=2048, vocab=51865,
+    groups=uniform_groups(
+        6, LayerSpec(mixer="attn", ffn="mlp", cross_attn=True)),
+    is_encdec=True,
+    enc_groups=uniform_groups(
+        6, LayerSpec(mixer="attn", ffn="mlp", causal=False)),
+    enc_seq=1500,
+    pos_embed="learned", max_seq=32_768,
+    norm="layernorm",
+    source="arXiv:2212.04356; unverified",
+))

@@ -1,0 +1,12 @@
+"""yi-9b — llama-architecture dense GQA. [arXiv:2403.04652; hf]
+48L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000.
+"""
+from repro.configs.base import LayerSpec, ModelConfig, register, uniform_groups
+
+CFG = register(ModelConfig(
+    name="yi-9b",
+    d_model=4096, n_heads=32, n_kv_heads=4, head_dim=128,
+    d_ff=11008, vocab=64000,
+    groups=uniform_groups(48, LayerSpec(mixer="attn", ffn="mlp")),
+    source="arXiv:2403.04652; hf",
+))

@@ -1,0 +1,152 @@
+"""Host-side coordination plane built on the ALock lock table.
+
+One `CoordService` emulates the control plane of a multi-pod training job:
+named locks (hashed onto the distributed table), writer leases, membership.
+On a real cluster each node talks to the table over its own transport; here
+nodes are threads, and the asymmetric lock keeps local participants on
+shared-memory ops — the paper's point, applied to the runtime.
+"""
+from __future__ import annotations
+
+import threading
+import time
+import zlib
+from dataclasses import dataclass, field
+
+from repro.core.lock_table import LockTable
+
+
+class CoordService:
+    def __init__(self, n_nodes: int, locks_per_node: int = 64,
+                 local_budget: int = 5, remote_budget: int = 20, net=None):
+        self.table = LockTable(n_nodes, locks_per_node, local_budget,
+                               remote_budget, net=net)
+        self.n_nodes = n_nodes
+        self._kv: dict = {}
+        self._kv_lock = threading.Lock()
+
+    def lock_id(self, name: str) -> int:
+        return zlib.crc32(name.encode()) % len(self.table.cells)
+
+    def critical(self, node_id: int, name: str):
+        return self.table.critical(node_id, self.lock_id(name))
+
+    # a tiny strongly-consistent KV (guarded by the table's locks)
+    def put(self, node_id: int, key: str, value):
+        with self.critical(node_id, "kv:" + key):
+            with self._kv_lock:
+                self._kv[key] = value
+
+    def get(self, key: str):
+        with self._kv_lock:
+            return self._kv.get(key)
+
+    def update(self, node_id: int, key: str, fn, default=None):
+        with self.critical(node_id, "kv:" + key):
+            with self._kv_lock:
+                cur = self._kv.get(key, default)
+                new = fn(cur)
+                self._kv[key] = new
+                return new
+
+
+@dataclass
+class Lease:
+    name: str
+    holder: int
+    deadline: float
+    epoch: int
+
+
+class LeaseManager:
+    """Writer leases (checkpointing, log ownership) with crash expiry.
+
+    acquire() is mutual-exclusive via the ALock; expiry lets a restarted
+    node steal a dead holder's lease after ttl.
+    """
+
+    def __init__(self, svc: CoordService, ttl_s: float = 5.0):
+        self.svc = svc
+        self.ttl = ttl_s
+
+    def acquire(self, node_id: int, name: str) -> Lease | None:
+        with self.svc.critical(node_id, "lease:" + name):
+            cur: Lease | None = self.svc.get("lease:" + name)
+            now = time.monotonic()
+            if cur is not None and cur.deadline > now and \
+                    cur.holder != node_id:
+                return None
+            epoch = (cur.epoch + 1) if cur is not None else 0
+            lease = Lease(name, node_id, now + self.ttl, epoch)
+            with self.svc._kv_lock:
+                self.svc._kv["lease:" + name] = lease
+            return lease
+
+    def renew(self, lease: Lease) -> bool:
+        with self.svc.critical(lease.holder, "lease:" + lease.name):
+            cur: Lease | None = self.svc.get("lease:" + lease.name)
+            if cur is None or cur.epoch != lease.epoch:
+                return False
+            lease.deadline = time.monotonic() + self.ttl
+            with self.svc._kv_lock:
+                self.svc._kv["lease:" + lease.name] = lease
+            return True
+
+    def release(self, lease: Lease):
+        with self.svc.critical(lease.holder, "lease:" + lease.name):
+            cur: Lease | None = self.svc.get("lease:" + lease.name)
+            if cur is not None and cur.epoch == lease.epoch:
+                cur.deadline = 0.0
+
+
+class Membership:
+    """Elastic membership + heartbeat + straggler-aware shard ownership."""
+
+    def __init__(self, svc: CoordService, heartbeat_ttl: float = 2.0):
+        self.svc = svc
+        self.ttl = heartbeat_ttl
+
+    def join(self, node_id: int):
+        def upd(m):
+            m = dict(m or {})
+            m[node_id] = time.monotonic()
+            return m
+        self.svc.update(node_id, "members", upd, default={})
+
+    def heartbeat(self, node_id: int):
+        self.join(node_id)
+
+    def alive(self) -> list[int]:
+        m = self.svc.get("members") or {}
+        now = time.monotonic()
+        return sorted(n for n, t in m.items() if now - t < self.ttl)
+
+    def leave(self, node_id: int):
+        self.svc.update(node_id, "members",
+                        lambda m: {k: v for k, v in (m or {}).items()
+                                   if k != node_id}, default={})
+
+    # ---- work shards (data pipeline ranges) ------------------------------
+    def assign_shards(self, node_id: int, n_shards: int) -> list[int]:
+        """Deterministic re-partition of shard ownership over live nodes —
+        called after membership changes; lock-guarded so exactly one
+        assignment wins per epoch."""
+        with self.svc.critical(node_id, "shards"):
+            live = self.alive()
+            if not live:
+                return []
+            owner = {s: live[s % len(live)] for s in range(n_shards)}
+            with self.svc._kv_lock:
+                self.svc._kv["shards"] = owner
+            return [s for s, n in owner.items() if n == node_id]
+
+    def steal_from(self, node_id: int, dead_node: int) -> list[int]:
+        """Straggler/failure mitigation: re-own a dead node's shards."""
+        def upd(owner):
+            owner = dict(owner or {})
+            for s, n in owner.items():
+                if n == dead_node:
+                    owner[s] = node_id
+            return owner
+        owner = self.svc.update(node_id, "shards", upd, default={})
+        return [s for s, n in owner.items() if n == node_id]

@@ -1,0 +1,375 @@
+"""Vectorized discrete-event simulator for the distributed lock table.
+
+The lock machines from ``core/machine.py`` re-expressed over JAX arrays and
+driven by a next-event loop (`lax.fori_loop` + argmin over per-thread ready
+times). Every shared-state mutation is serialized through the single event
+queue, so executions are linearizable by construction — the same PC/semantic
+transitions as the Python machines (cross-validated in tests via
+``run_schedule``).
+
+Time is int32 nanoseconds (sims run milliseconds; f32 time would lose
+sub-ulp increments past ~10ms).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import machine as mc
+from repro.core.cost_model import CostModel
+
+I32 = jnp.int32
+
+# cost opcodes emitted by semantic branches
+OP_LOCAL, OP_POLL, OP_CS, OP_THINK, OP_RDMA, OP_LOOP = range(6)
+
+
+class Sem(NamedTuple):
+    """Semantic (cost-free) simulator state."""
+    tail: jax.Array     # (K,2) tid+1 per cohort
+    victim: jax.Array   # (K,)
+    word: jax.Array     # (K,) competitor lock word
+    budget: jax.Array   # (T,)
+    nxt: jax.Array      # (T,)
+    prev: jax.Array     # (T,)
+    pc: jax.Array       # (T,)
+    target: jax.Array   # (T,) lock index
+    cohort: jax.Array   # (T,) 0 local / 1 remote
+
+
+def init_sem(n_threads: int, n_locks: int, targets=None,
+             cohorts=None) -> Sem:
+    T, K = n_threads, n_locks
+    z = jnp.zeros(T, I32)
+    return Sem(
+        tail=jnp.zeros((K, 2), I32), victim=jnp.zeros(K, I32),
+        word=jnp.zeros(K, I32), budget=jnp.full(T, -1, I32), nxt=z, prev=z,
+        pc=jnp.full(T, mc.NCS, I32),
+        target=(jnp.zeros(T, I32) if targets is None else
+                jnp.asarray(targets, I32)),
+        cohort=(jnp.zeros(T, I32) if cohorts is None else
+                jnp.asarray(cohorts, I32)),
+    )
+
+
+def _step_fns(alg: str, b_init, thread_node, lock_node):
+    """Build per-PC branch functions: (sem, tid, new_target, new_cohort)
+    -> (sem', opcode, node). Semantics mirror machine.py exactly."""
+    b_init = jnp.asarray(b_init, I32)
+    thread_node = jnp.asarray(thread_node, I32)
+    lock_node = jnp.asarray(lock_node, I32)
+    is_alock = alg == "alock"
+    is_mcs = alg == "mcs"
+    is_spin = alg == "spinlock"
+
+    def lock_op_cost(s, tid):
+        """RDMA unless (alock AND local-cohort). Loopback when the RDMA
+        target is the caller's own node (competitors only)."""
+        k = s.target[tid]
+        node = lock_node[k]
+        if is_alock:
+            code = jnp.where(s.cohort[tid] == 0, OP_LOCAL, OP_RDMA)
+        else:
+            code = jnp.where(node == thread_node[tid], OP_LOOP, OP_RDMA)
+        return code, node
+
+    def peer_op_cost(s, tid, peer):
+        """Write to another thread's descriptor (lives on its node)."""
+        node = thread_node[peer]
+        if is_alock:
+            code = jnp.where(node == thread_node[tid], OP_LOCAL, OP_RDMA)
+        else:
+            code = jnp.where(node == thread_node[tid], OP_LOOP, OP_RDMA)
+        return code, node
+
+    def f_ncs(s, tid, new_t, new_c):
+        first = mc.SL_CAS if is_spin else mc.SWAP
+        s = s._replace(budget=s.budget.at[tid].set(-1),
+                       nxt=s.nxt.at[tid].set(0),
+                       target=s.target.at[tid].set(new_t),
+                       cohort=s.cohort.at[tid].set(new_c),
+                       pc=s.pc.at[tid].set(first))
+        return s, jnp.int32(OP_THINK), jnp.int32(0)
+
+    def f_swap(s, tid, *_):
+        k = s.target[tid]
+        c = jnp.where(jnp.int32(is_alock), s.cohort[tid], 0)
+        prev = jnp.where(jnp.int32(is_alock), s.tail[k, c], s.word[k])
+        me = tid + 1
+        if is_alock:
+            s = s._replace(tail=s.tail.at[k, c].set(me))
+        else:
+            s = s._replace(word=s.word.at[k].set(me))
+        s = s._replace(prev=s.prev.at[tid].set(prev))
+        empty = prev == 0
+        if is_alock:
+            nxt_pc = jnp.where(empty, mc.SET_VICTIM, mc.WRITE_NEXT)
+            s = s._replace(budget=s.budget.at[tid].set(
+                jnp.where(empty, b_init[s.cohort[tid]], s.budget[tid])))
+        else:
+            nxt_pc = jnp.where(empty, mc.CS, mc.WRITE_NEXT)
+        s = s._replace(pc=s.pc.at[tid].set(nxt_pc))
+        code, node = lock_op_cost(s, tid)
+        return s, code, node
+
+    def f_write_next(s, tid, *_):
+        p = s.prev[tid] - 1
+        s = s._replace(nxt=s.nxt.at[p].set(tid + 1),
+                       pc=s.pc.at[tid].set(mc.SPIN_BUDGET))
+        code, node = peer_op_cost(s, tid, p)
+        return s, code, node
+
+    def f_spin_budget(s, tid, *_):
+        b = s.budget[tid]
+        if is_alock:
+            nxt_pc = jnp.where(b == -1, mc.SPIN_BUDGET,
+                               jnp.where(b == 0, mc.SET_VICTIM_R, mc.CS))
+        else:
+            nxt_pc = jnp.where(b == -1, mc.SPIN_BUDGET, mc.CS)
+        s = s._replace(pc=s.pc.at[tid].set(nxt_pc))
+        code = jnp.where(b == -1, OP_POLL, OP_LOCAL)
+        return s, code.astype(I32), jnp.int32(0)
+
+    def f_set_victim(s, tid, *_):
+        k = s.target[tid]
+        s = s._replace(victim=s.victim.at[k].set(s.cohort[tid]),
+                       pc=s.pc.at[tid].set(mc.PET_WAIT))
+        code, node = lock_op_cost(s, tid)
+        return s, code, node
+
+    def f_set_victim_r(s, tid, *_):
+        k = s.target[tid]
+        s = s._replace(victim=s.victim.at[k].set(s.cohort[tid]),
+                       pc=s.pc.at[tid].set(mc.PET_WAIT_R))
+        code, node = lock_op_cost(s, tid)
+        return s, code, node
+
+    def _pet(s, tid, reacq):
+        k = s.target[tid]
+        c = s.cohort[tid]
+        can = (s.tail[k, 1 - c] == 0) | (s.victim[k] != c)
+        if reacq:
+            s = s._replace(budget=s.budget.at[tid].set(
+                jnp.where(can, b_init[c], s.budget[tid])))
+        stay = mc.PET_WAIT_R if reacq else mc.PET_WAIT
+        s = s._replace(pc=s.pc.at[tid].set(jnp.where(can, mc.CS, stay)))
+        code, node = lock_op_cost(s, tid)
+        return s, code, node
+
+    def f_pet_wait(s, tid, *_):
+        return _pet(s, tid, False)
+
+    def f_pet_wait_r(s, tid, *_):
+        return _pet(s, tid, True)
+
+    def f_cs(s, tid, *_):
+        s = s._replace(pc=s.pc.at[tid].set(
+            mc.SL_REL if is_spin else mc.REL_CAS))
+        return s, jnp.int32(OP_CS), jnp.int32(0)
+
+    def f_rel_cas(s, tid, *_):
+        k = s.target[tid]
+        me = tid + 1
+        if is_alock:
+            c = s.cohort[tid]
+            solo = s.tail[k, c] == me
+            s = s._replace(tail=s.tail.at[k, c].set(
+                jnp.where(solo, 0, s.tail[k, c])))
+        else:
+            solo = s.word[k] == me
+            s = s._replace(word=s.word.at[k].set(
+                jnp.where(solo, 0, s.word[k])))
+        s = s._replace(pc=s.pc.at[tid].set(
+            jnp.where(solo, mc.NCS, mc.SPIN_NEXT)))
+        code, node = lock_op_cost(s, tid)
+        return s, code, node
+
+    def f_spin_next(s, tid, *_):
+        has = s.nxt[tid] != 0
+        s = s._replace(pc=s.pc.at[tid].set(
+            jnp.where(has, mc.PASS, mc.SPIN_NEXT)))
+        return s, jnp.where(has, OP_LOCAL, OP_POLL).astype(I32), jnp.int32(0)
+
+    def f_pass(s, tid, *_):
+        succ = s.nxt[tid] - 1
+        newb = jnp.where(jnp.int32(is_alock), s.budget[tid] - 1, 1)
+        s = s._replace(budget=s.budget.at[succ].set(newb),
+                       pc=s.pc.at[tid].set(mc.NCS))
+        code, node = peer_op_cost(s, tid, succ)
+        return s, code, node
+
+    def f_sl_cas(s, tid, *_):
+        k = s.target[tid]
+        free = s.word[k] == 0
+        s = s._replace(word=s.word.at[k].set(
+            jnp.where(free, tid + 1, s.word[k])),
+            pc=s.pc.at[tid].set(jnp.where(free, mc.CS, mc.SL_CAS)))
+        code, node = lock_op_cost(s, tid)
+        return s, code, node
+
+    def f_sl_rel(s, tid, *_):
+        k = s.target[tid]
+        s = s._replace(word=s.word.at[k].set(0),
+                       pc=s.pc.at[tid].set(mc.NCS))
+        code, node = lock_op_cost(s, tid)
+        return s, code, node
+
+    return [f_ncs, f_swap, f_write_next, f_spin_budget, f_set_victim,
+            f_pet_wait, f_set_victim_r, f_pet_wait_r, f_cs, f_rel_cas,
+            f_spin_next, f_pass, f_sl_cas, f_sl_rel]
+
+
+def sem_step(alg, sem: Sem, tid, b_init, thread_node, lock_node,
+             new_target=None, new_cohort=None):
+    """One semantic step of thread `tid` — used by the event loop and by the
+    schedule-driven cross-validation runner."""
+    fns = _step_fns(alg, b_init, thread_node, lock_node)
+    nt = sem.target[tid] if new_target is None else new_target
+    nc = sem.cohort[tid] if new_cohort is None else new_cohort
+    return lax.switch(sem.pc[tid], fns, sem, tid, nt, nc)
+
+
+def run_schedule(alg, cohorts, b_init, schedule, n_locks: int = 1):
+    """Drive the jnp machine with an explicit thread schedule (single lock,
+    semantics only) and return the trace of (pc, tail, victim, budget)."""
+    T = len(cohorts)
+    sem = init_sem(T, n_locks, targets=[0] * T, cohorts=cohorts)
+    tn = [0 if c == 0 else 1 for c in cohorts]   # arbitrary node split
+    ln = [0] * n_locks
+
+    def body(sem, tid):
+        sem, _, _ = sem_step(alg, sem, tid, b_init, tn, ln)
+        return sem, (sem.pc, sem.tail[0], sem.victim[0], sem.budget)
+
+    sem, trace = lax.scan(body, sem, jnp.asarray(schedule, I32))
+    return sem, trace
+
+
+# ---------------------------------------------------------------------------
+# Event-driven simulation with the cost model
+
+
+class SimConfig(NamedTuple):
+    alg: str
+    n_nodes: int
+    threads_per_node: int
+    n_locks: int
+    locality: float           # P(target lock is on own node)
+    b_init: tuple = (5, 20)   # (local, remote) budgets
+    seed: int = 0
+
+
+class SimResult(NamedTuple):
+    ops: int
+    sim_ns: int
+    throughput_mops: float    # million lock+unlock ops per second
+    lat_ns: jax.Array         # latency samples (ns), -1 padded
+    per_thread_ops: jax.Array
+    reacquires: int = 0       # budget-exhaustion pReacquire events
+    passes: int = 0           # MCS lock passes
+
+
+LAT_SAMPLES = 1 << 15
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("alg", "T", "N", "K", "n_events"))
+def _run_events(alg, T, N, K, n_events, locality, b_init, thread_node,
+                lock_node, costs, seed):
+    (c_local, c_poll, c_cs, c_think, c_svc_r, c_svc_l, c_wire_r,
+     c_wire_l) = costs
+    sem = init_sem(T, K)
+    ready = jnp.zeros(T, I32)
+    busy = jnp.zeros(N, I32)
+    op_start = jnp.zeros(T, I32)
+    done = jnp.zeros(T, I32)
+    lat = jnp.full(LAT_SAMPLES, -1, I32)
+    lat_n = jnp.int32(0)
+    key = jax.random.key(seed)
+    kpn = K // N
+
+    def event(i, carry):
+        sem, ready, busy, op_start, done, lat, lat_n, nreacq, npass = carry
+        tid = jnp.argmin(ready).astype(I32)
+        now = ready[tid]
+        k1, k2, k3 = jax.random.split(jax.random.fold_in(key, i), 3)
+        # workload draw (used only when this step is the NCS re-arm)
+        mynode = thread_node[tid]
+        go_local = jax.random.uniform(k1) < locality
+        other = (mynode + 1 +
+                 jax.random.randint(k2, (), 0, max(N - 1, 1))) % N
+        node = jnp.where(go_local, mynode, other).astype(I32)
+        new_t = node * kpn + jax.random.randint(k3, (), 0, kpn).astype(I32)
+        new_c = (node != mynode).astype(I32)
+
+        was_ncs_bound = (sem.pc[tid] == mc.REL_CAS) | (sem.pc[tid] == mc.PASS) \
+            | (sem.pc[tid] == mc.SL_REL)
+        pre_pc = sem.pc[tid]
+        sem2, code, tnode = sem_step(alg, sem, tid, b_init, thread_node,
+                                     lock_node, new_t, new_c)
+        finished = was_ncs_bound & (sem2.pc[tid] == mc.NCS)
+        reacq = (pre_pc == mc.SPIN_BUDGET) & (sem2.pc[tid] == mc.SET_VICTIM_R)
+        passed = pre_pc == mc.PASS
+
+        # completion accounting
+        lat_val = now - op_start[tid]
+        lat = lax.cond(
+            finished,
+            lambda l: l.at[lat_n % LAT_SAMPLES].set(lat_val),
+            lambda l: l, lat)
+        lat_n = lat_n + finished.astype(I32)
+        done = done.at[tid].add(finished.astype(I32))
+        op_start = op_start.at[tid].set(
+            jnp.where(sem.pc[tid] == mc.NCS, now, op_start[tid]))
+
+        # cost application
+        is_rdma = (code == OP_RDMA) | (code == OP_LOOP)
+        svc = jnp.where(code == OP_LOOP, c_svc_l, c_svc_r)
+        wire = jnp.where(code == OP_LOOP, c_wire_l, c_wire_r)
+        start = jnp.maximum(now, busy[tnode])
+        fin = start + svc
+        busy = busy.at[tnode].set(jnp.where(is_rdma, fin, busy[tnode]))
+        dt_plain = jnp.select(
+            [code == OP_LOCAL, code == OP_POLL, code == OP_CS,
+             code == OP_THINK],
+            [c_local, c_poll, c_cs, c_think], c_local)
+        ready = ready.at[tid].set(
+            jnp.where(is_rdma, fin + wire, now + dt_plain))
+        nreacq = nreacq + reacq.astype(I32)
+        npass = npass + passed.astype(I32)
+        return sem2, ready, busy, op_start, done, lat, lat_n, nreacq, npass
+
+    carry = (sem, ready, busy, op_start, done, lat, lat_n, jnp.int32(0),
+             jnp.int32(0))
+    (sem, ready, busy, op_start, done, lat, lat_n, nreacq,
+     npass) = lax.fori_loop(0, n_events, event, carry)
+    return done, lat, lat_n, jnp.max(ready), nreacq, npass
+
+
+def simulate(cfg: SimConfig, n_events: int = 400_000,
+             cm: CostModel = CostModel()) -> SimResult:
+    T = cfg.n_nodes * cfg.threads_per_node
+    N, K = cfg.n_nodes, cfg.n_locks
+    assert K % N == 0, "locks must partition evenly across nodes"
+    thread_node = jnp.asarray([t // cfg.threads_per_node for t in range(T)],
+                              I32)
+    lock_node = jnp.asarray([k // (K // N) for k in range(K)], I32)
+    uses_loopback = cfg.alg != "alock"
+    costs = tuple(jnp.int32(round(v)) for v in (
+        cm.local_ns, cm.spin_poll_ns, cm.cs_ns, cm.think_ns,
+        cm.svc_ns(N, cfg.threads_per_node, uses_loopback, False),
+        cm.svc_ns(N, cfg.threads_per_node, uses_loopback, True),
+        cm.remote_wire_ns, cm.loopback_wire_ns,
+    ))
+    done, lat, lat_n, t_end, nreacq, npass = _run_events(
+        cfg.alg, T, N, K, n_events, cfg.locality,
+        jnp.asarray(cfg.b_init, I32), thread_node, lock_node, costs,
+        cfg.seed)
+    ops = int(done.sum())
+    sim_ns = max(int(t_end), 1)
+    return SimResult(ops, sim_ns, ops / sim_ns * 1e3, lat, done,
+                     int(nreacq), int(npass))

@@ -1,0 +1,159 @@
+"""Pallas TPU kernel: batched ALock lock-table transition.
+
+The Monte-Carlo fairness/throughput sweeps (benchmarks/fig4) evaluate the
+ALock over thousands of independent single-lock tables × long schedules.
+The hot loop is "apply thread-step `sched[i]` to every table" — embarrassing
+table-parallelism with tiny per-table state, i.e. a VPU (vector unit) job:
+grid tiles tables into VMEM-resident blocks of `tile` rows and applies the
+whole `steps`-long schedule in-register, amortizing HBM traffic to one
+read + one write of the state per call instead of per step.
+
+Semantics are identical to ``repro.core.machine.alock_step`` (the kernel is
+tested against ref.py, which is tested against the Python machine).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core import machine as mc
+
+
+def _tick_kernel(sched_ref, coh_ref, tails_ref, vic_ref, pc_ref, bud_ref,
+                 nxt_ref, prev_ref, o_tails, o_vic, o_pc, o_bud, o_nxt,
+                 o_prev, *, T: int, steps: int, b_local: int, b_remote: int):
+    tails = tails_ref[...].astype(jnp.int32)      # (tile, 2)
+    vic = vic_ref[...].astype(jnp.int32)          # (tile, 1)
+    pc = pc_ref[...].astype(jnp.int32)            # (tile, T)
+    bud = bud_ref[...].astype(jnp.int32)
+    nxt = nxt_ref[...].astype(jnp.int32)
+    prev = prev_ref[...].astype(jnp.int32)
+    sched = sched_ref[...].astype(jnp.int32)      # (tile, steps)
+    coh = coh_ref[...].astype(jnp.int32)          # (tile, T)
+    tile = pc.shape[0]
+    rows = jnp.arange(tile)
+    tids = jnp.arange(T)[None, :]                 # (1, T)
+
+    def sel_t(arr, tid):
+        """arr (tile,T) gathered at per-row tid -> (tile,)"""
+        return jnp.sum(jnp.where(tids == tid[:, None], arr, 0), axis=1)
+
+    def step(i, carry):
+        tails, vic, pc, bud, nxt, prev = carry
+        tid = sched[:, i]                          # (tile,)
+        oh = tids == tid[:, None]                  # (tile, T)
+        c = sel_t(coh, tid)                        # (tile,)
+        me = tid + 1
+        p = sel_t(pc, tid)
+        B = jnp.where(c == 0, b_local, b_remote)
+        tail_c = jnp.where(c == 0, tails[:, 0], tails[:, 1])
+        tail_o = jnp.where(c == 0, tails[:, 1], tails[:, 0])
+        v = vic[:, 0]
+
+        is_ncs = p == mc.NCS
+        bud = jnp.where((is_ncs[:, None]) & oh, -1, bud)
+        nxt = jnp.where((is_ncs[:, None]) & oh, 0, nxt)
+
+        is_swap = p == mc.SWAP
+        empty = tail_c == 0
+        new_tail_c = jnp.where(is_swap, me, tail_c)
+        prev = jnp.where(is_swap[:, None] & oh, tail_c[:, None], prev)
+        bud = jnp.where((is_swap & empty)[:, None] & oh, B[:, None], bud)
+
+        is_wn = p == mc.WRITE_NEXT
+        pred = sel_t(prev, tid) - 1
+        oh_pred = tids == pred[:, None]
+        nxt = jnp.where(is_wn[:, None] & oh_pred, me[:, None], nxt)
+
+        is_sb = p == mc.SPIN_BUDGET
+        b = sel_t(bud, tid)
+
+        is_sv = (p == mc.SET_VICTIM) | (p == mc.SET_VICTIM_R)
+        v = jnp.where(is_sv, c, v)
+
+        is_pw = (p == mc.PET_WAIT) | (p == mc.PET_WAIT_R)
+        can = (tail_o == 0) | (v != c)
+        is_pwr = p == mc.PET_WAIT_R
+        bud = jnp.where((is_pwr & can)[:, None] & oh, B[:, None], bud)
+
+        is_rc = p == mc.REL_CAS
+        solo = new_tail_c == me
+        new_tail_c = jnp.where(is_rc & solo, 0, new_tail_c)
+
+        is_sn = p == mc.SPIN_NEXT
+        has_succ = sel_t(nxt, tid) != 0
+
+        is_pass = p == mc.PASS
+        succ = sel_t(nxt, tid) - 1
+        oh_succ = tids == succ[:, None]
+        bud = jnp.where(is_pass[:, None] & oh_succ, (b - 1)[:, None], bud)
+
+        new_pc = jnp.select(
+            [is_ncs, is_swap, is_wn, is_sb, p == mc.SET_VICTIM,
+             p == mc.SET_VICTIM_R, is_pw, p == mc.CS, is_rc, is_sn,
+             is_pass],
+            [jnp.full_like(p, mc.SWAP),
+             jnp.where(empty, mc.SET_VICTIM, mc.WRITE_NEXT),
+             jnp.full_like(p, mc.SPIN_BUDGET),
+             jnp.where(b == -1, mc.SPIN_BUDGET,
+                       jnp.where(b == 0, mc.SET_VICTIM_R, mc.CS)),
+             jnp.full_like(p, mc.PET_WAIT),
+             jnp.full_like(p, mc.PET_WAIT_R),
+             jnp.where(can, mc.CS,
+                       jnp.where(is_pwr, mc.PET_WAIT_R, mc.PET_WAIT)),
+             jnp.full_like(p, mc.REL_CAS),
+             jnp.where(solo, mc.NCS, mc.SPIN_NEXT),
+             jnp.where(has_succ, mc.PASS, mc.SPIN_NEXT),
+             jnp.full_like(p, mc.NCS)],
+            p)
+        pc = jnp.where(oh, new_pc[:, None], pc)
+        tails = jnp.where((c == 0)[:, None],
+                          jnp.stack([new_tail_c, tails[:, 1]], axis=1),
+                          jnp.stack([tails[:, 0], new_tail_c], axis=1))
+        vic = v[:, None]
+        return tails, vic, pc, bud, nxt, prev
+
+    tails, vic, pc, bud, nxt, prev = lax.fori_loop(
+        0, steps, step, (tails, vic, pc, bud, nxt, prev))
+    o_tails[...] = tails
+    o_vic[...] = vic
+    o_pc[...] = pc
+    o_bud[...] = bud
+    o_nxt[...] = nxt
+    o_prev[...] = prev
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("b_init", "tile", "interpret"))
+def alock_tick(tails, victim, pc, budget, nxt, prev, sched, cohorts, *,
+               b_init=(5, 20), tile: int = 128, interpret: bool = False):
+    """Apply (Tab, steps) schedules to Tab independent single-lock tables.
+
+    tails (Tab,2), victim (Tab,1), pc/budget/nxt/prev (Tab,T),
+    sched (Tab,steps), cohorts (Tab,T) — all int32.
+    """
+    Tab, T = pc.shape
+    steps = sched.shape[1]
+    tile = min(tile, Tab)
+    assert Tab % tile == 0
+    grid = (Tab // tile,)
+    kern = functools.partial(_tick_kernel, T=T, steps=steps,
+                             b_local=int(b_init[0]), b_remote=int(b_init[1]))
+
+    def row_spec(w):
+        return pl.BlockSpec((tile, w), lambda i: (i, 0))
+
+    shapes = [(Tab, 2), (Tab, 1), (Tab, T), (Tab, T), (Tab, T), (Tab, T)]
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[row_spec(steps), row_spec(T)] + [
+            row_spec(s[1]) for s in shapes],
+        out_specs=[row_spec(s[1]) for s in shapes],
+        out_shape=[jax.ShapeDtypeStruct(s, jnp.int32) for s in shapes],
+        interpret=interpret,
+    )(sched, cohorts, tails, victim, pc, budget, nxt, prev)

@@ -1,0 +1,109 @@
+"""Pure-jnp oracle: branchless ALock transition, vectorized over a batch of
+independent single-lock tables.
+
+Semantics mirror ``repro.core.machine.alock_step`` exactly (validated in
+tests against the Python machine). State per table, T threads:
+  tails (2,), victim (), pc (T,), budget (T,), nxt (T,), prev (T,)
+A schedule entry picks which thread steps; one call applies `steps`
+schedule entries sequentially to every table in the batch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import machine as mc
+
+
+def alock_transition(tails, victim, pc, budget, nxt, prev, tid, cohorts,
+                     b_init):
+    """One branchless ALock step for ONE table. All args jnp scalars/1-D.
+    tid: scalar thread index. Returns updated (tails, victim, pc, budget,
+    nxt, prev)."""
+    T = pc.shape[0]
+    c = cohorts[tid]
+    me = tid + 1
+    p = pc[tid]
+    B = b_init[c]
+    oh = (jnp.arange(T) == tid)
+
+    # --- NCS: reset descriptor
+    is_ncs = p == mc.NCS
+    budget = jnp.where(is_ncs & oh, -1, budget)
+    nxt = jnp.where(is_ncs & oh, 0, nxt)
+
+    # --- SWAP
+    is_swap = p == mc.SWAP
+    prev_val = tails[c]
+    empty = prev_val == 0
+    tails = jnp.where(is_swap, tails.at[c].set(me), tails)
+    prev = jnp.where(is_swap & oh, prev_val, prev)
+    budget = jnp.where(is_swap & empty & oh, B, budget)
+
+    # --- WRITE_NEXT
+    is_wn = p == mc.WRITE_NEXT
+    pred = prev[tid] - 1
+    oh_pred = (jnp.arange(T) == pred)
+    nxt = jnp.where(is_wn & oh_pred, me, nxt)
+
+    # --- SPIN_BUDGET
+    is_sb = p == mc.SPIN_BUDGET
+    b = budget[tid]
+
+    # --- SET_VICTIM / SET_VICTIM_R
+    is_sv = (p == mc.SET_VICTIM) | (p == mc.SET_VICTIM_R)
+    victim = jnp.where(is_sv, c, victim)
+
+    # --- PET_WAIT / PET_WAIT_R
+    is_pw = (p == mc.PET_WAIT) | (p == mc.PET_WAIT_R)
+    can = (tails[1 - c] == 0) | (victim != c)
+    is_pwr = p == mc.PET_WAIT_R
+    budget = jnp.where(is_pwr & can & oh, B, budget)
+
+    # --- REL_CAS
+    is_rc = p == mc.REL_CAS
+    solo = tails[c] == me
+    tails = jnp.where(is_rc & solo, tails.at[c].set(0), tails)
+
+    # --- SPIN_NEXT
+    is_sn = p == mc.SPIN_NEXT
+    has_succ = nxt[tid] != 0
+
+    # --- PASS
+    is_pass = p == mc.PASS
+    succ = nxt[tid] - 1
+    oh_succ = (jnp.arange(T) == succ)
+    budget = jnp.where(is_pass & oh_succ, budget[tid] - 1, budget)
+
+    # --- next pc
+    new_pc = jnp.select(
+        [is_ncs, is_swap, is_wn, is_sb, p == mc.SET_VICTIM,
+         p == mc.SET_VICTIM_R, is_pw, p == mc.CS, is_rc, is_sn, is_pass],
+        [jnp.int32(mc.SWAP),
+         jnp.where(empty, mc.SET_VICTIM, mc.WRITE_NEXT).astype(jnp.int32),
+         jnp.int32(mc.SPIN_BUDGET),
+         jnp.where(b == -1, mc.SPIN_BUDGET,
+                   jnp.where(b == 0, mc.SET_VICTIM_R, mc.CS)).astype(jnp.int32),
+         jnp.int32(mc.PET_WAIT), jnp.int32(mc.PET_WAIT_R),
+         jnp.where(can, mc.CS,
+                   jnp.where(is_pwr, mc.PET_WAIT_R, mc.PET_WAIT)).astype(jnp.int32),
+         jnp.int32(mc.REL_CAS),
+         jnp.where(solo, mc.NCS, mc.SPIN_NEXT).astype(jnp.int32),
+         jnp.where(has_succ, mc.PASS, mc.SPIN_NEXT).astype(jnp.int32),
+         jnp.int32(mc.NCS)],
+        p)
+    pc = jnp.where(oh, new_pc, pc)
+    return tails, victim, pc, budget, nxt, prev
+
+
+def alock_tick_ref(tails, victim, pc, budget, nxt, prev, sched, cohorts,
+                   b_init):
+    """Apply a (Tab, steps) schedule to a batch of tables — jnp oracle."""
+    def one(tails, victim, pc, budget, nxt, prev, sched_row):
+        def body(carry, tid):
+            return alock_transition(*carry, tid, cohorts, b_init), None
+        (tails, victim, pc, budget, nxt, prev), _ = lax.scan(
+            body, (tails, victim, pc, budget, nxt, prev), sched_row)
+        return tails, victim, pc, budget, nxt, prev
+    return jax.vmap(one)(tails, victim, pc, budget, nxt, prev, sched)

@@ -1,0 +1,107 @@
+"""Pallas TPU flash-attention kernel (forward).
+
+Grid: (batch, heads, q_blocks, kv_blocks) — kv is the innermost (reduction)
+axis; online-softmax statistics live in VMEM scratch across kv steps.
+BlockSpecs tile q/k/v/o into (block, head_dim) VMEM tiles; with the default
+bq=bk=256 and hd<=256 the working set is ~1.5MB of VMEM, and the MXU sees
+(256, hd) x (hd, 256) matmuls (hardware-aligned for hd in {64,128,256}).
+
+This is the TPU-target implementation of the same math as
+``repro.models.layers.blockwise_sdpa`` (the jnp twin used on CPU and in the
+dry-run); ``ref.py`` is the pure-jnp oracle both are tested against.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref,
+                  l_ref, *, bq: int, bk: int, n_kv: int, causal: bool,
+                  window: int | None, scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale        # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)                # (bk, hd)
+    s = q @ k.T                                        # (bq, bk)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0] = (m_ref[...] +
+                         jnp.log(jnp.maximum(l, 1e-30))).astype(jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "bq", "bk", "interpret",
+                     "return_lse"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    bq: int = 256, bk: int = 256, interpret: bool = False,
+                    return_lse: bool = False):
+    """q,k,v: (B, H, S, hd) — H layout, GQA pre-repeated. Returns (B,H,S,hd)
+    [, lse (B,H,S) f32 — consumed by the backward kernels]."""
+    B, H, S, hd = q.shape
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    n_q, n_kv = S // bq, S // bk
+    grid = (B, H, n_q, n_kv)
+    kern = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, n_kv=n_kv, causal=causal,
+        window=window, scale=hd ** -0.5)
+    o, lse = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, qi, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, qi, ki: (b, h, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, qi, ki: (b, h, qi)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+                   jax.ShapeDtypeStruct((B, H, S), jnp.float32)],
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return (o, lse) if return_lse else o

@@ -1,0 +1,149 @@
+"""Pallas TPU flash-attention backward kernels (FlashAttention-2 style).
+
+Two passes, both recomputing probabilities from (q, k, lse) so nothing
+O(S^2) is ever materialized in HBM:
+  - dq kernel:  grid (B, H, nq, nk) — accumulates dq per q block over kv
+  - dkv kernel: grid (B, H, nk, nq) — accumulates dk, dv per kv block over q
+
+Inputs lse (B,H,S) and Drow = rowsum(do*o) (B,H,S) come from the forward
+kernel / a cheap jnp reduction. `ops.mha_vjp` wires these into a
+custom_vjp for end-to-end TPU training.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _mask_blk(qi, ki, bq, bk, causal, window):
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= k_pos > q_pos - window
+    return ok
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dr_ref, dq_ref,
+               acc_ref, *, bq, bk, n_kv, causal, window, scale):
+    qi, ki = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0].astype(jnp.float32)
+    dr = dr_ref[0, 0].astype(jnp.float32)
+
+    s = q @ k.T
+    s = jnp.where(_mask_blk(qi, ki, bq, bk, causal, window), s, NEG_INF)
+    p = jnp.exp(s - lse[:, None])
+    dp = do @ v.T
+    ds = p * (dp - dr[:, None]) * scale
+    acc_ref[...] += ds @ k
+
+    @pl.when(ki == n_kv - 1)
+    def _done():
+        dq_ref[0, 0] = acc_ref[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dr_ref, dk_ref,
+                dv_ref, dk_acc, dv_acc, *, bq, bk, n_q, causal, window,
+                scale):
+    ki, qi = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0].astype(jnp.float32)
+    dr = dr_ref[0, 0].astype(jnp.float32)
+
+    s = (q * scale) @ k.T
+    s = jnp.where(_mask_blk(qi, ki, bq, bk, causal, window), s, NEG_INF)
+    p = jnp.exp(s - lse[:, None])                    # (bq, bk)
+    dv_acc[...] += p.T @ do
+    dp = do @ v.T
+    ds = p * (dp - dr[:, None]) * scale
+    dk_acc[...] += ds.T @ q
+
+    @pl.when(qi == n_q - 1)
+    def _done():
+        dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq",
+                                              "bk", "interpret"))
+def flash_attention_bwd(q, k, v, do, lse, drow, *, causal=True, window=None,
+                        bq=256, bk=256, interpret=False):
+    """q,k,v,do: (B,H,S,hd); lse,drow: (B,H,S). Returns (dq, dk, dv)."""
+    B, H, S, hd = q.shape
+    bq, bk = min(bq, S), min(bk, S)
+    n_q, n_kv = S // bq, S // bk
+    scale = hd ** -0.5
+
+    def spec4(b, which):
+        if which == "q":
+            return pl.BlockSpec((1, 1, b, hd),
+                                lambda bi, h, i, j: (bi, h, i, 0))
+        return pl.BlockSpec((1, 1, b, hd),
+                            lambda bi, h, i, j: (bi, h, j, 0))
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, bq=bq, bk=bk, n_kv=n_kv,
+                          causal=causal, window=window, scale=scale),
+        grid=(B, H, n_q, n_kv),
+        in_specs=[
+            spec4(bq, "q"), spec4(bk, "kv"), spec4(bk, "kv"), spec4(bq, "q"),
+            pl.BlockSpec((1, 1, bq), lambda bi, h, i, j: (bi, h, i)),
+            pl.BlockSpec((1, 1, bq), lambda bi, h, i, j: (bi, h, i)),
+        ],
+        out_specs=spec4(bq, "q"),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, hd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, drow)
+
+    def spec_kv(b, which):
+        if which == "kv":
+            return pl.BlockSpec((1, 1, b, hd),
+                                lambda bi, h, i, j: (bi, h, i, 0))
+        return pl.BlockSpec((1, 1, b, hd),
+                            lambda bi, h, i, j: (bi, h, j, 0))
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, bq=bq, bk=bk, n_q=n_q,
+                          causal=causal, window=window, scale=scale),
+        grid=(B, H, n_kv, n_q),
+        in_specs=[
+            spec_kv(bq, "q"), spec_kv(bk, "kv"), spec_kv(bk, "kv"),
+            spec_kv(bq, "q"),
+            pl.BlockSpec((1, 1, bq), lambda bi, h, i, j: (bi, h, j)),
+            pl.BlockSpec((1, 1, bq), lambda bi, h, i, j: (bi, h, j)),
+        ],
+        out_specs=[spec_kv(bk, "kv"), spec_kv(bk, "kv")],
+        out_shape=[jax.ShapeDtypeStruct((B, H, S, hd), k.dtype),
+                   jax.ShapeDtypeStruct((B, H, S, hd), v.dtype)],
+        scratch_shapes=[pltpu.VMEM((bk, hd), jnp.float32),
+                        pltpu.VMEM((bk, hd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, drow)
+    return dq, dk, dv

@@ -1,0 +1,62 @@
+"""jit'd public wrappers for the flash attention kernels.
+
+``mha`` is forward-only. ``mha_vjp`` is the full training op: forward and
+backward both run as Pallas kernels (custom_vjp; nothing O(S^2) touches
+HBM in either direction). On CPU containers both support interpret mode;
+the model stack's default jnp twin lives in repro.models.layers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.kernel_bwd import flash_attention_bwd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def mha(q, k, v, *, causal=True, window=None, bq=256, bk=256,
+        force_interpret: bool | None = None):
+    """q,k,v: (B,H,S,hd). Uses the Pallas kernel on TPU, interpret mode when
+    requested, jnp reference otherwise."""
+    platform = jax.devices()[0].platform
+    if platform == "tpu":
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               bq=bq, bk=bk)
+    if force_interpret:
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               bq=bq, bk=bk, interpret=True)
+    return attention_ref(q, k, v, causal=causal, window=window)
+
+
+@functools.lru_cache(maxsize=None)
+def _mha_vjp_fn(causal, window, bq, bk, interpret):
+    @jax.custom_vjp
+    def f(q, k, v):
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               bq=bq, bk=bk, interpret=interpret)
+
+    def fwd(q, k, v):
+        o, lse = flash_attention(q, k, v, causal=causal, window=window,
+                                 bq=bq, bk=bk, interpret=interpret,
+                                 return_lse=True)
+        return o, (q, k, v, o, lse)
+
+    def bwd(res, do):
+        q, k, v, o, lse = res
+        drow = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), -1)
+        return flash_attention_bwd(q, k, v, do, lse, drow, causal=causal,
+                                   window=window, bq=bq, bk=bk,
+                                   interpret=interpret)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def mha_vjp(q, k, v, *, causal=True, window=None, bq=256, bk=256,
+            interpret=False):
+    """Differentiable flash attention — Pallas fwd + bwd kernels."""
+    return _mha_vjp_fn(bool(causal), window, int(bq), int(bk),
+                       bool(interpret))(q, k, v)

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel for the SSD (state-space duality) intra-chunk block.
+
+The Mamba2 SSD computation splits into (a) an intra-chunk quadratic part —
+attention-like, compute-dense, perfect for the MXU — and (b) a tiny
+inter-chunk recurrence over nc chunk states (left in jnp; it is O(nc·H·P·N)
+and bandwidth-trivial). This kernel computes (a): per (batch, chunk, head
+tile), the masked-decay local attention and the chunk's terminal state.
+
+Grid: (B, nc, H//hb). VMEM per instance with L=128, hb=8, P=64, N=128:
+x (L,hb,P) 256KB + decay (hb,L,L) 512KB + outputs — comfortably < 16MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(xd_ref, dA_ref, b_ref, c_ref, y_ref, st_ref, cd_ref, *,
+                L: int, hb: int):
+    xd = xd_ref[0, 0].astype(jnp.float32)        # (L, hb, P)
+    dA = dA_ref[0, 0].astype(jnp.float32)        # (L, hb)
+    b = b_ref[0, 0].astype(jnp.float32)          # (L, N)
+    c = c_ref[0, 0].astype(jnp.float32)          # (L, N)
+
+    cs = jnp.cumsum(dA, axis=0)                  # (L, hb)
+    # pairwise decay (hb, L, L), lower-triangular
+    diff = cs.T[:, :, None] - cs.T[:, None, :]
+    li = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    mi = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    decay = jnp.where((mi <= li)[None], jnp.exp(diff), 0.0)
+
+    att = c @ b.T                                # (L, L)
+    w = att[None] * decay                        # (hb, L, L)
+    # y[l,h,p] = sum_m w[h,l,m] * xd[m,h,p]
+    y = jax.lax.dot_general(
+        w, jnp.moveaxis(xd, 1, 0),
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)      # (hb, L, P)
+    y_ref[0, 0] = jnp.moveaxis(y, 0, 1).astype(y_ref.dtype)
+
+    dstates = jnp.exp(cs[-1:, :] - cs)           # (L, hb)
+    # states[h,p,n] = sum_l b[l,n] * dstates[l,h] * xd[l,h,p]
+    xw = xd * dstates[:, :, None]                # (L, hb, P)
+    st = jax.lax.dot_general(
+        jnp.moveaxis(xw, 1, 0), b,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)      # (hb, P, N)
+    st_ref[0, 0] = st.astype(st_ref.dtype)
+    cd_ref[0, 0] = jnp.exp(cs[-1]).astype(cd_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("hb", "interpret"))
+def ssd_intra_chunk(xd, dA, b, c, *, hb: int = 8, interpret: bool = False):
+    """xd: (B,nc,L,H,P) dt-scaled inputs; dA: (B,nc,L,H); b,c: (B,nc,L,N).
+    Returns y_diag (B,nc,L,H,P) f32, states (B,nc,H,P,N) f32,
+    chunk_decay (B,nc,H) f32."""
+    B, nc, L, H, P = xd.shape
+    N = b.shape[-1]
+    hb = min(hb, H)
+    assert H % hb == 0
+    grid = (B, nc, H // hb)
+    kern = functools.partial(_ssd_kernel, L=L, hb=hb)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, L, hb, P),
+                         lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, L, hb), lambda bi, ci, hi: (bi, ci, 0, hi)),
+            pl.BlockSpec((1, 1, L, N), lambda bi, ci, hi: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, L, N), lambda bi, ci, hi: (bi, ci, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, L, hb, P),
+                         lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, hb, P, N),
+                         lambda bi, ci, hi: (bi, ci, hi, 0, 0)),
+            pl.BlockSpec((1, 1, hb), lambda bi, ci, hi: (bi, ci, hi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nc, L, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, nc, H, P, N), jnp.float32),
+            jax.ShapeDtypeStruct((B, nc, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xd, dA, b, c)

@@ -1,0 +1,48 @@
+"""Full SSD forward assembled from the intra-chunk kernel + jnp glue."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.ssd_scan.kernel import ssd_intra_chunk
+
+
+def ssd_forward(xh, dt, a, b, c, *, chunk: int = 128, hb: int = 8,
+                interpret: bool = False, use_kernel: bool = True):
+    """SSD with the Pallas intra-chunk kernel. Same contract as
+    ref.ssd_sequential. xh: (B,S,H,P); dt: (B,S,H); a: (H,); b,c: (B,S,N)."""
+    B, S, H, P = xh.shape
+    N = b.shape[-1]
+    nc = S // chunk
+    assert S % chunk == 0
+    dtf = dt.astype(jnp.float32)
+    dA = (dtf * a).reshape(B, nc, chunk, H)
+    xd = (xh.astype(jnp.float32) * dtf[..., None]).reshape(
+        B, nc, chunk, H, P)
+    bc = b.reshape(B, nc, chunk, N)
+    cc = c.reshape(B, nc, chunk, N)
+
+    if use_kernel:
+        y_d, states, chunk_decay = ssd_intra_chunk(
+            xd, dA, bc, cc, hb=hb, interpret=interpret)
+    else:  # jnp fallback with identical per-chunk math
+        from repro.kernels.ssd_scan.ref import ssd_chunk_ref
+        f = jax.vmap(jax.vmap(ssd_chunk_ref))
+        y_d, states, chunk_decay = f(xd, dA, bc, cc)
+
+    # inter-chunk recurrence (tiny): h_{i+1} = decay_i * h_i + states_i
+    def scan_body(h, xs):
+        st, dec = xs
+        return h * dec[:, :, None, None] + st, h
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    h_last, h_prevs = lax.scan(
+        scan_body, h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)               # (B,nc,H,P,N)
+
+    dA_cs = jnp.cumsum(dA, axis=2)                      # (B,nc,L,H)
+    y_o = jnp.einsum("bcln,bchpn,bclh->bclhp", cc, h_prevs,
+                     jnp.exp(dA_cs))
+    y = (y_d + y_o).reshape(B, S, H, P)
+    return y, h_last

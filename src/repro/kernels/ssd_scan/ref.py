@@ -1,0 +1,50 @@
+"""Oracles for the SSD (Mamba2) kernel.
+
+``ssd_sequential`` is the exact O(S) recurrence — the strongest reference:
+    h_t = exp(dt_t * a) * h_{t-1} + dt_t * x_t ⊗ b_t
+    y_t = c_t · h_t
+Both the chunked jnp implementation (models.layers._ssd_chunked) and the
+Pallas intra-chunk kernel are validated against it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssd_sequential(xh, dt, a, b, c, h0=None):
+    """xh: (B,S,H,P); dt: (B,S,H); a: (H,)<0; b,c: (B,S,N).
+    Returns y: (B,S,H,P) f32, h_final: (B,H,P,N) f32."""
+    B, S, H, P = xh.shape
+    N = b.shape[-1]
+    h = jnp.zeros((B, H, P, N), jnp.float32) if h0 is None else h0
+
+    def step(h, t):
+        dtt = dt[:, t].astype(jnp.float32)               # (B,H)
+        dec = jnp.exp(dtt * a)                           # (B,H)
+        upd = jnp.einsum("bhp,bn->bhpn",
+                         xh[:, t].astype(jnp.float32) * dtt[..., None],
+                         b[:, t].astype(jnp.float32))
+        h = h * dec[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", c[:, t].astype(jnp.float32), h)
+        return h, y
+
+    h, ys = lax.scan(step, h, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1), h                     # (B,S,H,P)
+
+
+def ssd_chunk_ref(xd, dA, b, c):
+    """Intra-chunk reference for the kernel: one chunk, already dt-scaled.
+    xd: (L,H,P); dA: (L,H); b,c: (L,N). Returns y_diag (L,H,P),
+    states (H,P,N), chunk_decay (H,)."""
+    L = xd.shape[0]
+    cs = jnp.cumsum(dA, axis=0)                          # (L,H)
+    diff = cs[:, None, :] - cs[None, :, :]               # (L,L,H)
+    mask = jnp.tril(jnp.ones((L, L), bool))[:, :, None]
+    decay = jnp.where(mask, jnp.exp(diff), 0.0)
+    att = jnp.einsum("ln,mn->lm", c, b)                  # (L,L)
+    y = jnp.einsum("lm,lmh,mhp->lhp", att, decay, xd)
+    dstates = jnp.exp(cs[-1:, :] - cs)                   # (L,H)
+    states = jnp.einsum("ln,lh,lhp->hpn", b, dstates, xd)
+    return y, states, jnp.exp(cs[-1])

@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: device count locks at first backend init.
+
+import argparse
+import gzip
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, all_arch_names, cell_supported, get_config
+from repro.launch import mesh as mesh_lib
+from repro.launch.hlo_analysis import analyze_program, parse_collectives
+from repro.models import model as M
+from repro.models.params import tree_structs
+from repro.parallel import sharding as sh
+from repro.train.optimizer import OptConfig, opt_state_specs
+from repro.train.train_step import (make_decode_step, make_prefill_step,
+                                    make_train_step)
+
+I32 = jnp.int32
+SDS = jax.ShapeDtypeStruct
+
+# Beyond-paper optimization variants (EXPERIMENTS.md §Perf): enabled by
+# --opt; the faithful baseline keeps every knob off.
+OPT_OVERRIDES = {
+    "minicpm3-4b": dict(pad_heads_to=48),     # 40 heads can't shard 16-way
+    # EP (shard_map) requires unrolled layers: XLA-CPU CHECK-crashes on
+    # grad(scan(shard_map)) — documented refuted/blocked paths in
+    # EXPERIMENTS.md §Perf
+    "qwen2-moe-a2.7b": dict(pad_experts_to=64, _unroll=True),
+    "gemma3-1b": dict(banded_window_attn=True),
+    "mixtral-8x7b": dict(banded_window_attn=True),
+    "qwen2-72b": dict(kv_cache_int8=True),   # decode memory term (KV reads)
+    "yi-9b": dict(kv_cache_int8=True),
+}
+
+
+def apply_opt(cfg):
+    import dataclasses
+    over = dict(OPT_OVERRIDES.get(cfg.name) or {})
+    unroll = over.pop("_unroll", False)
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+    if unroll:
+        cfg = cfg.unroll()
+    return cfg
+
+
+def input_specs(arch: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of this cell —
+    weak-type-correct, shardable, never allocated."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    D = cfg.d_model
+
+    def batch_structs(with_labels: bool, seq: int):
+        d = {"tokens": (SDS((B, seq), I32), ("batch", "seq"))}
+        if with_labels:
+            d["labels"] = (SDS((B, seq), I32), ("batch", "seq"))
+        if cfg.n_vision_tokens:
+            d["vision_embeds"] = (SDS((B, cfg.n_vision_tokens, D), cfg.dtype),
+                                  ("batch", None, None))
+        if cfg.is_encdec:
+            d["enc_embeds"] = (SDS((B, cfg.enc_seq, D), cfg.dtype),
+                               ("batch", None, None))
+        return d
+
+    if kind == "train":
+        return {"batch": batch_structs(True, S)}
+    if kind == "prefill":
+        return {"batch": batch_structs(False, S)}
+    # decode kinds: one new token against a seq_len cache
+    return {
+        "tokens": (SDS((B, 1), I32), ("batch", None)),
+        "pos": (SDS((), I32), ()),
+        "cache_batch": B, "cache_seq": S,
+    }
+
+
+def build_cell(arch: str, shape_name: str, mesh, opt: bool = False):
+    """Returns (fn, arg_structs, in_shardings, donate)."""
+    cfg = get_config(arch)
+    if opt:
+        cfg = apply_opt(cfg)
+    shape = SHAPES[shape_name]
+    kind = shape.kind
+    kv_div = (cfg.n_kv_heads % mesh.shape.get("model", 1) == 0)
+    rules = sh.rules_for_shape(
+        "long_decode" if kind == "long_decode" else
+        ("decode" if kind == "decode" else
+         ("prefill" if kind == "prefill" else "train")),
+        kv_divisible=kv_div)
+    if cfg.pad_experts_to:
+        # expert parallelism: padded expert count divides the model axis —
+        # shard the expert dim (expert compute + dispatch go shard-local)
+        rules = rules.override(experts="model", expert_ffn=None)
+
+    pspecs = M.model_specs(cfg)
+    p_structs = tree_structs(pspecs)
+    p_shard = sh.tree_shardings(pspecs, rules, mesh)
+    ins = input_specs(arch, shape_name)
+
+    def shard_of(axes, shp):
+        return sh.named_sharding(shp, axes, rules, mesh, tensor="input")
+
+    if kind == "train":
+        opt_specs = opt_state_specs(pspecs)
+        o_structs = tree_structs(opt_specs)
+        o_shard = sh.tree_shardings(opt_specs, rules, mesh)
+        b_structs = {k: v[0] for k, v in ins["batch"].items()}
+        b_shard = {k: shard_of(v[1], v[0].shape)
+                   for k, v in ins["batch"].items()}
+        step_s = SDS((), I32)
+        fn = make_train_step(cfg, OptConfig())
+        args = (p_structs, o_structs, b_structs, step_s)
+        shardings = (p_shard, o_shard, b_shard,
+                     sh.named_sharding((), (), rules, mesh))
+        donate = (0, 1)
+        return fn, args, shardings, donate, rules
+
+    if kind == "prefill":
+        b_structs = {k: v[0] for k, v in ins["batch"].items()}
+        b_shard = {k: shard_of(v[1], v[0].shape)
+                   for k, v in ins["batch"].items()}
+        fn = make_prefill_step(cfg)
+        return fn, (p_structs, b_structs), (p_shard, b_shard), (), rules
+
+    # decode / long_decode
+    c_specs = M.cache_specs(cfg, ins["cache_batch"], ins["cache_seq"])
+    c_structs = tree_structs(c_specs)
+    c_shard = sh.tree_shardings(c_specs, rules, mesh)
+    t_struct, t_axes = ins["tokens"]
+    fn = make_decode_step(cfg)
+    args = (p_structs, c_structs, t_struct, SDS((), I32))
+    shardings = (p_shard, c_shard, shard_of(t_axes, t_struct.shape),
+                 sh.named_sharding((), (), rules, mesh))
+    return fn, args, shardings, (1,), rules
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             save_hlo: bool = False, opt: bool = False) -> dict:
+    t0 = time.time()
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    if opt:
+        cfg = apply_opt(cfg)
+    multi = mesh_kind == "multi"
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi)
+    chips = mesh.size
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "chips": chips, "kind": shape.kind, "variant":
+           "opt" if opt else "baseline"}
+    ok, why = cell_supported(arch, shape_name)
+    if not ok:
+        rec.update(status="skip", reason=why)
+        return rec
+    try:
+        sh.AUDIT.events.clear()
+        fn, args, shardings, donate, rules = build_cell(arch, shape_name,
+                                                        mesh, opt=opt)
+        with mesh, sh.sharding_ctx(mesh, rules):
+            jitted = jax.jit(fn, in_shardings=shardings,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            ca = compiled.cost_analysis() or {}
+            try:
+                mem = compiled.memory_analysis()
+                mem_d = {a: getattr(mem, a) for a in (
+                    "argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "alias_size_in_bytes",
+                    "generated_code_size_in_bytes") if hasattr(mem, a)}
+            except Exception:
+                mem_d = {}
+            hlo = compiled.as_text()
+        stats = parse_collectives(hlo, chips)
+        prog = analyze_program(hlo, chips)
+        # XLA-CPU cost_analysis counts `while` bodies once (measured) — use
+        # the loop-aware HLO analysis; keep raw values for reference.
+        flops = float(prog["flops"])
+        bytes_acc = float(prog["bytes"])
+        flops_raw = float(ca.get("flops", 0.0))
+        bytes_raw = float(ca.get("bytes accessed", 0.0))
+        mf = M.model_flops(cfg, shape.kind, shape.seq_len,
+                           shape.global_batch)
+        compute_s = flops / mesh_lib.PEAK_FLOPS_BF16
+        memory_s = bytes_acc / mesh_lib.HBM_BW
+        coll_s = stats.raw_bytes / (chips * mesh_lib.ICI_BW)
+        coll_link_s = stats.link_bytes / (2 * mesh_lib.ICI_BW)
+        terms = {"compute_s": compute_s, "memory_s": memory_s,
+                 "collective_s": coll_s, "collective_link_s": coll_link_s}
+        dominant = max(("compute_s", "memory_s", "collective_link_s"),
+                       key=lambda k: terms[k])
+        rec.update(
+            status="ok", lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            flops_per_chip=flops, bytes_per_chip=bytes_acc,
+            flops_raw=flops_raw, bytes_raw=bytes_raw,
+            model_flops=mf,
+            useful_flops_ratio=(mf / (flops * chips) if flops else None),
+            memory=mem_d, collectives=stats.summary(),
+            top_collectives=stats.top(8),
+            roofline=dict(terms, dominant=dominant),
+            audit=list(sh.AUDIT.events),
+        )
+        if save_hlo:
+            os.makedirs(out_dir, exist_ok=True)
+            with gzip.open(os.path.join(
+                    out_dir, f"{arch}__{shape_name}__{mesh_kind}.hlo.gz"),
+                    "wt") as f:
+                f.write(hlo)
+    except Exception as e:  # noqa: BLE001 — record, keep sweeping
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-4000:])
+    rec["wall_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="enable beyond-paper optimization variants")
+    args = ap.parse_args()
+
+    archs = all_arch_names() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                sfx = "__opt" if args.opt else ""
+                path = os.path.join(args.out,
+                                    f"{arch}__{shape}__{mk}{sfx}.json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip existing] {path}", flush=True)
+                    continue
+                rec = run_cell(arch, shape, mk, args.out, args.save_hlo,
+                               opt=args.opt)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1, default=str)
+                keys = ("status", "compile_s", "flops_per_chip",
+                        "useful_flops_ratio")
+                brief = {k: rec.get(k) for k in keys}
+                if rec.get("status") == "ok":
+                    brief["dominant"] = rec["roofline"]["dominant"]
+                if rec.get("status") == "error":
+                    brief["error"] = rec.get("error")
+                print(f"[{arch} x {shape} x {mk}] {brief}", flush=True)
+                if rec.get("status") == "ok":
+                    mem = rec.get("memory") or {}
+                    print("   memory_analysis:", mem, flush=True)
+                    print("   cost: flops/chip=%.3e coll_raw=%.3e" % (
+                        rec["flops_per_chip"],
+                        rec["collectives"]["raw_bytes"]), flush=True)
+
+
+if __name__ == "__main__":
+    main()

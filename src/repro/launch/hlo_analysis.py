@@ -1,0 +1,276 @@
+"""Parse collective traffic out of post-SPMD HLO text.
+
+``cost_analysis()`` has no collective-bytes entry, so we parse the compiled
+module for all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops, recover result shapes + replica-group sizes, and
+attribute *loop multiplicity*: a collective inside a ``lax.scan``-derived
+``while`` body executes trip_count times, so we
+  1. split the module into computations,
+  2. find every ``while`` op's (condition, body) pair,
+  3. estimate trip counts from ``known_trip_count`` annotations or the
+     largest s32 constant in the condition computation,
+  4. propagate multipliers down nested loops.
+
+Two numbers per op:
+  raw_bytes   — result-operand sizes (the §Roofline prompt formula)
+  link_bytes  — per-chip ring-egress estimate:
+                  all-gather:      S * (g-1)/g      (S = full result)
+                  reduce-scatter:  S_in * (g-1)/g   (S_in = result * g)
+                  all-reduce:      2 * S * (g-1)/g
+                  all-to-all:      S * (g-1)/g
+                  collective-permute: S
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(.+?)\s+(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r"trip_count[\"':\s{]*[\"']?n?[\"']?[:=]\s*[\"']?(\d+)")
+_S32_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return total_devices
+
+
+def _split_computations(text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    name = None
+    for line in text.splitlines():
+        if not line.startswith(" ") and "{" in line and ("(" in line):
+            tok = line.split()[0]
+            if tok == "ENTRY":
+                tok = line.split()[1]
+            name = tok.lstrip("%")
+            comps[name] = []
+        elif line.startswith("}"):
+            name = None
+        elif name is not None:
+            comps[name].append(line.strip())
+    return comps
+
+
+@dataclass
+class CollectiveStats:
+    ops: list = field(default_factory=list)
+
+    @property
+    def raw_bytes(self) -> float:
+        return sum(o["raw_bytes"] for o in self.ops)
+
+    @property
+    def link_bytes(self) -> float:
+        return sum(o["link_bytes"] for o in self.ops)
+
+    def by_kind(self):
+        agg = defaultdict(lambda: {"count": 0, "raw_bytes": 0.0,
+                                   "link_bytes": 0.0})
+        for o in self.ops:
+            a = agg[o["kind"]]
+            a["count"] += o["mult"]
+            a["raw_bytes"] += o["raw_bytes"]
+            a["link_bytes"] += o["link_bytes"]
+        return dict(agg)
+
+    def summary(self):
+        return {"raw_bytes": self.raw_bytes, "link_bytes": self.link_bytes,
+                "by_kind": self.by_kind(), "n_op_sites": len(self.ops)}
+
+    def top(self, n=12):
+        return sorted(self.ops, key=lambda o: -o["link_bytes"])[:n]
+
+
+def _call_edges(comps):
+    """(parent, callee, mult) edges: while bodies get their trip count,
+    fusions/calls/reduces get 1. Returns (edges, fusion_bodies)."""
+    edges: list[tuple[str, str, int]] = []
+    fusion_bodies: set[str] = set()
+    for parent, lines in comps.items():
+        for line in lines:
+            if " while(" in line or line.startswith("while("):
+                m = _WHILE_RE.search(line)
+                if m:
+                    cond, body = m.group(1), m.group(2)
+                    t = _TRIP_RE.search(line)
+                    if t:
+                        trip = int(t.group(1))
+                    else:
+                        consts = [int(c) for cl in comps.get(cond, [])
+                                  for c in _S32_CONST_RE.findall(cl)]
+                        trip = max(consts) if consts else 1
+                    edges.append((parent, body, max(trip, 1)))
+                    edges.append((parent, cond, max(trip, 1)))
+                continue
+            for attr in ("calls=", "to_apply="):
+                for m in re.finditer(attr + r"%?([\w.\-]+)", line):
+                    callee = m.group(1)
+                    edges.append((parent, callee, 1))
+                    if attr == "calls=" and " fusion(" in line:
+                        fusion_bodies.add(callee)
+    return edges, fusion_bodies
+
+
+def _multipliers(edges) -> dict[str, float]:
+    mult: dict[str, float] = defaultdict(lambda: 1.0)
+    for _ in range(16):
+        changed = False
+        for parent, callee, trip in edges:
+            new = mult[parent] * trip
+            if abs(mult.get(callee, 1.0) - new) > 1e-9:
+                mult[callee] = new
+                changed = True
+        if not changed:
+            break
+    return mult
+
+
+_INSTR_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[\w\[\],\s{}]+?\)?)\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota", "while", "conditional", "call",
+}
+
+
+def _dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def analyze_program(hlo_text: str, total_devices: int) -> dict:
+    """Loop-aware FLOPs + HBM-traffic estimate from optimized HLO.
+
+    XLA-CPU cost_analysis() counts `while` bodies once (measured); here
+    every instruction is weighted by its loop-nest trip product. FLOPs
+    counts dot ops (matmul-dominated workloads; elementwise is noise);
+    bytes counts result+operand sizes of non-fusion-body instructions
+    (fusion internals never touch HBM). Operand shapes are resolved via a
+    per-computation symbol table (optimized HLO omits inline types).
+    """
+    comps = _split_computations(hlo_text)
+    edges, fusion_bodies = _call_edges(comps)
+    mult = _multipliers(edges)
+
+    flops = 0.0
+    bytes_ = 0.0
+    dot_sites = 0
+    for comp, lines in comps.items():
+        m_ = mult.get(comp, 1.0)
+        is_fusion_body = comp in fusion_bodies
+        # symbol table: instruction name -> type string
+        types: dict[str, str] = {}
+        parsed = []
+        for line in lines:
+            im = _INSTR_RE.match(line)
+            if not im:
+                continue
+            name, type_str, op = im.group(1), im.group(2), im.group(3)
+            types[name] = type_str
+            parsed.append((name, type_str, op, line))
+        for name, type_str, op, line in parsed:
+            # operand names: inside the op's parens, before attribute list
+            paren = line.find(op + "(")
+            rest = line[paren + len(op) + 1:]
+            # cut at the matching close: attributes follow "), "
+            depth, end = 1, len(rest)
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            opnames = _OPERAND_RE.findall(rest[:end])
+            if op == "dot":
+                lc = _LHS_CONTRACT_RE.search(line)
+                if lc is not None and opnames:
+                    ldims = _dims(types.get(opnames[0], ""))
+                    rdims = _dims(type_str)
+                    cdims = [int(i) for i in lc.group(1).split(",") if i]
+                    csize = 1
+                    for i in cdims:
+                        if i < len(ldims):
+                            csize *= ldims[i]
+                    n = 1
+                    for d in rdims:
+                        n *= d
+                    flops += 2.0 * n * csize * m_
+                    dot_sites += 1
+            if is_fusion_body or op in _SKIP_BYTES_OPS:
+                continue
+            b = _shape_bytes(type_str)
+            for on in opnames:
+                b += _shape_bytes(types.get(on, ""))
+            bytes_ += b * m_
+    return {"flops": flops, "bytes": bytes_, "dot_sites": dot_sites}
+
+
+def parse_collectives(hlo_text: str, total_devices: int) -> CollectiveStats:
+    comps = _split_computations(hlo_text)
+    edges, _ = _call_edges(comps)
+    mult = _multipliers(edges)
+
+    stats = CollectiveStats()
+    for comp, lines in comps.items():
+        m_ = mult.get(comp, 1.0)
+        for line in lines:
+            cm = _COLL_RE.search(line)
+            if not cm:
+                continue
+            type_str, kind = cm.group(1), cm.group(2)
+            size = _shape_bytes(type_str)
+            g = _group_size(line, total_devices)
+            if g <= 1:
+                continue
+            if kind == "all-reduce":
+                raw, link = size, 2 * size * (g - 1) / g
+            elif kind == "all-gather":
+                raw, link = size, size * (g - 1) / g
+            elif kind == "reduce-scatter":
+                raw, link = size * g, size * (g - 1)
+            elif kind == "all-to-all":
+                raw, link = size, size * (g - 1) / g
+            else:
+                raw, link = size, size
+            stats.ops.append({
+                "kind": kind, "bytes": size, "group": g, "mult": m_,
+                "raw_bytes": raw * m_, "link_bytes": link * m_,
+                "comp": comp, "line": line[:160],
+            })
+    return stats

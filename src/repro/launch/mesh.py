@@ -1,0 +1,32 @@
+"""Production mesh definitions.
+
+A *function*, not a module-level constant — importing this module never
+touches jax device state (smoke tests must keep seeing 1 CPU device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (256-chip pod) or 2x16x16 (two pods, 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(devices=None, *, multi_pod: bool = False):
+    """Small mesh over however many devices exist (tests on forced hosts)."""
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    if multi_pod and n >= 8:
+        return jax.make_mesh((2, 2, n // 4), ("pod", "data", "model"))
+    if n >= 4:
+        return jax.make_mesh((2, n // 2), ("data", "model"))
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+# TPU v5e-class hardware constants used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link

@@ -1,0 +1,66 @@
+"""Serving launcher: restore a checkpoint (or init) and serve batched
+requests through the decode engine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-9b \
+      --ckpt-dir artifacts/ckpt_launch --batch 4 --new-tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import all_arch_names, get_config
+from repro.models import model as M
+from repro.models.params import init_tree
+from repro.serve.engine import Engine, ServeConfig
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import init_opt_state
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b", choices=all_arch_names())
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--full-size", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full_size:
+        cfg = cfg.tiny()
+    params = init_tree(M.model_specs(cfg), jax.random.key(0))
+    if args.ckpt_dir:
+        state_like = {"params": params, "opt": init_opt_state(params),
+                      "step": jnp.zeros((), jnp.int32)}
+        step, got = ckpt.restore_checkpoint(args.ckpt_dir, state_like)
+        if got is not None:
+            params = got["params"]
+            print(f"restored checkpoint step {step}")
+    eng = Engine(cfg, params, ServeConfig(max_new_tokens=args.new_tokens,
+                                          temperature=args.temperature))
+    prompts = jax.random.randint(jax.random.key(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab, jnp.int32)
+    batch = {"tokens": prompts}
+    if cfg.n_vision_tokens:
+        batch["vision_embeds"] = jnp.zeros(
+            (args.batch, cfg.n_vision_tokens, cfg.d_model), cfg.dtype)
+    if cfg.is_encdec:
+        batch["enc_embeds"] = jnp.zeros(
+            (args.batch, cfg.enc_seq, cfg.d_model), cfg.dtype)
+    t0 = time.time()
+    out = eng.generate(batch)
+    dt = time.time() - t0
+    print(f"generated {out.shape} in {dt:.2f}s "
+          f"({out.size / dt:.1f} tok/s incl. compile)")
+    print("sample:", out[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

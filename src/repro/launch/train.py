@@ -1,0 +1,57 @@
+"""Training launcher.
+
+CPU-real mode (default): trains a reduced config end-to-end with
+checkpoint/restart (the same loop a host process runs per node on a real
+cluster, against jax.distributed instead of the in-process coord plane).
+
+  PYTHONPATH=src python -m repro.launch.train --arch yi-9b --steps 100
+
+Cluster mode on TPU hosts would launch this same module once per host with
+`--coordinator` set; the trainer's coordination plane (leases, membership,
+shard ownership) is transport-agnostic (repro.coord).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from repro.configs import SHAPES, all_arch_names, get_config
+from repro.train.loop import LoopConfig, Trainer
+from repro.train.optimizer import OptConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b", choices=all_arch_names())
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch-per-shard", type=int, default=2)
+    ap.add_argument("--n-shards", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="artifacts/ckpt_launch")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--full-size", action="store_true",
+                    help="use the full config (TPU cluster scale) instead "
+                         "of the reduced CPU config")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full_size:
+        cfg = cfg.tiny()
+    loop = LoopConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                      ckpt_dir=args.ckpt_dir, seq_len=args.seq_len,
+                      batch_per_shard=args.batch_per_shard,
+                      n_shards=args.n_shards, log_every=10)
+    opt = OptConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                    total_steps=args.steps)
+    tr = Trainer(cfg, opt, loop)
+    state = tr.run(resume=args.resume)
+    for h in tr.history:
+        print(f"step {h['step']:5d}  loss {h['loss']:.4f}  "
+              f"gnorm {h['grad_norm']:.2f}")
+    print(f"finished at step {int(state['step'])}")
+
+
+if __name__ == "__main__":
+    main()

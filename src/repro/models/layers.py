@@ -1,0 +1,882 @@
+"""Model substrate: norms, rope, attention (GQA/blockwise/MLA), MoE, Mamba2.
+
+Every layer exposes
+  ``<layer>_specs(cfg, spec) -> pytree[ParamSpec]``
+  ``<layer>_apply(cfg, spec, params, x, ctx) -> y``  (pure function)
+so the dry-run can build ShapeDtypeStructs and shardings from the same
+source of truth as initialization.
+
+Attention has two mathematically-identical implementations:
+  - ``naive``: materializes (Sq, Skv) scores — fine for short seq;
+  - ``blockwise``: online-softmax scan over KV chunks (the jnp twin of the
+    Pallas flash kernel in ``repro.kernels.flash_attention``) — required for
+    32k+ prefill so compiled HBM usage stays linear in S.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models.params import ParamSpec
+from repro.parallel.sharding import constrain
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Context threaded through layers
+
+
+class Ctx(NamedTuple):
+    mode: str                  # "full" (train/prefill) | "decode"
+    positions: jax.Array       # (B, S) int32 absolute positions
+    pos: jax.Array | None      # scalar int32 — decode write offset
+    cache_len: int | None      # cache buffer capacity (prefill allocation)
+    enc_out: jax.Array | None  # encoder states for cross-attention
+    build_cache: bool = False  # prefill: emit cache entries
+
+
+def _ring_place(k: jax.Array, W: int) -> jax.Array:
+    """Scatter the last min(S, W) tokens of k (B,S,...) into a W-slot ring
+    buffer at slot (absolute_position % W) — the layout decode's
+    `pos % W` insertion expects."""
+    B, S = k.shape[:2]
+    n = min(S, W)
+    pos0 = S - n
+    idx = (pos0 + jnp.arange(n)) % W
+    buf = jnp.zeros((B, W) + k.shape[2:], k.dtype)
+    return buf.at[:, idx].set(k[:, S - n:])
+
+
+def _ring_valid_mask(pos, W: int) -> jax.Array:
+    """Additive mask (W,) — slots beyond min(pos+1, W) hold no token."""
+    valid = jnp.arange(W) < jnp.minimum(pos + 1, W)
+    return jnp.where(valid, 0.0, -jnp.inf).astype(F32)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+
+
+def norm_specs(cfg: ModelConfig, d: int):
+    p = {"scale": ParamSpec((d,), (None,), "ones", dtype=F32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = ParamSpec((d,), (None,), "zeros", dtype=F32)
+    return p
+
+
+def norm_apply(cfg: ModelConfig, params, x):
+    xf = x.astype(F32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * lax.rsqrt(var + cfg.norm_eps)
+        y = y * params["scale"] + params["bias"]
+    else:
+        var = (xf * xf).mean(-1, keepdims=True)
+        y = xf * lax.rsqrt(var + cfg.norm_eps) * params["scale"]
+    return y.astype(x.dtype)
+
+
+def _rms(x, scale, eps):
+    xf = x.astype(F32)
+    y = xf * lax.rsqrt((xf * xf).mean(-1, keepdims=True) + eps) * scale
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, d) rotated at `positions` (broadcastable to (..., S))."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=F32) / half)
+    ang = positions[..., None].astype(F32) * freq          # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(F32), x[..., half:].astype(F32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Core attention math (shared by naive / blockwise / decode)
+
+
+def _mask(q_pos, k_pos, *, causal: bool, window: int | None, valid_len=None):
+    """q_pos: (..., Sq), k_pos: (Skv,) — returns additive mask (..., Sq, Skv)."""
+    m = jnp.zeros(q_pos.shape + (k_pos.shape[-1],), F32)
+    qp = q_pos[..., None].astype(jnp.int32)
+    kp = k_pos.astype(jnp.int32)
+    ok = jnp.ones_like(m, dtype=bool)
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= kp > qp - window
+    if valid_len is not None:
+        ok &= kp < valid_len
+    return jnp.where(ok, m, -jnp.inf)
+
+
+def _sdpa(q, k, v, mask):
+    """q: (B,Sq,K,R,hd), k/v: (B,Skv,K,hd), mask: (B?,Sq,Skv) additive.
+    Grouped layout — used on the decode path (Sq=1, cache possibly
+    seq-sharded so scores reduce over the sharded axis)."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bqkrd,bskd->bkrqs", q.astype(F32), k.astype(F32))
+    s = s * (hd ** -0.5) + mask[..., None, None, :, :]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkrqs,bskd->bqkrd", p, v.astype(F32))
+    return o.astype(q.dtype)
+
+
+def _sdpa_h(q, k, v, mask):
+    """H-layout full attention: q (B,Sq,H,hd), k/v (B,Skv,H,hd) pre-repeated
+    so the head axis shards on `model`."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bqhd,bshd->bhqs", q.astype(F32), k.astype(F32))
+    s = s * (hd ** -0.5) + mask[:, None, :, :]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqs,bshd->bqhd", p, v.astype(F32))
+    return o.astype(q.dtype)
+
+
+@functools.lru_cache(maxsize=None)
+def _flash_fn(causal: bool, window: int | None, kv_chunk: int):
+    """Flash attention (jnp twin of kernels/flash_attention) as a custom_vjp.
+
+    H-layout: q (B,Sq,H,hd), k/v (B,Skv,H,hd_k/hd_v) — GQA callers repeat KV
+    heads first (cheap; shards on the head axis). Saves only (q,k,v,o,lse);
+    the backward recomputes scores chunk-by-chunk — nothing O(Sq*Skv) is ever
+    live or stacked across scan steps.
+    """
+
+    def _chunks(x, nk, c):
+        B, S, H, d = x.shape
+        return jnp.moveaxis(x.reshape(B, nk, c, H, d), 1, 0)
+
+    def fwd_scan(q, k, v):
+        B, Sq, H, hd = q.shape
+        Skv = k.shape[1]
+        nk = max(Skv // kv_chunk, 1)
+        c = Skv // nk
+        qf = q.astype(F32) * (hd ** -0.5)
+        q_pos = jnp.arange(Sq)
+
+        def body(carry, xs):
+            acc, m, l = carry
+            k_blk, v_blk, k0 = xs
+            kp = k0 + jnp.arange(c)
+            s = jnp.einsum("bqhd,bshd->bhqs", qf, k_blk.astype(F32))
+            s = s + _mask(q_pos, kp, causal=causal, window=window)[
+                None, None, :, :]
+            m_new = jnp.maximum(m, s.max(-1))
+            # fully-masked (row, chunk) pairs keep m_new == -inf; clamp the
+            # subtrahend so exp(-inf - finite) = 0 instead of exp(nan).
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            corr = jnp.exp(jnp.where(jnp.isfinite(m), m, -jnp.inf) - m_safe)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqs,bshd->bhqd", p, v_blk.astype(F32))
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((B, H, Sq, v.shape[-1]), F32)
+        m0 = jnp.full((B, H, Sq), -jnp.inf, F32)
+        l0 = jnp.zeros((B, H, Sq), F32)
+        (acc, m, l), _ = lax.scan(
+            body, (acc0, m0, l0),
+            (_chunks(k, nk, c), _chunks(v, nk, c), jnp.arange(nk) * c))
+        o = (acc / jnp.maximum(l, 1e-37)[..., None])
+        lse = jnp.where(jnp.isfinite(m), m + jnp.log(jnp.maximum(l, 1e-37)),
+                        jnp.inf)                       # (B,H,Sq)
+        return o, lse
+
+    @jax.custom_vjp
+    def flash(q, k, v):
+        o, _ = fwd_scan(q, k, v)
+        return jnp.moveaxis(o, 1, 2).astype(q.dtype)   # (B,Sq,H,hd_v)
+
+    def flash_fwd(q, k, v):
+        o, lse = fwd_scan(q, k, v)
+        out = jnp.moveaxis(o, 1, 2).astype(q.dtype)
+        return out, (q, k, v, o, lse)
+
+    def flash_bwd(res, do):
+        q, k, v, o, lse = res
+        B, Sq, H, hd = q.shape
+        Skv = k.shape[1]
+        nk = max(Skv // kv_chunk, 1)
+        c = Skv // nk
+        sc = hd ** -0.5
+        qf = q.astype(F32)
+        dof = jnp.moveaxis(do.astype(F32), 1, 2)       # (B,H,Sq,hd_v)
+        Drow = jnp.sum(dof * o, axis=-1)               # (B,H,Sq)
+        q_pos = jnp.arange(Sq)
+
+        def body(dq, xs):
+            k_blk, v_blk, k0 = xs
+            kp = k0 + jnp.arange(c)
+            s = jnp.einsum("bqhd,bshd->bhqs", qf, k_blk.astype(F32)) * sc
+            s = s + _mask(q_pos, kp, causal=causal, window=window)[
+                None, None, :, :]
+            p = jnp.exp(s - lse[..., None])            # (B,H,Sq,c)
+            dv_j = jnp.einsum("bhqs,bhqd->bshd", p, dof)
+            dp = jnp.einsum("bhqd,bshd->bhqs", dof, v_blk.astype(F32))
+            ds = p * (dp - Drow[..., None]) * sc
+            dq = dq + jnp.einsum("bhqs,bshd->bqhd", ds, k_blk.astype(F32))
+            dk_j = jnp.einsum("bhqs,bqhd->bshd", ds, qf)
+            return dq, (dk_j, dv_j)
+
+        dq0 = jnp.zeros((B, Sq, H, hd), F32)
+        dq, (dks, dvs) = lax.scan(
+            body, dq0,
+            (_chunks(k, nk, c), _chunks(v, nk, c), jnp.arange(nk) * c))
+        dk = jnp.moveaxis(dks, 0, 1).reshape(k.shape)
+        dv = jnp.moveaxis(dvs, 0, 1).reshape(v.shape)
+        return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+    flash.defvjp(flash_fwd, flash_bwd)
+    return flash
+
+
+def banded_sdpa(q, k, v, *, window: int, q_chunk: int):
+    """Band-limited causal attention for sliding-window layers (beyond-
+    paper opt, cfg.banded_window_attn): each q chunk attends only its
+    [q0-window, q0+q_chunk) key band — O(S*(window+q_chunk)) FLOPs instead
+    of the flash path's masked O(S^2).
+
+    q: (B,S,K,R,hd) grouped; k/v: (B,Skv,K,hd).
+    """
+    B, S, K, R, hd = q.shape
+    H = K * R
+    qh = q.reshape(B, S, H, hd)
+    k_rep = constrain(jnp.repeat(k, R, axis=2), "batch", "seq", "act_heads",
+                      None)
+    v_rep = constrain(jnp.repeat(v, R, axis=2), "batch", "seq", "act_heads",
+                      None)
+    qc = min(q_chunk, S)
+    band = min(window + qc, S)
+    nq = S // qc
+    qf = (qh.astype(F32) * hd ** -0.5).reshape(B, nq, qc, H, hd)
+
+    def chunk(_, xs):
+        qi, q_blk = xs
+        start = jnp.clip(qi * qc - window, 0, S - band)
+        k_band = lax.dynamic_slice(k_rep, (0, start, 0, 0),
+                                   (B, band, H, hd)).astype(F32)
+        v_band = lax.dynamic_slice(v_rep, (0, start, 0, 0),
+                                   (B, band, H, hd)).astype(F32)
+        q_pos = qi * qc + jnp.arange(qc)
+        k_pos = start + jnp.arange(band)
+        s = jnp.einsum("bqhd,bshd->bhqs", q_blk, k_band)
+        s = s + _mask(q_pos, k_pos, causal=True, window=window)[
+            None, None, :, :]
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqs,bshd->bqhd", p, v_band)
+        return None, o
+
+    _, outs = lax.scan(chunk, None,
+                       (jnp.arange(nq), jnp.moveaxis(qf, 1, 0)))
+    o = jnp.moveaxis(outs, 0, 1).reshape(B, S, H, hd).astype(q.dtype)
+    return o.reshape(B, S, K, R, hd)
+
+
+def blockwise_sdpa(q, k, v, q_pos, *, causal, window, kv_chunk,
+                   kv_pos0: int = 0):
+    """Flash attention over KV chunks, H layout with grouped-KV input.
+
+    q: (B,Sq,K,R,hd); k/v: (B,Skv,K,hd). Positions must be arange (full
+    forward/prefill only — decode uses the naive path over the cache).
+    """
+    B, Sq, K, R, hd = q.shape
+    qh = q.reshape(B, Sq, K * R, hd)
+    k_rep = jnp.repeat(k, R, axis=2)
+    v_rep = jnp.repeat(v, R, axis=2)
+    qh = constrain(qh, "batch", "seq", "act_heads", None)
+    k_rep = constrain(k_rep, "batch", "seq", "act_heads", None)
+    v_rep = constrain(v_rep, "batch", "seq", "act_heads", None)
+    o = _flash_fn(bool(causal), window, int(kv_chunk))(qh, k_rep, v_rep)
+    return o.reshape(B, Sq, K, R, o.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+
+
+def attn_specs(cfg: ModelConfig, spec: LayerSpec):
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    kv_src = cfg.d_model
+    p = {
+        "wq": ParamSpec((D, H, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((kv_src, K, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((kv_src, K, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((H, hd, D), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ParamSpec((H, hd), ("heads", "head_dim"), "zeros")
+        p["bk"] = ParamSpec((K, hd), ("kv_heads", "head_dim"), "zeros")
+        p["bv"] = ParamSpec((K, hd), ("kv_heads", "head_dim"), "zeros")
+    if cfg.qk_norm:
+        p["qn"] = ParamSpec((hd,), (None,), "ones", dtype=F32)
+        p["kn"] = ParamSpec((hd,), (None,), "ones", dtype=F32)
+    return p
+
+
+def attn_cache_specs(cfg: ModelConfig, spec: LayerSpec, batch: int, seq: int,
+                     allow_int8: bool = True):
+    W = min(seq, spec.window) if spec.window else seq
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+    ax = ("cache_batch", "cache_seq", "cache_heads", "head_dim")
+    if cfg.kv_cache_int8 and allow_int8:
+        # int8 payload + per-(token, head) f32 scales: halves the HBM read
+        # per decode step vs bf16 (the dominant decode cost)
+        sax = ("cache_batch", "cache_seq", "cache_heads")
+        return {"k": ParamSpec((batch, W, K, hd), ax, "zeros",
+                               dtype=jnp.int8),
+                "v": ParamSpec((batch, W, K, hd), ax, "zeros",
+                               dtype=jnp.int8),
+                "ks": ParamSpec((batch, W, K), sax, "zeros", dtype=F32),
+                "vs": ParamSpec((batch, W, K), sax, "zeros", dtype=F32)}
+    return {"k": ParamSpec((batch, W, K, hd), ax, "zeros", dtype=cfg.dtype),
+            "v": ParamSpec((batch, W, K, hd), ax, "zeros", dtype=cfg.dtype)}
+
+
+def _kv_quant(x):
+    """x: (B, S, K, hd) -> (int8 payload, (B,S,K) f32 scales)."""
+    s = jnp.max(jnp.abs(x.astype(F32)), axis=-1) / 127.0
+    s = jnp.maximum(s, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(F32) / s[..., None]), -127, 127)
+    return q.astype(jnp.int8), s
+
+
+def _kv_dequant(q, s, dtype):
+    return (q.astype(F32) * s[..., None]).astype(dtype)
+
+
+def attn_apply(cfg: ModelConfig, spec: LayerSpec, params, x, ctx: Ctx,
+               cache=None):
+    """Returns (y, new_cache_or_None)."""
+    B, S, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    R = H // K
+    theta = spec.rope_theta or cfg.rope_theta
+    cross = spec.cross_attn
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+    if cross:
+        src = ctx.enc_out
+        k = jnp.einsum("bsd,dhk->bshk", src, params["wk"]) if src is not None \
+            else None
+        v = jnp.einsum("bsd,dhk->bshk", src, params["wv"]) if src is not None \
+            else None
+    else:
+        k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qkv_bias and k is not None:
+        k, v = k + params["bk"], v + params["bv"]
+    if cfg.qk_norm:
+        q = _rms(q, params["qn"], cfg.norm_eps)
+        if k is not None:
+            k = _rms(k, params["kn"], cfg.norm_eps)
+    if cfg.pos_embed == "rope" and not cross:
+        q = rope(q, ctx.positions, theta)
+        if k is not None:
+            k = rope(k, ctx.positions, theta)
+    q = constrain(q, "batch", "seq", "act_heads", None)
+    q = q.reshape(B, S, K, R, hd)
+
+    new_cache = None
+    if ctx.mode == "decode":
+        if cross:
+            ck, cv = cache["k"], cache["v"]          # cross-cache, static
+            new_cache = cache
+            kp0 = 0
+            mask = _mask(ctx.positions, jnp.arange(ck.shape[1]) + kp0,
+                         causal=False, window=None)
+            o = _sdpa(q, ck, cv, mask)
+        else:
+            Wbuf = cache["k"].shape[1]
+            slot = (ctx.pos % Wbuf).astype(jnp.int32)
+            if cfg.kv_cache_int8:
+                kq, ks = _kv_quant(k)
+                vq, vs = _kv_quant(v)
+                cki = lax.dynamic_update_slice(cache["k"], kq,
+                                               (0, slot, 0, 0))
+                cvi = lax.dynamic_update_slice(cache["v"], vq,
+                                               (0, slot, 0, 0))
+                cks = lax.dynamic_update_slice(cache["ks"], ks, (0, slot, 0))
+                cvs = lax.dynamic_update_slice(cache["vs"], vs, (0, slot, 0))
+                new_cache = {"k": cki, "v": cvi, "ks": cks, "vs": cvs}
+                ck = _kv_dequant(cki, cks, cfg.dtype)
+                cv = _kv_dequant(cvi, cvs, cfg.dtype)
+            else:
+                ck = lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+                cv = lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+                new_cache = {"k": ck, "v": cv}
+            # Ring buffer: slots past min(pos+1, W) hold nothing yet.
+            mask = jnp.broadcast_to(_ring_valid_mask(ctx.pos, Wbuf),
+                                    (B, S, Wbuf))
+            o = _sdpa(q, ck, cv, mask)
+    else:
+        if cross:
+            mask = _mask(ctx.positions,
+                         jnp.arange(k.shape[1]), causal=False, window=None)
+            o = _sdpa(q, k, v, mask)
+            if ctx.build_cache:
+                new_cache = {"k": k, "v": v}
+        else:
+            use_banded = (cfg.banded_window_attn and spec.window
+                          and spec.causal
+                          and S >= 2 * (spec.window + cfg.q_chunk))
+            use_blockwise = (cfg.attn_impl == "blockwise" or
+                             (cfg.attn_impl == "auto" and
+                              S > cfg.blockwise_min_seq))
+            if use_banded:
+                o = banded_sdpa(q, k, v, window=spec.window,
+                                q_chunk=cfg.q_chunk)
+            elif use_blockwise:
+                o = blockwise_sdpa(q, k, v, ctx.positions, causal=spec.causal,
+                                   window=spec.window,
+                                   kv_chunk=min(cfg.kv_chunk, S))
+            else:
+                mask = _mask(ctx.positions, jnp.arange(S), causal=spec.causal,
+                             window=spec.window)
+                qh = q.reshape(B, S, H, hd)
+                k_rep = constrain(jnp.repeat(k, R, axis=2),
+                                  "batch", "seq", "act_heads", None)
+                v_rep = constrain(jnp.repeat(v, R, axis=2),
+                                  "batch", "seq", "act_heads", None)
+                o = _sdpa_h(qh, k_rep, v_rep, mask).reshape(B, S, K, R, hd)
+            if ctx.build_cache:
+                cap = ctx.cache_len or S
+                W = min(spec.window, cap) if spec.window else cap
+                kr_, vr_ = _ring_place(k, W), _ring_place(v, W)
+                if cfg.kv_cache_int8:
+                    kq, ks = _kv_quant(kr_)
+                    vq, vs = _kv_quant(vr_)
+                    new_cache = {"k": kq, "v": vq, "ks": ks, "vs": vs}
+                else:
+                    new_cache = {"k": kr_, "v": vr_}
+    o = o.reshape(B, S, H, hd)
+    y = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+    return constrain(y, "batch", "seq", None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (MiniCPM3 / DeepSeek-V2 style)
+
+
+def _mla_heads(cfg: ModelConfig) -> int:
+    """Optionally pad MLA head count for TP shardability (e.g. 40 -> 48 on
+    a 16-way model axis). Padded heads are inert at zero wo rows; the win
+    is that attention compute shards instead of replicating 16x."""
+    if cfg.pad_heads_to and cfg.pad_heads_to > cfg.n_heads:
+        return cfg.pad_heads_to
+    return cfg.n_heads
+
+
+def mla_specs(cfg: ModelConfig, spec: LayerSpec):
+    D, H = cfg.d_model, _mla_heads(cfg)
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wdq": ParamSpec((D, qr), ("embed", "mla_rank")),
+        "q_norm": ParamSpec((qr,), (None,), "ones", dtype=F32),
+        "wuq": ParamSpec((qr, H, dn + dr), ("mla_rank", "heads", None)),
+        "wdkv": ParamSpec((D, kr + dr), ("embed", None)),
+        "kv_norm": ParamSpec((kr,), (None,), "ones", dtype=F32),
+        "wuk": ParamSpec((kr, H, dn), ("mla_rank", "heads", None)),
+        "wuv": ParamSpec((kr, H, dv), ("mla_rank", "heads", None)),
+        "wo": ParamSpec((H, dv, D), ("heads", None, "embed")),
+    }
+
+
+def mla_cache_specs(cfg: ModelConfig, spec: LayerSpec, batch: int, seq: int):
+    kr, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    return {
+        "ckv": ParamSpec((batch, seq, kr), ("cache_batch", "cache_seq", None),
+                         "zeros", dtype=cfg.dtype),
+        "kr": ParamSpec((batch, seq, dr), ("cache_batch", "cache_seq", None),
+                        "zeros", dtype=cfg.dtype),
+    }
+
+
+def mla_apply(cfg: ModelConfig, spec: LayerSpec, params, x, ctx: Ctx,
+              cache=None):
+    B, S, D = x.shape
+    H = _mla_heads(cfg)
+    kr, dn, dr, dv = (cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                      cfg.v_head_dim)
+    sc = (dn + dr) ** -0.5
+
+    cq = _rms(x @ params["wdq"], params["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["wuq"])   # (B,S,H,dn+dr)
+    qn, qr_ = q[..., :dn], rope(q[..., dn:], ctx.positions, cfg.rope_theta)
+
+    dkv = x @ params["wdkv"]                             # (B,S,kr+dr)
+    ckv = _rms(dkv[..., :kr], params["kv_norm"], cfg.norm_eps)
+    krope = rope(dkv[..., None, kr:], ctx.positions, cfg.rope_theta)[:, :, 0]
+
+    new_cache = None
+    if ctx.mode == "decode":
+        Wbuf = cache["ckv"].shape[1]
+        slot = (ctx.pos % Wbuf).astype(jnp.int32)
+        ckv = lax.dynamic_update_slice(cache["ckv"], ckv, (0, slot, 0))
+        krope = lax.dynamic_update_slice(cache["kr"], krope, (0, slot, 0))
+        new_cache = {"ckv": ckv, "kr": krope}
+    elif ctx.build_cache:
+        cap = ctx.cache_len or S
+        new_cache = {"ckv": _ring_place(ckv, cap),
+                     "kr": _ring_place(krope, cap)}
+
+    if ctx.mode == "decode":
+        # Absorbed form: score/value in rank space — cache stays compressed.
+        q_c = jnp.einsum("bshk,rhk->bshr", qn.astype(F32),
+                         params["wuk"].astype(F32))      # (B,S,H,kr)
+        s = (jnp.einsum("bshr,btr->bhst", q_c, ckv.astype(F32)) +
+             jnp.einsum("bshk,btk->bhst", qr_.astype(F32),
+                        krope.astype(F32))) * sc
+        s = s + _ring_valid_mask(ctx.pos, s.shape[-1])
+        p = jax.nn.softmax(s, axis=-1)
+        o_c = jnp.einsum("bhst,btr->bshr", p, ckv.astype(F32))
+        o = jnp.einsum("bshr,rhk->bshk", o_c,
+                       params["wuv"].astype(F32)).astype(x.dtype)
+    else:
+        # Expanded form for training/prefill.
+        kn = jnp.einsum("btr,rhk->bthk", ckv, params["wuk"])
+        v = jnp.einsum("btr,rhk->bthk", ckv, params["wuv"])
+        kfull = jnp.concatenate(
+            [kn, jnp.broadcast_to(krope[:, :, None, :], kn.shape[:3] + (dr,))],
+            axis=-1)
+        qfull = jnp.concatenate([qn, qr_], axis=-1)
+        qg = qfull.reshape(B, S, H, 1, dn + dr)          # GQA layout, R=1
+        if cfg.attn_impl != "naive" and S > cfg.blockwise_min_seq:
+            o = blockwise_sdpa(qg, kfull, v, ctx.positions, causal=True,
+                               window=None, kv_chunk=min(cfg.kv_chunk, S))
+        else:
+            mask = _mask(ctx.positions, jnp.arange(S), causal=True,
+                         window=None)
+            o = _sdpa(qg, kfull, v, mask)
+        o = o.reshape(B, S, H, dv)  # attention output carries v_head_dim
+    y = jnp.einsum("bshk,hkd->bsd", o.reshape(B, S, H, dv), params["wo"])
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU) and MoE
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: int | None = None):
+    D, Fw = cfg.d_model, d_ff or cfg.d_ff
+    return {"w1": ParamSpec((D, Fw), ("embed", "ffn")),
+            "w3": ParamSpec((D, Fw), ("embed", "ffn")),
+            "w2": ParamSpec((Fw, D), ("ffn", "embed"))}
+
+
+def mlp_apply(cfg: ModelConfig, params, x):
+    h = jax.nn.silu(x @ params["w1"]) * (x @ params["w3"])
+    h = constrain(h, "batch", "seq", "act_ffn")
+    return h @ params["w2"]
+
+
+def _moe_experts(cfg: ModelConfig) -> int:
+    """Optionally pad expert count for expert parallelism (e.g. 60 -> 64 on
+    a 16-way model axis): padded experts are never routed to; the win is
+    that expert compute and dispatch buffers shard on the expert dim, so
+    the w2 partial-sum all-reduce shrinks from (E,C)-space to token space.
+    """
+    if cfg.pad_experts_to and cfg.pad_experts_to > cfg.n_experts:
+        return cfg.pad_experts_to
+    return cfg.n_experts
+
+
+def moe_specs(cfg: ModelConfig, spec: LayerSpec):
+    D, E, Fe = cfg.d_model, cfg.n_experts, cfg.d_expert or cfg.d_ff
+    Ep = _moe_experts(cfg)
+    p = {
+        "router": ParamSpec((D, E), ("embed", None), dtype=F32),
+        "w1": ParamSpec((Ep, D, Fe), ("experts", "embed", "expert_ffn")),
+        "w3": ParamSpec((Ep, D, Fe), ("experts", "embed", "expert_ffn")),
+        "w2": ParamSpec((Ep, Fe, D), ("experts", "expert_ffn", "embed")),
+    }
+    if cfg.d_shared:
+        p["shared"] = mlp_specs(cfg, cfg.d_shared)
+        p["shared_gate"] = ParamSpec((D, 1), ("embed", None), dtype=F32)
+    return p
+
+
+def _moe_expert_compute(params, buf):
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, params["w1"])) * \
+        jnp.einsum("becd,edf->becf", buf, params["w3"])
+    return jnp.einsum("becf,efd->becd", h, params["w2"])
+
+
+def moe_apply_ep(cfg: ModelConfig, params, x, gate, idx, pos_c, keep, C):
+    """Expert-parallel dispatch (beyond-paper opt, cfg.pad_experts_to):
+    shard_map over the model axis — each shard owns Ep/|model| experts,
+    scatters only its tokens, computes locally, and contributes a partial
+    token-space output; one (B,S,D) psum replaces the baseline's
+    (E,C,D)-space all-reduce."""
+    from jax.sharding import PartitionSpec as P
+    from repro.parallel.sharding import _get_mesh
+    mesh = _get_mesh()
+    B, S, D = x.shape
+    Ep = _moe_experts(cfg)
+    nshard = mesh.shape["model"]
+    epp = Ep // nshard
+    bidx = jnp.broadcast_to(jnp.arange(B)[:, None, None], idx.shape)
+
+    cdt = x.dtype
+
+    def body(x, gate, idx, pos_c, keep, sid, w1, w3, w2):
+        # shard id via sharded-iota input: lax.axis_index would lower to
+        # partition-id, which SPMD partitioning of the auto axes rejects
+        m = sid[0]
+        x, w1, w3, w2 = (a.astype(cdt) for a in (x, w1, w3, w2))
+        local = keep & (idx >= m * epp) & (idx < (m + 1) * epp)
+        idx_l = jnp.where(local, idx - m * epp, 0)
+        upd = jnp.where(local[..., None], x[:, :, None, :], 0)
+        buf = jnp.zeros((B, epp, C, D), x.dtype)
+        buf = buf.at[bidx, idx_l, pos_c].add(upd.astype(x.dtype))
+        y_buf = _moe_expert_compute({"w1": w1, "w3": w3, "w2": w2}, buf)
+        y_tok = y_buf[bidx, idx_l, pos_c] * local[..., None]
+        y = (y_tok * (gate.astype(cdt) * keep)[..., None]
+             .astype(y_tok.dtype)).sum(2)
+        # psum in compute dtype (halves the ring bytes); f32 only at the
+        # boundary, where this XLA build requires it
+        return lax.psum(y.astype(cdt), "model").astype(F32)
+
+    f = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P(), P("model"), P("model"),
+                  P("model"), P("model")),
+        out_specs=P(), axis_names={"model"}, check_vma=False)
+    sid = jnp.arange(nshard, dtype=jnp.int32)
+    # f32 at the boundary: bf16 cotangents through a shard_map boundary
+    # CHECK-crash this XLA build ("Invalid binary instruction opcode copy")
+    return f(x.astype(F32), gate, idx, pos_c, keep, sid,
+             params["w1"].astype(F32), params["w3"].astype(F32),
+             params["w2"].astype(F32)).astype(cdt)
+
+
+def moe_apply(cfg: ModelConfig, spec: LayerSpec, params, x, ctx: Ctx):
+    """Token-choice top-k with per-row capacity; returns (y, aux_loss)."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = max(int(cfg.capacity_factor * S * k / E), 1)
+    C = min(C, S * k)
+
+    logits = (x @ params["router"].astype(x.dtype)).astype(F32)  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = lax.top_k(probs, k)                       # (B,S,k)
+    if cfg.name.startswith("mixtral") or cfg.name.startswith("jamba"):
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, slot) in its expert's queue, per batch row
+    oh = jax.nn.one_hot(idx, E, dtype=jnp.int32)          # (B,S,k,E)
+    ohf = oh.reshape(B, S * k, E)
+    pos = jnp.cumsum(ohf, axis=1) - ohf                   # exclusive prefix
+    pos = (pos * ohf).sum(-1).reshape(B, S, k)            # (B,S,k)
+    keep = pos < C
+    pos_c = jnp.where(keep, pos, 0)
+
+    from repro.parallel.sharding import _get_mesh
+    if cfg.pad_experts_to and _get_mesh() is not None:
+        y = moe_apply_ep(cfg, params, x, gate, idx, pos_c, keep, C)
+    else:
+        # dispatch: buf[b, e, c] = x[b, s]  (dropped tokens contribute
+        # nothing; padded experts — see _moe_experts — are never indexed)
+        Ep = _moe_experts(cfg)
+        bidx = jnp.broadcast_to(jnp.arange(B)[:, None, None], idx.shape)
+        buf = jnp.zeros((B, Ep, C, D), x.dtype)
+        upd = jnp.where(keep[..., None], x[:, :, None, :], 0).astype(x.dtype)
+        buf = buf.at[bidx, idx, pos_c].add(upd.reshape(B, S, k, D)[..., :])
+        buf = constrain(buf, "batch", "experts", None, None)
+        y_buf = _moe_expert_compute(params, buf)
+        y_buf = constrain(y_buf, "batch", "experts", None, None)
+        y_tok = y_buf[bidx, idx, pos_c]                   # (B,S,k,D)
+        y = (y_tok * (gate * keep)[..., None].astype(y_tok.dtype)).sum(2)
+
+    if cfg.d_shared:
+        sg = jax.nn.sigmoid((x @ params["shared_gate"].astype(x.dtype))
+                            .astype(F32)).astype(x.dtype)
+        y = y + sg * mlp_apply(cfg, params["shared"], x)
+
+    # Switch-style load-balance aux loss
+    me = probs.mean(axis=(0, 1))                          # (E,)
+    ce = (oh.sum(2).reshape(B * S, E).astype(F32)).mean(0) / k
+    aux = E * jnp.sum(me * ce)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) mixer
+
+
+def mamba2_specs(cfg: ModelConfig, spec: LayerSpec):
+    D = cfg.d_model
+    din, N, Hs = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = din + 2 * N
+    zxbcdt = 2 * din + 2 * N + Hs
+    return {
+        "in_proj": ParamSpec((D, zxbcdt), ("embed", "act_ssm_inner")),
+        "conv_w": ParamSpec((cfg.ssm_conv, conv_dim), ("conv", "ssm_inner")),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), "zeros"),
+        "A_log": ParamSpec((Hs,), ("ssm_heads",), "zeros", dtype=F32),
+        "D": ParamSpec((Hs,), ("ssm_heads",), "ones", dtype=F32),
+        "dt_bias": ParamSpec((Hs,), ("ssm_heads",), "zeros", dtype=F32),
+        "norm": ParamSpec((din,), ("ssm_inner",), "ones", dtype=F32),
+        "out_proj": ParamSpec((din, D), ("ssm_inner", "embed")),
+    }
+
+
+def mamba2_cache_specs(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                       seq: int):
+    din, N = cfg.d_inner, cfg.ssm_state
+    Hs, P = cfg.ssm_heads, cfg.ssm_head_dim
+    return {
+        "h": ParamSpec((batch, Hs, P, N),
+                       ("cache_batch", "ssm_heads", None, None), "zeros",
+                       dtype=F32),
+        "conv": ParamSpec((batch, cfg.ssm_conv - 1, din + 2 * N),
+                          ("cache_batch", None, "ssm_inner"), "zeros",
+                          dtype=cfg.dtype),
+    }
+
+
+def _segsum(x):
+    """x: (..., L) -> (..., L, L) lower-tri pairwise segment sums."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def _ssd_chunked(xh, dt, a, b, c, chunk, h0=None):
+    """SSD (state-space duality) chunked scan.
+
+    xh: (B,S,H,P) inputs; dt: (B,S,H) >0; a: (H,) <0; b,c: (B,S,N).
+    Returns y: (B,S,H,P), h_final: (B,H,P,N).
+    """
+    B, S, H, P = xh.shape
+    N = b.shape[-1]
+    nc = S // chunk
+    L = chunk
+    dA = (dt * a).reshape(B, nc, L, H)                    # log-decay per step
+    xd = (xh * dt[..., None]).reshape(B, nc, L, H, P)     # dt-discretized in
+    bc = b.reshape(B, nc, L, N)
+    cc = c.reshape(B, nc, L, N)
+    dA_cs = jnp.cumsum(dA, axis=2)                        # (B,nc,L,H)
+
+    # intra-chunk (diagonal blocks)
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(dA, 3, 2)))       # (B,nc,H,L,L)
+    att = jnp.einsum("bcln,bcmn->bclm", cc, bc)           # (B,nc,L,L)
+    y_d = jnp.einsum("bchlm,bclm,bcmhp->bclhp",
+                     Lmat, att, xd.astype(F32))
+
+    # per-chunk terminal states
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)   # (B,nc,L,H)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn",
+                        bc, decay_states, xd.astype(F32))  # (B,nc,H,P,N)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])             # (B,nc,H)
+    def scan_body(h, xs):
+        st, dec = xs
+        h_new = h * dec[:, :, None, None] + st
+        return h_new, h
+    h_init = jnp.zeros((B, H, P, N), F32) if h0 is None else h0.astype(F32)
+    h_last, h_prevs = lax.scan(
+        scan_body, h_init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                 # (B,nc,H,P,N)
+
+    # contribution of carried-in state
+    y_o = jnp.einsum("bcln,bchpn,bclh->bclhp",
+                     cc, h_prevs, jnp.exp(dA_cs))
+    y = (y_d + y_o).reshape(B, S, H, P).astype(xh.dtype)
+    return y, h_last
+
+
+def mamba2_apply(cfg: ModelConfig, spec: LayerSpec, params, x, ctx: Ctx,
+                 cache=None):
+    B, S, D = x.shape
+    din, N = cfg.d_inner, cfg.ssm_state
+    Hs, P = cfg.ssm_heads, cfg.ssm_head_dim
+    conv_dim = din + 2 * N
+
+    zxbcdt = x @ params["in_proj"]
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din:din + conv_dim]
+    dt_raw = zxbcdt[..., din + conv_dim:]                 # (B,S,Hs)
+
+    new_cache = None
+    if ctx.mode == "decode":
+        # conv ring: window = [conv_state, xbc]
+        win = jnp.concatenate([cache["conv"].astype(xbc.dtype), xbc], axis=1)
+        conv_out = (win * params["conv_w"].astype(win.dtype)).sum(1,
+                                                                  keepdims=True)
+        conv_out = conv_out + params["conv_b"].astype(win.dtype)
+        xbc_c = jax.nn.silu(conv_out)                     # (B,1,conv_dim)
+        new_conv = win[:, 1:, :]
+    else:
+        pad = jnp.pad(xbc, ((0, 0), (cfg.ssm_conv - 1, 0), (0, 0)))
+        # depthwise causal conv via stacked shifts (d_conv is tiny: 4)
+        conv_out = sum(
+            pad[:, i:i + S, :] * params["conv_w"][i].astype(xbc.dtype)
+            for i in range(cfg.ssm_conv))
+        conv_out = conv_out + params["conv_b"].astype(xbc.dtype)
+        xbc_c = jax.nn.silu(conv_out)
+        new_conv = None
+        if ctx.build_cache:
+            new_conv = xbc[:, S - (cfg.ssm_conv - 1):, :]
+
+    xs = xbc_c[..., :din].reshape(B, S, Hs, P)
+    bmat = xbc_c[..., din:din + N]
+    cmat = xbc_c[..., din + N:]
+    dt = jax.nn.softplus(dt_raw.astype(F32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])                         # (Hs,) < 0
+
+    if ctx.mode == "decode":
+        h = cache["h"]
+        dec = jnp.exp(dt[:, 0] * a)                       # (B,Hs)
+        upd = jnp.einsum("bhp,bn->bhpn",
+                         (xs[:, 0].astype(F32) * dt[:, 0][..., None]),
+                         bmat[:, 0].astype(F32))
+        h_new = h * dec[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0].astype(F32), h_new)
+        y = y[:, None]                                    # (B,1,Hs,P)
+        new_cache = {"h": h_new, "conv": new_conv.astype(cache["conv"].dtype)}
+    else:
+        # pad S up to a chunk multiple; dt=0 padding steps are identity for
+        # the state (decay=1, zero input) and their outputs are sliced off
+        chunk = min(cfg.ssm_chunk, S)
+        Sp = ((S + chunk - 1) // chunk) * chunk
+        if Sp != S:
+            padw = ((0, 0), (0, Sp - S)) + ((0, 0),) * 10
+            xs_p = jnp.pad(xs, padw[:xs.ndim])
+            dt_p = jnp.pad(dt, padw[:dt.ndim])
+            b_p = jnp.pad(bmat, padw[:bmat.ndim])
+            c_p = jnp.pad(cmat, padw[:cmat.ndim])
+        else:
+            xs_p, dt_p, b_p, c_p = xs, dt, bmat, cmat
+        y, h_last = _ssd_chunked(xs_p, dt_p, a, b_p, c_p, chunk, h0=None)
+        y = y[:, :S]
+        if ctx.build_cache:
+            new_cache = {"h": h_last, "conv": new_conv}
+    y = y + xs.astype(F32) * params["D"][:, None]
+    y = y.reshape(B, S, din).astype(x.dtype)
+    y = y * jax.nn.silu(z)                                # gated
+    y = _rms(y, params["norm"], cfg.norm_eps)
+    return y @ params["out_proj"], new_cache

@@ -1,0 +1,343 @@
+"""Model assembly: block-pattern decoder LM / encoder-decoder, with
+scan-over-stacked-layers, caches, loss, prefill and decode entry points.
+
+Parameter tree layout:
+  {"embed", "pos_table"?, "unembed"?, "final_norm",
+   "dec": (per-group tuple of per-pattern-element param trees, stacked R),
+   "enc"?: {"groups": ..., "final_norm", "pos_table"}}
+Cache tree layout mirrors "dec": (groups)(elements){...arrays stacked R...}.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import layers as L
+from repro.models.params import ParamSpec, stack_specs
+from repro.parallel.sharding import constrain
+
+F32 = jnp.float32
+AUX_COEF = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Block (one pattern element) = mixer + [cross-attn] + ffn with pre-norms
+
+
+def block_specs(cfg: ModelConfig, spec: LayerSpec):
+    p: dict[str, Any] = {}
+    if spec.mixer == "attn":
+        p["mixer_norm"] = L.norm_specs(cfg, cfg.d_model)
+        p["mixer"] = L.attn_specs(cfg, spec)
+    elif spec.mixer == "mla":
+        p["mixer_norm"] = L.norm_specs(cfg, cfg.d_model)
+        p["mixer"] = L.mla_specs(cfg, spec)
+    elif spec.mixer == "mamba2":
+        p["mixer_norm"] = L.norm_specs(cfg, cfg.d_model)
+        p["mixer"] = L.mamba2_specs(cfg, spec)
+    if spec.cross_attn:
+        p["xattn_norm"] = L.norm_specs(cfg, cfg.d_model)
+        p["xattn"] = L.attn_specs(cfg, spec)
+    if spec.ffn == "mlp":
+        p["ffn_norm"] = L.norm_specs(cfg, cfg.d_model)
+        p["mlp"] = L.mlp_specs(cfg)
+    elif spec.ffn == "moe":
+        p["ffn_norm"] = L.norm_specs(cfg, cfg.d_model)
+        p["moe"] = L.moe_specs(cfg, spec)
+    return p
+
+
+def block_cache_specs(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                      seq: int):
+    c: dict[str, Any] = {}
+    if spec.mixer == "attn":
+        c["mixer"] = L.attn_cache_specs(cfg, spec, batch, seq)
+    elif spec.mixer == "mla":
+        c["mixer"] = L.mla_cache_specs(cfg, spec, batch, seq)
+    elif spec.mixer == "mamba2":
+        c["mixer"] = L.mamba2_cache_specs(cfg, spec, batch, seq)
+    if spec.cross_attn:
+        xs = LayerSpec(mixer="attn", cross_attn=True)
+        # cross caches are enc_seq-sized (small): keep full precision
+        c["xattn"] = L.attn_cache_specs(cfg, xs, batch, cfg.enc_seq,
+                                        allow_int8=False)
+    return c
+
+
+def block_apply(cfg: ModelConfig, spec: LayerSpec, params, x, ctx: L.Ctx,
+                cache):
+    aux = jnp.zeros((), F32)
+    new_cache: dict[str, Any] = {}
+    if spec.mixer != "none":
+        h = L.norm_apply(cfg, params["mixer_norm"], x)
+        if spec.mixer == "attn":
+            h, nc = L.attn_apply(cfg, spec, params["mixer"], h, ctx,
+                                 (cache or {}).get("mixer"))
+        elif spec.mixer == "mla":
+            h, nc = L.mla_apply(cfg, spec, params["mixer"], h, ctx,
+                                (cache or {}).get("mixer"))
+        else:
+            h, nc = L.mamba2_apply(cfg, spec, params["mixer"], h, ctx,
+                                   (cache or {}).get("mixer"))
+        x = x + h
+        if nc is not None:
+            new_cache["mixer"] = nc
+    if spec.cross_attn:
+        xs_spec = LayerSpec(mixer="attn", cross_attn=True)
+        h = L.norm_apply(cfg, params["xattn_norm"], x)
+        h, nc = L.attn_apply(cfg, xs_spec, params["xattn"], h, ctx,
+                             (cache or {}).get("xattn"))
+        x = x + h
+        if nc is not None:
+            new_cache["xattn"] = nc
+    if spec.ffn == "mlp":
+        h = L.norm_apply(cfg, params["ffn_norm"], x)
+        x = x + L.mlp_apply(cfg, params["mlp"], h)
+    elif spec.ffn == "moe":
+        h = L.norm_apply(cfg, params["ffn_norm"], x)
+        h, a = L.moe_apply(cfg, spec, params["moe"], h, ctx)
+        x = x + h
+        aux = aux + a
+    return x, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Groups: lax.scan over stacked pattern repeats
+
+
+def _run_groups(cfg: ModelConfig, groups, gparams, x, ctx: L.Ctx, gcaches):
+    """gparams: tuple per group of tuple per element; gcaches aligned or None."""
+    aux = jnp.zeros((), F32)
+    new_caches = []
+    for gi, (pattern, R) in enumerate(groups):
+        eparams = gparams[gi]
+        ecache = gcaches[gi] if gcaches is not None else tuple(
+            {} for _ in pattern)
+
+        # checkpoint at BLOCK granularity: a multi-element pattern (gemma3's
+        # 5:1, jamba's 8-layer block) must not hold all elements' backward
+        # intermediates live at once.
+        remat_on = (cfg.remat != "none" and ctx.mode == "full"
+                    and not ctx.build_cache)
+
+        def apply_one(spec, ep_i, xx, ec_i):
+            def f(ep_i, xx):
+                return block_apply(cfg, spec, ep_i, xx, ctx,
+                                   ec_i if ec_i else None)
+            if remat_on:
+                if cfg.remat == "dots":
+                    f = jax.checkpoint(
+                        f, policy=jax.checkpoint_policies.dots_saveable)
+                else:
+                    f = jax.checkpoint(f)
+            return f(ep_i, xx)
+
+        def body(carry, xs, pattern=pattern):
+            xx, aa = carry
+            ep, ec = xs
+            ncs = []
+            for i, spec in enumerate(pattern):
+                xx, a, nc = apply_one(spec, ep[i], xx, ec[i])
+                aa = aa + a
+                ncs.append(nc)
+            return (xx, aa), tuple(ncs)
+
+        if R == 1:
+            # unrolled group: no while loop (required for shard_map layers;
+            # also removes loop overhead for singleton groups)
+            ep0 = jax.tree_util.tree_map(lambda a: a[0], eparams)
+            ec0 = jax.tree_util.tree_map(lambda a: a[0], ecache)
+            (x, aux), nc0 = body((x, aux), (ep0, ec0))
+            nc = jax.tree_util.tree_map(lambda a: a[None], nc0)
+        else:
+            (x, aux), nc = lax.scan(body, (x, aux), (eparams, ecache))
+        new_caches.append(nc)
+    return x, aux, tuple(new_caches)
+
+
+# ---------------------------------------------------------------------------
+# Full model specs
+
+
+def _apply_dtype(tree, dtype):
+    """Parameter specs default to bf16; honor cfg.dtype (tiny configs train
+    in f32). Explicit f32 specs (norm scales, routers) stay f32."""
+    from repro.models.params import is_spec
+    return jax.tree_util.tree_map(
+        lambda s: s._replace(dtype=dtype) if s.dtype == jnp.bfloat16 else s,
+        tree, is_leaf=is_spec)
+
+
+def model_specs(cfg: ModelConfig):
+    D = cfg.d_model
+    p: dict[str, Any] = {
+        "embed": ParamSpec((cfg.padded_vocab, D), ("vocab", "embed"),
+                           scale=0.02),
+        "final_norm": L.norm_specs(cfg, D),
+        "dec": tuple(
+            tuple(stack_specs(block_specs(cfg, spec), R) for spec in pattern)
+            for pattern, R in cfg.groups),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = ParamSpec((D, cfg.padded_vocab), ("embed", "vocab"))
+    if cfg.pos_embed == "learned":
+        p["pos_table"] = ParamSpec((cfg.max_seq, D), (None, "embed"),
+                                   scale=0.02)
+    if cfg.is_encdec:
+        p["enc"] = {
+            "groups": tuple(
+                tuple(stack_specs(block_specs(cfg, spec), R)
+                      for spec in pattern)
+                for pattern, R in cfg.enc_groups),
+            "final_norm": L.norm_specs(cfg, D),
+            "pos_table": ParamSpec((cfg.enc_seq, D), (None, "embed"),
+                                   scale=0.02),
+        }
+    return _apply_dtype(p, cfg.dtype)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq: int):
+    return tuple(
+        tuple(stack_specs(block_cache_specs(cfg, spec, batch, seq), R)
+              for spec in pattern)
+        for pattern, R in cfg.groups)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+
+
+def _embed_tokens(cfg, params, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    return x
+
+
+def _unembed(cfg, params, x):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = x @ params["unembed"]
+    logits = logits.astype(F32)
+    logits = constrain(logits, "batch", "seq", "act_vocab")
+    # mask vocab padding
+    pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+    logits = jnp.where(pad, -1e9, logits)
+    return constrain(logits, "batch", "seq", "act_vocab")
+
+
+def _encode(cfg: ModelConfig, params, enc_embeds):
+    B, Se, D = enc_embeds.shape
+    x = enc_embeds.astype(cfg.dtype) + params["enc"]["pos_table"][None, :Se]\
+        .astype(cfg.dtype)
+    pos = jnp.broadcast_to(jnp.arange(Se), (B, Se))
+    ctx = L.Ctx("full", pos, None, None, None, False)
+    x, _, _ = _run_groups(cfg, cfg.enc_groups, params["enc"]["groups"], x,
+                          ctx, None)
+    return L.norm_apply(cfg, params["enc"]["final_norm"], x)
+
+
+def forward_hidden(cfg: ModelConfig, params, batch, *,
+                   build_cache: bool = False, cache_len: int | None = None):
+    """Teacher-forcing trunk. batch: tokens (B,S) [+ vision_embeds /
+    enc_embeds]. Returns (hidden, aux, cache_or_None)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = _embed_tokens(cfg, params, tokens)
+    if cfg.n_vision_tokens:
+        ve = batch["vision_embeds"].astype(cfg.dtype)
+        x = lax.dynamic_update_slice(x, ve, (0, 0, 0))
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    if cfg.pos_embed == "learned":
+        x = x + params["pos_table"][None, :S].astype(cfg.dtype)
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = _encode(cfg, params, batch["enc_embeds"])
+    x = constrain(x, "batch", "seq", None)
+    ctx = L.Ctx("full", positions, None, cache_len, enc_out, build_cache)
+    x, aux, caches = _run_groups(cfg, cfg.groups, params["dec"], x, ctx,
+                                 None)
+    x = L.norm_apply(cfg, params["final_norm"], x)
+    return x, aux, (caches if build_cache else None)
+
+
+def forward(cfg: ModelConfig, params, batch, *, build_cache: bool = False):
+    x, aux, caches = forward_hidden(cfg, params, batch,
+                                    build_cache=build_cache)
+    return _unembed(cfg, params, x), aux, caches
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    logits, aux, _ = forward(cfg, params, batch)
+    labels = batch["labels"]
+    # Shard-local cross-entropy: never gathers the vocab axis (the gather
+    # form take_along_axis would all-gather (B,S,V) f32 per chip).
+    lse = jax.nn.logsumexp(logits, axis=-1)                      # (B,S)
+    vid = jnp.arange(cfg.padded_vocab, dtype=jnp.int32)
+    sel = constrain(vid == labels[..., None], "batch", "seq", "act_vocab")
+    picked = jnp.sum(jnp.where(sel, logits, 0.0), axis=-1)
+    nll = lse - picked
+    loss = nll.mean() + AUX_COEF * aux
+    return loss, {"nll": nll.mean(), "aux": aux}
+
+
+def prefill(cfg: ModelConfig, params, batch, cache_len: int | None = None):
+    """Returns (last_token_logits, cache). Unembeds ONLY the last position —
+    full-sequence logits at 32k would be ~TBs. cache_len sizes the decode
+    ring buffers (defaults to the prompt length, per the dry-run shapes)."""
+    x, _, cache = forward_hidden(cfg, params, batch, build_cache=True,
+                                 cache_len=cache_len)
+    logits = _unembed(cfg, params, x[:, -1:])
+    return logits[:, -1], cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """One decode step. tokens: (B,1) int32; pos: scalar int32 (absolute).
+    Returns (logits (B,V), new_cache)."""
+    B = tokens.shape[0]
+    x = _embed_tokens(cfg, params, tokens)
+    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+    if cfg.pos_embed == "learned":
+        x = x + params["pos_table"][pos][None, None].astype(cfg.dtype)
+    ctx = L.Ctx("decode", positions, pos, None, None, False)
+    x, _, new_cache = _run_groups(cfg, cfg.groups, params["dec"], x, ctx,
+                                  cache)
+    x = L.norm_apply(cfg, params["final_norm"], x)
+    logits = _unembed(cfg, params, x)
+    return logits[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Analytics (for roofline MODEL_FLOPS)
+
+
+def param_counts(cfg: ModelConfig) -> tuple[int, int]:
+    """(total, active) parameter counts; active scales routed experts k/E."""
+    import jax.tree_util as jtu
+    from repro.models.params import is_spec
+    specs = model_specs(cfg)
+    total = active = 0
+    for path, s in jtu.tree_flatten_with_path(specs, is_leaf=is_spec)[0]:
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n
+        name = "/".join(str(p) for p in path)
+        if "moe" in name and ("'w1'" in name or "'w2'" in name
+                              or "'w3'" in name):
+            active += n * cfg.top_k // max(cfg.n_experts, 1)
+        else:
+            active += n
+    return total, active
+
+
+def model_flops(cfg: ModelConfig, kind: str, seq: int, batch: int) -> float:
+    """6·N_active·tokens (train) or 2·N_active·tokens (inference)."""
+    _, active = param_counts(cfg)
+    tokens = seq * batch if kind in ("train", "prefill") else batch
+    mult = 6 if kind == "train" else 2
+    return float(mult) * active * tokens

@@ -1,0 +1,89 @@
+"""Parameter spec system.
+
+Modules describe their parameters once as trees of :class:`ParamSpec`
+(shape + logical axes + init). From the same tree we derive
+  - ``jax.ShapeDtypeStruct`` stand-ins for the dry-run (never allocated),
+  - initialized arrays for smoke tests / real training,
+  - ``PartitionSpec``s via ``parallel.sharding.tree_pspecs``.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ParamSpec(NamedTuple):
+    shape: tuple[int, ...]
+    axes: tuple[Any, ...]            # logical axis names (len == len(shape))
+    init: str = "normal"             # normal | zeros | ones | scaled
+    scale: float | None = None       # stddev override for normal init
+    dtype: Any = jnp.bfloat16
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_structs(spec_tree):
+    """ShapeDtypeStructs for the dry-run — no device allocation."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree,
+        is_leaf=is_spec)
+
+
+def _leaf_key(key: jax.Array, path) -> jax.Array:
+    """Deterministic per-leaf key derived from the tree path."""
+    name = "/".join(str(p) for p in path)
+    h = int.from_bytes(hashlib.sha256(name.encode()).digest()[:4], "little")
+    return jax.random.fold_in(key, h)
+
+
+def init_tree(spec_tree, key: jax.Array):
+    """Materialize parameters. Normal init stddev defaults to fan-in^-1/2."""
+
+    def one(path, s: ParamSpec):
+        k = _leaf_key(key, path)
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, s.dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, s.dtype)
+        if s.init == "normal" or s.init == "scaled":
+            fan_in = s.shape[0] if len(s.shape) >= 2 else max(s.shape[-1], 1)
+            std = s.scale if s.scale is not None else fan_in ** -0.5
+            return (jax.random.normal(k, s.shape, jnp.float32) * std).astype(s.dtype)
+        raise ValueError(f"unknown init {s.init!r}")
+
+    return jax.tree_util.tree_map_with_path(one, spec_tree, is_leaf=is_spec)
+
+
+def param_count(spec_tree) -> int:
+    leaves = jax.tree_util.tree_leaves(spec_tree, is_leaf=is_spec)
+    n = 0
+    for s in leaves:
+        c = 1
+        for d in s.shape:
+            c *= d
+        n += c
+    return n
+
+
+def param_bytes(spec_tree) -> int:
+    leaves = jax.tree_util.tree_leaves(spec_tree, is_leaf=is_spec)
+    n = 0
+    for s in leaves:
+        c = 1
+        for d in s.shape:
+            c *= d
+        n += c * jnp.dtype(s.dtype).itemsize
+    return n
+
+
+def stack_specs(spec_tree, n: int, axis_name: str = "layers"):
+    """Prepend a stacked (scan) dimension of size n to every spec."""
+    return jax.tree_util.tree_map(
+        lambda s: ParamSpec((n,) + s.shape, (axis_name,) + s.axes,
+                            s.init, s.scale, s.dtype),
+        spec_tree, is_leaf=is_spec)

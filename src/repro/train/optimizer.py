@@ -1,0 +1,93 @@
+"""AdamW + cosine schedule + global-norm clipping, pure JAX.
+
+Optimizer state (m, v) is kept in f32 with the *same logical axes* as the
+parameters, so FSDP sharding of the optimizer state falls out of the same
+rule table (ZeRO-style: 8 bytes/param spread over the data axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec, is_spec
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    clip_norm: float = 1.0
+
+
+def opt_state_specs(param_specs):
+    """Specs for (m, v): same shapes/axes as params, f32, zero-init."""
+    def f32spec(s: ParamSpec) -> ParamSpec:
+        return ParamSpec(s.shape, s.axes, "zeros", None, F32)
+    mk = lambda: jax.tree_util.tree_map(f32spec, param_specs, is_leaf=is_spec)
+    return {"m": mk(), "v": mk()}
+
+
+def init_opt_state(params):
+    z = lambda: jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, F32), params)
+    return {"m": z(), "v": z()}
+
+
+def schedule(cfg: OptConfig, step):
+    step = step.astype(F32)
+    warm = cfg.lr * (step + 1) / max(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps) /
+                 max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac * cfg.lr + (1 - cfg.min_lr_frac) * cfg.lr * 0.5 * (
+        1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree):
+    sq = sum(jnp.sum(jnp.square(x.astype(F32)))
+             for x in jax.tree_util.tree_leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def adamw_update(cfg: OptConfig, params, grads, state, step):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    t = step.astype(F32) + 1.0
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(F32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        step_ = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * \
+            p.astype(F32)
+        newp = (p.astype(F32) - lr * step_).astype(p.dtype)
+        return newp, m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v}, {"grad_norm": gnorm, "lr": lr}

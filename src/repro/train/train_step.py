@@ -1,0 +1,40 @@
+"""Train / prefill / decode step builders.
+
+``make_train_step`` is the synchronous baseline (gradient mean over the full
+batch — GSPMD inserts the hierarchical all-reduce). The budgeted cohort
+variant (the paper's remote-budget idea applied to cross-pod sync) lives in
+``repro.parallel.collectives``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.train.optimizer import OptConfig, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig):
+    def train_step(params, opt_state, batch, step):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: M.loss_fn(cfg, p, batch), has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw_update(
+            opt_cfg, params, grads, opt_state, step)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return M.prefill(cfg, params, batch)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, cache, tokens, pos):
+        return M.decode_step(cfg, params, cache, tokens, pos)
+    return decode_step

@@ -1,0 +1,138 @@
+"""Dry-run machinery, exercised in a subprocess (it forces 512 host devices;
+the test session must keep seeing 1). Also covers hlo_analysis loop
+accounting and the budgeted cohort-collective programs on a multi-pod mesh.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+ENV.pop("JAX_PLATFORMS", None)
+
+
+def run_py(code: str, timeout=560):
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, env=ENV,
+                          timeout=timeout)
+
+
+def test_hlo_analysis_loop_accounting():
+    r = run_py("""
+        import os
+        os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+        import jax, jax.numpy as jnp
+        from repro.launch.hlo_analysis import analyze_program
+        def f(x, ws):
+            def body(c, w):
+                return jnp.tanh(c @ w), None
+            return jax.lax.scan(body, x, ws)[0]
+        x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+        ws = jax.ShapeDtypeStruct((12, 256, 256), jnp.float32)
+        c = jax.jit(f).lower(x, ws).compile()
+        a = analyze_program(c.as_text(), 1)
+        exp = 12 * 2 * 256**3
+        assert abs(a['flops'] / exp - 1) < 0.01, a
+        print('OK')
+    """)
+    assert "OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_collective_parse_on_sharded_program():
+    r = run_py("""
+        import os
+        os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.hlo_analysis import parse_collectives
+        mesh = jax.make_mesh((8,), ('d',))
+        sh = NamedSharding(mesh, P('d'))
+        def f(x):
+            return x.sum()   # cross-device reduction -> all-reduce
+        c = jax.jit(f, in_shardings=sh).lower(
+            jax.ShapeDtypeStruct((64, 32), jnp.float32)).compile()
+        st = parse_collectives(c.as_text(), 8)
+        assert st.raw_bytes > 0, st.summary()
+        kinds = set(o['kind'] for o in st.ops)
+        assert 'all-reduce' in kinds or 'all-gather' in kinds, kinds
+        print('OK')
+    """)
+    assert "OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_dryrun_cell_tiny_mesh():
+    """Full dry-run path (lower+compile+analysis) for one small arch on a
+    512-way production mesh in a subprocess."""
+    r = run_py("""
+        from repro.launch.dryrun import run_cell
+        rec = run_cell('whisper-base', 'decode_32k', 'single',
+                       '/tmp/dryrun_test')
+        assert rec['status'] == 'ok', rec.get('error', rec)
+        assert rec['flops_per_chip'] > 0
+        assert rec['roofline']['dominant'] in (
+            'compute_s', 'memory_s', 'collective_link_s')
+        print('OK')
+    """)
+    assert "OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_budgeted_cohort_steps_multi_pod():
+    """local_accum_step must contain NO cross-pod collectives; sync_step
+    must contain the cross-pod reduction. Budget=1 equals the sync baseline
+    by construction (acc mean over one microbatch)."""
+    r = run_py("""
+        import os
+        os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_config
+        from repro.models import model as M
+        from repro.models.params import init_tree
+        from repro.parallel.collectives import make_budgeted_steps
+        from repro.train.optimizer import OptConfig, init_opt_state
+        from repro.train.train_step import make_train_step
+
+        cfg = get_config('yi-9b').tiny()
+        mesh = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'))
+        params = init_tree(M.model_specs(cfg), jax.random.key(0))
+        opt_cfg = OptConfig(lr=1e-2, warmup_steps=0, total_steps=10,
+                            weight_decay=0.0)
+        opt = init_opt_state(params)
+        init_acc, local_step, sync_step, sync_comp = make_budgeted_steps(
+            cfg, opt_cfg, mesh, n_pod=2)
+        B, S = 4, 16
+        toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab,
+                                  jnp.int32)
+        batch_pod = {'tokens': toks.reshape(2, 2, S),
+                     'labels': toks.reshape(2, 2, S)}
+        with mesh:
+            acc0 = init_acc(params)
+            acc1, loss = jax.jit(local_step)(params, acc0, batch_pod)
+            p2, o2, acc2, m = jax.jit(sync_step)(
+                params, opt, acc1, jnp.asarray(0, jnp.int32), 1)
+        # equivalence with the plain synchronous step on the same batch
+        plain = make_train_step(cfg, opt_cfg)
+        batch = {'tokens': toks, 'labels': toks}
+        p1, o1, m1 = jax.jit(plain)(params, init_opt_state(params), batch,
+                                    jnp.asarray(0, jnp.int32))
+        import numpy as np
+        d = max(float(jnp.abs(a.astype(jnp.float32) -
+                              b.astype(jnp.float32)).max())
+                for a, b in zip(jax.tree_util.tree_leaves(p1),
+                                jax.tree_util.tree_leaves(p2)))
+        assert d < 2e-3, d   # reduction-order noise after one opt step
+        # the sync program must reduce across pods: lower against the
+        # pod-sharded accumulator local_step produced
+        with mesh:
+            lowered = jax.jit(sync_step).lower(params, opt, acc1,
+                                               jnp.asarray(0, jnp.int32), 1)
+            txt = lowered.compile().as_text()
+        assert ('all-reduce' in txt or 'reduce-scatter' in txt
+                or 'all-gather' in txt), txt[:2000]
+        print('OK', d)
+    """)
+    assert "OK" in r.stdout, r.stdout + r.stderr

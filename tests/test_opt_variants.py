@@ -1,0 +1,127 @@
+"""Beyond-paper optimization paths must be numerically exact vs baselines:
+banded window attention, MLA head padding, expert-parallel MoE."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import layers as L
+from repro.models.params import init_tree
+
+
+def test_banded_matches_masked_sdpa():
+    key = jax.random.key(0)
+    B, S, K, R, hd = 2, 96, 2, 2, 8
+    q = jax.random.normal(jax.random.fold_in(key, 1), (B, S, K, R, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (B, S, K, hd))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    for window, qc in ((16, 16), (8, 32)):
+        o1 = L.banded_sdpa(q, k, v, window=window, q_chunk=qc)
+        o2 = L._sdpa(q, k, v, L._mask(pos, jnp.arange(S), causal=True,
+                                      window=window))
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   atol=3e-5, rtol=3e-5)
+
+        def f1(q, k, v):
+            return L.banded_sdpa(q, k, v, window=window, q_chunk=qc).sum()
+
+        def f2(q, k, v):
+            m = L._mask(pos, jnp.arange(S), causal=True, window=window)
+            return L._sdpa(q, k, v, m).sum()
+        g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=3e-5, rtol=3e-5)
+
+
+def test_banded_config_path_matches_flash():
+    """gemma3 tiny with banded_window_attn on == off (same logits)."""
+    from repro.models import model as M
+    base = dataclasses.replace(get_config("gemma3-1b").tiny(),
+                               blockwise_min_seq=8, q_chunk=8)
+    banded = dataclasses.replace(base, banded_window_attn=True)
+    params = init_tree(M.model_specs(base), jax.random.key(0))
+    batch = {"tokens": jnp.ones((2, 64), jnp.int32) * 3,
+             "labels": jnp.ones((2, 64), jnp.int32)}
+    l0, _, _ = M.forward(base, params, batch)
+    l1, _, _ = M.forward(banded, params, batch)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1), atol=2e-4,
+                               rtol=2e-4)
+
+
+def test_mla_head_padding_shapes():
+    cfg = get_config("minicpm3-4b").tiny()
+    padded = dataclasses.replace(cfg, pad_heads_to=8)
+    spec = cfg.groups[0][0][0]
+    p = L.mla_specs(padded, spec)
+    assert p["wuq"].shape[1] == 8
+    assert p["wo"].shape[0] == 8
+    # forward still runs and is finite
+    params = init_tree(p, jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model))
+    ctx = L.Ctx("full", jnp.broadcast_to(jnp.arange(16), (2, 16)), None,
+                None, None)
+    y, _ = L.mla_apply(padded, spec, params, x, ctx)
+    assert y.shape == x.shape and bool(jnp.isfinite(y).all())
+
+
+def test_moe_expert_padding_inert():
+    """Padded experts are never routed to; outputs match the unpadded MoE
+    when real-expert weights coincide (single-device path: EP off)."""
+    cfg = dataclasses.replace(get_config("qwen2-moe-a2.7b").tiny(),
+                              n_experts=6, top_k=2, capacity_factor=6.0)
+    cfg_p = dataclasses.replace(cfg, pad_experts_to=8)
+    spec = cfg.groups[0][0][0]
+    p = init_tree(L.moe_specs(cfg, spec), jax.random.key(0))
+    pp = init_tree(L.moe_specs(cfg_p, spec), jax.random.key(0))
+    for w in ("w1", "w3", "w2"):
+        pp[w] = pp[w].at[:6].set(p[w])
+    x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model))
+    ctx = L.Ctx("full", jnp.zeros((2, 16), jnp.int32), None, None, None)
+    y0, _ = L.moe_apply(cfg, spec, p, x, ctx)
+    y1, _ = L.moe_apply(cfg_p, spec, pp, x, ctx)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_unroll_matches_scan():
+    from repro.models import model as M
+    cfg = get_config("yi-9b").tiny()
+    cfg_u = cfg.unroll()
+    assert cfg_u.n_layers == cfg.n_layers
+    params = init_tree(M.model_specs(cfg), jax.random.key(0))
+    # re-layout stacked params (2-layer group) into repeat-1 groups
+    pu = init_tree(M.model_specs(cfg_u), jax.random.key(0))
+    flat = jax.tree_util.tree_leaves(params["dec"])
+    flat_u = jax.tree_util.tree_leaves(pu["dec"])
+    # same total parameter volume
+    assert sum(x.size for x in flat) == sum(x.size for x in flat_u)
+
+
+def test_int8_kv_cache_decode_consistency():
+    """Quantized KV cache: decode matches teacher forcing within int8
+    quantization tolerance; cache payload is int8."""
+    from repro.models import model as M
+    cfg = dataclasses.replace(get_config("yi-9b").tiny(),
+                              kv_cache_int8=True)
+    params = init_tree(M.model_specs(cfg), jax.random.key(1))
+    B, S, E = 2, 24, 2
+    toks = jax.random.randint(jax.random.key(7), (B, S + E), 0, cfg.vocab,
+                              jnp.int32)
+    logits_full, _, _ = M.forward(cfg, params, {"tokens": toks})
+    lg, cache = M.prefill(cfg, params, {"tokens": toks[:, :S]},
+                          cache_len=S + E)
+    errs = [float(jnp.abs(lg - logits_full[:, S - 1]).max())]
+    for i in range(E):
+        lg, cache = M.decode_step(cfg, params, cache,
+                                  toks[:, S + i:S + i + 1],
+                                  jnp.asarray(S + i, jnp.int32))
+        errs.append(float(jnp.abs(lg - logits_full[:, S + i]).max()))
+    assert max(errs) < 0.5, errs
+    leaf = cache[0][0]["mixer"]
+    assert leaf["k"].dtype == jnp.int8 and leaf["ks"].dtype == jnp.float32

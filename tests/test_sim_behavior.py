@@ -1,0 +1,89 @@
+"""Simulator reproduces the paper's qualitative claims (trend-level).
+
+These are the Fig. 1/4/5 sanity anchors; the quantitative sweeps live in
+benchmarks/ (one per paper figure).
+"""
+import numpy as np
+import pytest
+
+from repro.core.cost_model import CostModel
+from repro.core.sim import SimConfig, simulate
+
+EV = 120_000
+
+
+def thr(alg, nodes, tpn, locks, loc, b=(5, 20), ev=EV):
+    return simulate(SimConfig(alg, nodes, tpn, locks, loc, b),
+                    n_events=ev).throughput_mops
+
+
+def test_alock_wins_at_full_locality():
+    """§6.2: at 100% locality ALock does shared-memory-only ops and beats
+    loopback-based competitors by a large factor."""
+    a = thr("alock", 5, 4, 20, 1.0)
+    s = thr("spinlock", 5, 4, 20, 1.0)
+    m = thr("mcs", 5, 4, 20, 1.0)
+    assert a > 4 * s, (a, s)
+    assert a > 4 * m, (a, m)
+
+
+def test_alock_wins_high_locality_high_contention():
+    a = thr("alock", 5, 8, 20, 0.95)
+    s = thr("spinlock", 5, 8, 20, 0.95)
+    assert a > 2 * s, (a, s)
+
+
+def test_loopback_spinlock_saturates_with_threads():
+    """Fig. 1: single-node loopback spinlock throughput collapses past a
+    few threads (PCIe/RX pressure), while ALock keeps scaling."""
+    lo = thr("spinlock", 1, 2, 100, 1.0)
+    hi = thr("spinlock", 1, 12, 100, 1.0)
+    assert hi < lo, (lo, hi)
+    a_lo = thr("alock", 1, 2, 100, 1.0)
+    a_hi = thr("alock", 1, 12, 100, 1.0)
+    assert a_hi > a_lo, (a_lo, a_hi)
+
+
+def test_remote_budget_amortizes_reacquire():
+    """Fig. 4 direction: budgets trade fairness ops for throughput. Tight
+    budgets force frequent (expensive, remote-spinning) reacquires; raising
+    the remote budget recovers the loss. Magnitudes are calibration-
+    dependent (see EXPERIMENTS.md §fig4); the ordering is the claim."""
+    ev = 200_000
+    tight = thr("alock", 20, 12, 100, 0.9, b=(1, 1), ev=ev)
+    mid = thr("alock", 20, 12, 100, 0.9, b=(2, 8), ev=ev)
+    tuned = thr("alock", 20, 12, 100, 0.9, b=(5, 20), ev=ev)
+    assert tuned > 1.10 * tight, (tight, tuned)
+    assert mid > tight, (tight, mid)
+    # (5,20) never materially worse than the paper's (5,5) baseline
+    base = thr("alock", 20, 12, 100, 0.9, b=(5, 5), ev=ev)
+    assert tuned >= 0.98 * base
+
+
+def test_budget_reacquire_mechanism_fires():
+    """Counter-level check of the mechanism: tighter budgets => more
+    pReacquire events; lock passing dominates under contention."""
+    from repro.core.sim import SimConfig, simulate
+    r_tight = simulate(SimConfig("alock", 20, 12, 100, 0.9, (1, 1)),
+                       n_events=150_000)
+    r_loose = simulate(SimConfig("alock", 20, 12, 100, 0.9, (5, 20)),
+                       n_events=150_000)
+    assert r_tight.reacquires > 3 * max(r_loose.reacquires, 1)
+    assert r_loose.passes > r_loose.ops // 3
+
+
+def test_latency_samples_reasonable():
+    r = simulate(SimConfig("alock", 5, 4, 100, 0.95), n_events=EV)
+    lats = np.asarray(r.lat_ns)
+    lats = lats[lats >= 0]
+    # an op is >= think + cs + a couple of accesses
+    cm = CostModel()
+    assert np.median(lats) > cm.cs_ns
+    assert np.median(lats) < 1e6  # < 1ms at this scale
+
+
+def test_qp_thrash_penalizes_loopback_algs():
+    cm = CostModel()
+    f_alock = cm.thrash_factor(20, 12, uses_loopback=False)
+    f_spin = cm.thrash_factor(20, 12, uses_loopback=True)
+    assert f_spin >= f_alock >= 1.0
