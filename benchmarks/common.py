@@ -1,29 +1,60 @@
 """Shared helpers for the benchmark suite.
 
 Every benchmark prints CSV rows: name,us_per_call,derived
-  - us_per_call: mean microseconds per lock+unlock op (simulated time), or
-    wall time per call for kernel benches
-  - derived: the figure-specific statistic (throughput, speedup, ...)
+  - us_per_call: mean microseconds of acquire->release latency per
+    lock+unlock op (simulated time, think_ns excluded — Fig. 6 semantics),
+    or wall time per call for kernel benches
+  - derived: the figure-specific statistic; simulator rows report
+    mean±ci95 across seeds (ci95 is 0.000 for a single seed)
+
+All simulator figures route through ``repro.core.batch.sweep``: configs are
+built up front and bucketed by shape key ``(alg, T, N, K, n_events)``, so
+each bucket compiles once and runs its whole locality/budget/seed batch as
+one vmapped device call. Pass ``--seeds N`` to ``benchmarks.run`` for
+error bars.
 """
 from __future__ import annotations
 
+import os
+
 import numpy as np
 
+from repro.core.batch import BatchResult, sweep
 from repro.core.sim import SimConfig, SimResult, simulate
 
-EVENTS = 150_000
+# Paper-scale default; REPRO_BENCH_EVENTS=2000 gives a fast smoke pass with
+# identical bucketing/compile behavior (n_events is part of the shape key).
+EVENTS = int(os.environ.get("REPRO_BENCH_EVENTS", 150_000))
+
+
+def cfg(alg, nodes, tpn, locks, loc, b=(5, 20), seed=0) -> SimConfig:
+    return SimConfig(alg, nodes, tpn, locks, loc, b, seed)
 
 
 def run(alg, nodes, tpn, locks, loc, b=(5, 20), events=EVENTS,
         seed=0) -> SimResult:
+    """One-off serial run (kept for interactive use; figures use sweep)."""
     return simulate(SimConfig(alg, nodes, tpn, locks, loc, b, seed),
                     n_events=events)
 
 
-def us_per_op(r: SimResult) -> float:
+def sweep_all(cfgs, n_seeds: int = 1, events: int = EVENTS) -> dict:
+    """Batched run of deduped ``cfgs``; returns {SimConfig: BatchResult}."""
+    uniq = list(dict.fromkeys(cfgs))
+    return dict(zip(uniq, sweep(uniq, n_seeds=n_seeds, n_events=events)))
+
+
+def us_per_op(r) -> float:
+    """Mean acquire->release latency in us (SimResult or BatchResult)."""
+    if isinstance(r, BatchResult):
+        return r.mean_lat_us
     lat = np.asarray(r.lat_ns)
     lat = lat[lat >= 0]
     return float(lat.mean()) / 1e3 if len(lat) else float("nan")
+
+
+def mops(br: BatchResult) -> str:
+    return f"{br.mean_mops:.3f}±{br.ci95_mops:.3f}Mops"
 
 
 def emit(name: str, us: float, derived) -> None:

@@ -2,22 +2,28 @@
 
 Paper claim: throughput peaks at a few threads, then declines as loopback
 traffic drains PCIe bandwidth. ALock (no loopback) keeps scaling.
+
+One ``sweep`` call covers every (tpn, alg, seed) point; each tpn is its own
+shape bucket (T changes), compiled once. Rows report mean±ci95 across seeds.
 """
-from benchmarks.common import emit, run, us_per_op
+from benchmarks.common import cfg, emit, mops, sweep_all, us_per_op
+
+TPNS = (1, 2, 4, 8, 12, 16)
 
 
-def main() -> None:
+def main(n_seeds: int = 1) -> None:
+    cfgs = [cfg(alg, 1, t, 1000, 1.0) for t in TPNS
+            for alg in ("spinlock", "alock")]
+    res = sweep_all(cfgs, n_seeds=n_seeds)
     peak = 0.0
     last = None
-    for tpn in (1, 2, 4, 8, 12, 16):
-        r = run("spinlock", 1, tpn, 1000, 1.0)
-        emit(f"fig1.spinlock.1node.t{tpn}", us_per_op(r),
-             f"{r.throughput_mops:.3f}Mops")
-        peak = max(peak, r.throughput_mops)
-        last = r.throughput_mops
-        a = run("alock", 1, tpn, 1000, 1.0)
-        emit(f"fig1.alock.1node.t{tpn}", us_per_op(a),
-             f"{a.throughput_mops:.3f}Mops")
+    for tpn in TPNS:
+        r = res[cfg("spinlock", 1, tpn, 1000, 1.0)]
+        emit(f"fig1.spinlock.1node.t{tpn}", us_per_op(r), mops(r))
+        peak = max(peak, r.mean_mops)
+        last = r.mean_mops
+        a = res[cfg("alock", 1, tpn, 1000, 1.0)]
+        emit(f"fig1.alock.1node.t{tpn}", us_per_op(a), mops(a))
     emit("fig1.spinlock.collapse_ratio", 0.0,
          f"{peak / max(last, 1e-9):.2f}x_peak_over_t16")
 

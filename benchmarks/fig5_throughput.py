@@ -6,34 +6,45 @@ Trends validated against the paper:
     the lock and keeps scaling;
   - low contention (1000 locks): the gap narrows but ALock still leads at
     high locality.
+
+The whole grid (plus the thread-scaling strip) is one ``sweep`` call:
+per-(alg, T, N, K) shape bucket it compiles once and evaluates every
+locality x contention x seed point in a single vmapped dispatch. Rows
+report mean±ci95 throughput across ``n_seeds`` replicas.
 """
-from benchmarks.common import emit, run, us_per_op
+from benchmarks.common import cfg, emit, mops, sweep_all, us_per_op
 
 GRID_NODES = (5, 10, 20)
 LOCKS = (20, 100, 1000)
 LOCALITY = (0.85, 0.95, 1.0)
 TPN = 8
+ALGS = ("alock", "spinlock", "mcs")
+SCALING_TPN = (2, 4, 8, 12)
 
 
-def main() -> None:
-    for nodes in GRID_NODES:
-        for locks in LOCKS:
-            for loc in LOCALITY:
-                best = {}
-                for alg in ("alock", "spinlock", "mcs"):
-                    r = run(alg, nodes, TPN, locks, loc)
-                    best[alg] = r.throughput_mops
-                    emit(f"fig5.{alg}.n{nodes}.k{locks}.loc{int(loc*100)}",
-                         us_per_op(r), f"{r.throughput_mops:.3f}Mops")
-                emit(f"fig5.gap.n{nodes}.k{locks}.loc{int(loc*100)}", 0.0,
-                     f"alock_over_spin={best['alock']/max(best['spinlock'],1e-9):.2f}x,"
-                     f"alock_over_mcs={best['alock']/max(best['mcs'],1e-9):.2f}x")
-    # thread scaling at the paper's largest config
-    for tpn in (2, 4, 8, 12):
-        r = run("alock", 20, tpn, 20, 0.95)
-        s = run("spinlock", 20, tpn, 20, 0.95)
-        emit(f"fig5.scaling.t{tpn}.n20.k20", us_per_op(r),
-             f"alock={r.throughput_mops:.3f}Mops,spin={s.throughput_mops:.3f}Mops")
+def main(n_seeds: int = 1) -> None:
+    grid = [(n, k, l) for n in GRID_NODES for k in LOCKS for l in LOCALITY]
+    cfgs = [cfg(alg, n, TPN, k, l) for (n, k, l) in grid for alg in ALGS]
+    # thread scaling at the paper's largest config rides the same sweep
+    cfgs += [cfg(alg, 20, tpn, 20, 0.95) for tpn in SCALING_TPN
+             for alg in ("alock", "spinlock")]
+    res = sweep_all(cfgs, n_seeds=n_seeds)
+
+    for n, k, l in grid:
+        best = {}
+        for alg in ALGS:
+            br = res[cfg(alg, n, TPN, k, l)]
+            best[alg] = br.mean_mops
+            emit(f"fig5.{alg}.n{n}.k{k}.loc{int(l*100)}", us_per_op(br),
+                 mops(br))
+        emit(f"fig5.gap.n{n}.k{k}.loc{int(l*100)}", 0.0,
+             f"alock_over_spin={best['alock']/max(best['spinlock'],1e-9):.2f}x,"
+             f"alock_over_mcs={best['alock']/max(best['mcs'],1e-9):.2f}x")
+    for tpn in SCALING_TPN:
+        a = res[cfg("alock", 20, tpn, 20, 0.95)]
+        s = res[cfg("spinlock", 20, tpn, 20, 0.95)]
+        emit(f"fig5.scaling.t{tpn}.n20.k20", us_per_op(a),
+             f"alock={mops(a)},spin={mops(s)}")
 
 
 if __name__ == "__main__":

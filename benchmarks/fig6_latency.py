@@ -1,30 +1,38 @@
-"""Fig. 6: latency CDF percentiles (p50/p90/p99) per algorithm/workload."""
-import numpy as np
+"""Fig. 6: latency CDF percentiles (p50/p90/p99) per algorithm/workload.
 
-from benchmarks.common import emit, run
+Latency samples measure acquire->release only (think_ns excluded), matching
+the paper's Fig. 6. One ``sweep`` call batches the whole grid; percentile
+rows report mean±ci95 of the per-seed percentile across seeds.
+"""
+from benchmarks.common import cfg, emit, sweep_all
 
 NODES, TPN = 10, 8
+ALGS = ("alock", "spinlock", "mcs")
 
 
-def main() -> None:
-    for locks in (20, 100, 1000):
-        for loc in (0.85, 0.95, 1.0):
-            rows = {}
-            for alg in ("alock", "spinlock", "mcs"):
-                r = run(alg, NODES, TPN, locks, loc)
-                lat = np.asarray(r.lat_ns)
-                lat = lat[lat >= 0]
-                if len(lat) == 0:
-                    continue
-                p50, p90, p99 = np.percentile(lat, [50, 90, 99])
-                rows[alg] = p50
-                emit(f"fig6.{alg}.k{locks}.loc{int(loc*100)}",
-                     float(p50) / 1e3,
-                     f"p50={p50/1e3:.2f}us,p90={p90/1e3:.2f}us,"
-                     f"p99={p99/1e3:.2f}us")
-            if "alock" in rows and "mcs" in rows:
-                emit(f"fig6.p50gap.k{locks}.loc{int(loc*100)}", 0.0,
-                     f"mcs_over_alock={rows['mcs']/max(rows['alock'],1e-9):.2f}x")
+def _pct(br, q):
+    m, ci = br.lat_pct(q)
+    return f"{m/1e3:.2f}±{ci/1e3:.2f}us"
+
+
+def main(n_seeds: int = 1) -> None:
+    grid = [(k, l) for k in (20, 100, 1000) for l in (0.85, 0.95, 1.0)]
+    cfgs = [cfg(alg, NODES, TPN, k, l) for (k, l) in grid for alg in ALGS]
+    res = sweep_all(cfgs, n_seeds=n_seeds)
+    for k, l in grid:
+        rows = {}
+        for alg in ALGS:
+            br = res[cfg(alg, NODES, TPN, k, l)]
+            p50, _ = br.lat_pct(50)
+            if not (p50 == p50):  # no completed ops at all
+                continue
+            rows[alg] = p50
+            emit(f"fig6.{alg}.k{k}.loc{int(l*100)}", p50 / 1e3,
+                 f"p50={_pct(br, 50)},p90={_pct(br, 90)},"
+                 f"p99={_pct(br, 99)}")
+        if "alock" in rows and "mcs" in rows:
+            emit(f"fig6.p50gap.k{k}.loc{int(l*100)}", 0.0,
+                 f"mcs_over_alock={rows['mcs']/max(rows['alock'],1e-9):.2f}x")
 
 
 if __name__ == "__main__":

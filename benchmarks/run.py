@@ -1,9 +1,14 @@
 """Benchmark entry point — one section per paper table/figure.
 
-Usage: PYTHONPATH=src python -m benchmarks.run [section ...]
+Usage: PYTHONPATH=src python -m benchmarks.run [section ...] [--seeds N]
 Prints ``name,us_per_call,derived`` CSV rows.
+
+--seeds N runs every simulator config with N independent seeds (batched in
+one vmapped dispatch per shape bucket — no extra compiles) and turns the
+derived columns into mean±ci95. Kernel/roofline sections ignore the flag.
 """
-import sys
+import argparse
+import inspect
 import time
 
 from benchmarks import (fig1_loopback, fig4_budget, fig5_throughput,
@@ -20,11 +25,28 @@ SECTIONS = {
 
 
 def main() -> None:
-    which = sys.argv[1:] or list(SECTIONS)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("sections", nargs="*", metavar="section",
+                    help=f"sections to run (default: all of "
+                         f"{', '.join(SECTIONS)})")
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="independent seeds per simulator config")
+    args = ap.parse_args()
+    if args.seeds < 1:
+        ap.error(f"--seeds must be >= 1, got {args.seeds}")
+    unknown = [s for s in args.sections if s not in SECTIONS]
+    if unknown:
+        ap.error(f"unknown section(s) {unknown}; pick from "
+                 f"{list(SECTIONS)}")
+    which = args.sections or list(SECTIONS)
     print("name,us_per_call,derived")
     for name in which:
+        fn = SECTIONS[name]
+        kwargs = {}
+        if "n_seeds" in inspect.signature(fn).parameters:
+            kwargs["n_seeds"] = args.seeds
         t0 = time.time()
-        SECTIONS[name]()
+        fn(**kwargs)
         print(f"# section {name} done in {time.time()-t0:.1f}s", flush=True)
 
 

@@ -8,8 +8,9 @@ import random
 import threading
 import time
 
+from repro.core.batch import sweep
 from repro.core.lock_table import LockTable
-from repro.core.sim import SimConfig, simulate
+from repro.core.sim import SimConfig
 
 
 def threaded_cluster(nodes: int, tpn: int, locks_per_node: int,
@@ -46,17 +47,26 @@ def main():
     ap.add_argument("--nodes", type=int, default=4)
     ap.add_argument("--tpn", type=int, default=3)
     ap.add_argument("--locality", type=float, default=0.9)
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="independent simulator seeds per algorithm "
+                         "(batched in one compile; >1 adds ±ci95)")
     args = ap.parse_args()
+    if args.seeds < 1:
+        ap.error(f"--seeds must be >= 1, got {args.seeds}")
 
     print(f"== threaded lock table ({args.nodes} nodes x {args.tpn} "
           f"threads, locality {args.locality:.0%}) ==")
     threaded_cluster(args.nodes, args.tpn, 8, args.locality, 400)
 
-    print("== calibrated simulator, same topology, all algorithms ==")
-    for alg in ("alock", "spinlock", "mcs"):
-        r = simulate(SimConfig(alg, args.nodes, args.tpn, 8 * args.nodes,
-                               args.locality), n_events=100_000)
-        print(f"  {alg:9s} {r.throughput_mops:7.2f} Mops/s (simulated)")
+    print(f"== calibrated simulator, same topology, all algorithms "
+          f"({args.seeds} seed{'s' if args.seeds > 1 else ''}) ==")
+    algs = ("alock", "spinlock", "mcs")
+    cfgs = [SimConfig(alg, args.nodes, args.tpn, 8 * args.nodes,
+                      args.locality) for alg in algs]
+    for alg, br in zip(algs, sweep(cfgs, n_seeds=args.seeds,
+                                   n_events=100_000)):
+        print(f"  {alg:9s} {br.mean_mops:7.2f} ±{br.ci95_mops:.2f} Mops/s "
+              f"(simulated)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,198 @@
+"""Batched simulation engine: vmap-over-(config x seed) on top of sim.py.
+
+The paper's headline figures (Fig. 5/6) are grids of simulator runs. Running
+each ``(alg, nodes, tpn, locks, locality, seed)`` point as its own
+``simulate()`` call costs one device dispatch per point and gives a single
+seed with no error bars. This module batches instead:
+
+  * ``_run_events_batch`` vmaps the serial event loop over a flattened
+    (config x seed) axis, so one compile + one dispatch yields S independent
+    replicas for every config that shares a shape;
+  * ``sweep`` buckets an arbitrary config list by the static shape key
+    ``(alg, T, N, K, n_events)`` — everything else (locality, budgets, cost
+    scalars, seeds) rides along as *batched traced operands*, so each bucket
+    compiles exactly once no matter how many configs/seeds it carries;
+  * ``BatchResult`` keeps the per-seed samples bitwise-identical to
+    individual ``simulate()`` calls (tested) and derives mean/ci95/p50/p99
+    aggregates from them.
+
+This is the foundation for multi-device scaling: a bucket's flattened batch
+axis is exactly the axis a later PR shards with pmap/shard_map.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from repro.core.cost_model import CostModel
+from repro.core.sim import (I32, LAT_SAMPLES, SimConfig, SimResult,
+                            _run_events, topology)
+
+_N_COSTS = 8
+
+
+def shape_key(cfg: SimConfig, n_events: int):
+    """The static-argument tuple that determines a compile: two configs with
+    equal keys can share one XLA executable."""
+    return (cfg.alg, cfg.n_nodes * cfg.threads_per_node, cfg.n_nodes,
+            cfg.n_locks, n_events)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("alg", "T", "N", "K", "n_events"))
+def _run_events_batch(alg, T, N, K, n_events, locality, b_init, thread_node,
+                      lock_node, costs, seed):
+    """One shape bucket: every batched operand has leading axis B = C * S.
+
+    thread_node/lock_node are functions of the shape key alone and stay
+    unbatched (broadcast).
+    """
+    point = functools.partial(_run_events, alg, T, N, K, n_events)
+    return jax.vmap(point, in_axes=(0, 0, None, None, 0, 0))(
+        locality, b_init, thread_node, lock_node, costs, seed)
+
+
+class BatchResult(NamedTuple):
+    """Per-seed samples + aggregate statistics for one config.
+
+    Sample arrays are stacked over the seed axis S; ``result(i)`` recovers
+    the i-th seed as a plain ``SimResult`` (bitwise-equal to running
+    ``simulate`` with that seed).
+    """
+    config: SimConfig
+    n_events: int
+    seeds: np.ndarray             # (S,)
+    ops: np.ndarray               # (S,)
+    sim_ns: np.ndarray            # (S,)
+    throughput_mops: np.ndarray   # (S,)
+    lat_ns: np.ndarray            # (S, LAT_SAMPLES), -1 padded
+    per_thread_ops: np.ndarray    # (S, T)
+    reacquires: np.ndarray        # (S,)
+    passes: np.ndarray            # (S,)
+
+    @property
+    def n_seeds(self) -> int:
+        return len(self.seeds)
+
+    def result(self, i: int) -> SimResult:
+        return SimResult(int(self.ops[i]), int(self.sim_ns[i]),
+                         float(self.throughput_mops[i]), self.lat_ns[i],
+                         self.per_thread_ops[i], int(self.reacquires[i]),
+                         int(self.passes[i]))
+
+    # -- throughput aggregates ---------------------------------------------
+
+    @property
+    def mean_mops(self) -> float:
+        return float(self.throughput_mops.mean())
+
+    @property
+    def ci95_mops(self) -> float:
+        """Half-width of the normal-approx 95% CI of the mean (0 for S=1)."""
+        s = self.throughput_mops
+        if len(s) < 2:
+            return 0.0
+        return float(1.96 * s.std(ddof=1) / np.sqrt(len(s)))
+
+    # -- latency aggregates (valid samples only; -1 is padding) ------------
+
+    def _lat_pool(self) -> np.ndarray:
+        flat = self.lat_ns.ravel()
+        return flat[flat >= 0]
+
+    @property
+    def mean_lat_us(self) -> float:
+        pool = self._lat_pool()
+        return float(pool.mean()) / 1e3 if len(pool) else float("nan")
+
+    @property
+    def p50_lat_ns(self) -> float:
+        pool = self._lat_pool()
+        return float(np.percentile(pool, 50)) if len(pool) else float("nan")
+
+    @property
+    def p99_lat_ns(self) -> float:
+        pool = self._lat_pool()
+        return float(np.percentile(pool, 99)) if len(pool) else float("nan")
+
+    def lat_pct(self, q: float) -> tuple[float, float]:
+        """(mean, ci95) of the q-th latency percentile across seeds."""
+        per_seed = []
+        for row in self.lat_ns:
+            valid = row[row >= 0]
+            if len(valid):
+                per_seed.append(np.percentile(valid, q))
+        if not per_seed:
+            return float("nan"), 0.0
+        per_seed = np.asarray(per_seed, np.float64)
+        mean = float(per_seed.mean())
+        if len(per_seed) < 2:
+            return mean, 0.0
+        return mean, float(1.96 * per_seed.std(ddof=1)
+                           / np.sqrt(len(per_seed)))
+
+
+def sweep(configs: Sequence[SimConfig], n_seeds: int = 1,
+          n_events: int = 400_000,
+          cm: CostModel = CostModel()) -> list[BatchResult]:
+    """Run every config with seeds ``cfg.seed + [0, n_seeds)``; one compile
+    and one device dispatch per ``shape_key`` bucket.
+
+    Returns BatchResults parallel to ``configs`` (duplicates are simulated
+    twice — dedupe upstream if the grid overlaps).
+    """
+    if n_seeds < 1:
+        raise ValueError(f"n_seeds must be >= 1, got {n_seeds}")
+    configs = list(configs)
+    buckets: dict[tuple, list[int]] = {}
+    for i, cfg in enumerate(configs):
+        buckets.setdefault(shape_key(cfg, n_events), []).append(i)
+
+    out: list[BatchResult | None] = [None] * len(configs)
+    for key, idxs in buckets.items():
+        alg, T, N, K, _ = key
+        thread_node, lock_node, costs = topology(alg, N, T // N, K, cm)
+        C, S = len(idxs), n_seeds
+        loc = np.empty((C, S), np.float32)
+        b_init = np.empty((C, S, 2), np.int32)
+        seeds = np.empty((C, S), np.int32)
+        # constant within a bucket today, but kept a batched operand so a
+        # later PR can vary the cost model per config without recompiling
+        cost_rows = np.broadcast_to(
+            np.asarray(costs, np.int32), (C, S, _N_COSTS)).copy()
+        for row, i in enumerate(idxs):
+            cfg = configs[i]
+            loc[row] = cfg.locality
+            b_init[row] = np.asarray(cfg.b_init, np.int32)
+            seeds[row] = cfg.seed + np.arange(S, dtype=np.int32)
+
+        def flat(a):
+            return jnp.asarray(a.reshape((C * S,) + a.shape[2:]))
+
+        with enable_x64():
+            done, lat, _lat_n, t_end, nreacq, npass = _run_events_batch(
+                alg, T, N, K, n_events, flat(loc), flat(b_init),
+                thread_node, lock_node,
+                tuple(flat(cost_rows[..., j]) for j in range(_N_COSTS)),
+                flat(seeds))
+        done = np.asarray(done).reshape(C, S, T)
+        lat = np.asarray(lat).reshape(C, S, LAT_SAMPLES)
+        t_end = np.asarray(t_end).reshape(C, S)
+        nreacq = np.asarray(nreacq).reshape(C, S)
+        npass = np.asarray(npass).reshape(C, S)
+
+        for row, i in enumerate(idxs):
+            ops = done[row].sum(axis=1).astype(np.int64)
+            sim_ns = np.maximum(t_end[row].astype(np.int64), 1)
+            # per-element arithmetic matches simulate()'s scalar formula
+            # bitwise: ops / sim_ns * 1e3 in float64 either way
+            mops = ops / sim_ns * 1e3
+            out[i] = BatchResult(configs[i], n_events, seeds[row], ops,
+                                 sim_ns, mops, lat[row], done[row],
+                                 nreacq[row], npass[row])
+    return out

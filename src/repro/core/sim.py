@@ -7,8 +7,12 @@ queue, so executions are linearizable by construction — the same PC/semantic
 transitions as the Python machines (cross-validated in tests via
 ``run_schedule``).
 
-Time is int32 nanoseconds (sims run milliseconds; f32 time would lose
-sub-ulp increments past ~10ms).
+Time is int64 nanoseconds (``simulate``/``batch.sweep`` locally enable x64 so
+the clock arrays really are 64-bit; semantic ``Sem`` state stays int32).
+int32 clocks wrap after ~2.1s of simulated time — roughly 2M events at
+~1us/event — which silently corrupts the argmin event order, so widening is
+correctness, not hygiene. f32 time would likewise lose sub-ulp increments
+past ~10ms.
 """
 from __future__ import annotations
 
@@ -18,11 +22,13 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 from jax import lax
+from jax.experimental import enable_x64
 
 from repro.core import machine as mc
 from repro.core.cost_model import CostModel
 
 I32 = jnp.int32
+I64 = jnp.int64
 
 # cost opcodes emitted by semantic branches
 OP_LOCAL, OP_POLL, OP_CS, OP_THINK, OP_RDMA, OP_LOOP = range(6)
@@ -75,7 +81,7 @@ def _step_fns(alg: str, b_init, thread_node, lock_node):
             code = jnp.where(s.cohort[tid] == 0, OP_LOCAL, OP_RDMA)
         else:
             code = jnp.where(node == thread_node[tid], OP_LOOP, OP_RDMA)
-        return code, node
+        return code.astype(I32), node
 
     def peer_op_cost(s, tid, peer):
         """Write to another thread's descriptor (lives on its node)."""
@@ -84,7 +90,7 @@ def _step_fns(alg: str, b_init, thread_node, lock_node):
             code = jnp.where(node == thread_node[tid], OP_LOCAL, OP_RDMA)
         else:
             code = jnp.where(node == thread_node[tid], OP_LOOP, OP_RDMA)
-        return code, node
+        return code.astype(I32), node
 
     def f_ncs(s, tid, new_t, new_c):
         first = mc.SL_CAS if is_spin else mc.SWAP
@@ -276,18 +282,23 @@ class SimResult(NamedTuple):
 LAT_SAMPLES = 1 << 15
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("alg", "T", "N", "K", "n_events"))
 def _run_events(alg, T, N, K, n_events, locality, b_init, thread_node,
                 lock_node, costs, seed):
+    """Serial next-event loop for one (config, seed) point.
+
+    Plain (unjitted) so callers can compose it: ``simulate`` jits it directly
+    (``_run_events_jit``), ``batch.sweep`` vmaps it over a flattened
+    (config x seed) axis. Must run under ``enable_x64()`` so the clock
+    arrays below really are int64.
+    """
     (c_local, c_poll, c_cs, c_think, c_svc_r, c_svc_l, c_wire_r,
      c_wire_l) = costs
     sem = init_sem(T, K)
-    ready = jnp.zeros(T, I32)
-    busy = jnp.zeros(N, I32)
-    op_start = jnp.zeros(T, I32)
+    ready = jnp.zeros(T, I64)
+    busy = jnp.zeros(N, I64)
+    op_start = jnp.zeros(T, I64)
     done = jnp.zeros(T, I32)
-    lat = jnp.full(LAT_SAMPLES, -1, I32)
+    lat = jnp.full(LAT_SAMPLES, -1, I64)
     lat_n = jnp.int32(0)
     key = jax.random.key(seed)
     kpn = K // N
@@ -297,13 +308,14 @@ def _run_events(alg, T, N, K, n_events, locality, b_init, thread_node,
         tid = jnp.argmin(ready).astype(I32)
         now = ready[tid]
         k1, k2, k3 = jax.random.split(jax.random.fold_in(key, i), 3)
-        # workload draw (used only when this step is the NCS re-arm)
+        # workload draw (used only when this step is the NCS re-arm);
+        # dtypes pinned so enabling x64 does not change the draws
         mynode = thread_node[tid]
-        go_local = jax.random.uniform(k1) < locality
+        go_local = jax.random.uniform(k1, dtype=jnp.float32) < locality
         other = (mynode + 1 +
-                 jax.random.randint(k2, (), 0, max(N - 1, 1))) % N
+                 jax.random.randint(k2, (), 0, max(N - 1, 1), dtype=I32)) % N
         node = jnp.where(go_local, mynode, other).astype(I32)
-        new_t = node * kpn + jax.random.randint(k3, (), 0, kpn).astype(I32)
+        new_t = node * kpn + jax.random.randint(k3, (), 0, kpn, dtype=I32)
         new_c = (node != mynode).astype(I32)
 
         was_ncs_bound = (sem.pc[tid] == mc.REL_CAS) | (sem.pc[tid] == mc.PASS) \
@@ -315,7 +327,8 @@ def _run_events(alg, T, N, K, n_events, locality, b_init, thread_node,
         reacq = (pre_pc == mc.SPIN_BUDGET) & (sem2.pc[tid] == mc.SET_VICTIM_R)
         passed = pre_pc == mc.PASS
 
-        # completion accounting
+        # completion accounting — lat_val reads op_start BEFORE this event's
+        # re-stamp so it spans exactly acquire-entry -> release
         lat_val = now - op_start[tid]
         lat = lax.cond(
             finished,
@@ -323,8 +336,6 @@ def _run_events(alg, T, N, K, n_events, locality, b_init, thread_node,
             lambda l: l, lat)
         lat_n = lat_n + finished.astype(I32)
         done = done.at[tid].add(finished.astype(I32))
-        op_start = op_start.at[tid].set(
-            jnp.where(sem.pc[tid] == mc.NCS, now, op_start[tid]))
 
         # cost application
         is_rdma = (code == OP_RDMA) | (code == OP_LOOP)
@@ -337,8 +348,13 @@ def _run_events(alg, T, N, K, n_events, locality, b_init, thread_node,
             [code == OP_LOCAL, code == OP_POLL, code == OP_CS,
              code == OP_THINK],
             [c_local, c_poll, c_cs, c_think], c_local)
-        ready = ready.at[tid].set(
-            jnp.where(is_rdma, fin + wire, now + dt_plain))
+        new_ready = jnp.where(is_rdma, fin + wire, now + dt_plain)
+        ready = ready.at[tid].set(new_ready)
+        # latency clock starts when the first lock op (SWAP/SL_CAS) can
+        # issue, i.e. after the NCS think completes — Fig. 6 measures
+        # acquire->release, not think_ns of app work
+        op_start = op_start.at[tid].set(
+            jnp.where(pre_pc == mc.NCS, new_ready, op_start[tid]))
         nreacq = nreacq + reacq.astype(I32)
         npass = npass + passed.astype(I32)
         return sem2, ready, busy, op_start, done, lat, lat_n, nreacq, npass
@@ -350,25 +366,42 @@ def _run_events(alg, T, N, K, n_events, locality, b_init, thread_node,
     return done, lat, lat_n, jnp.max(ready), nreacq, npass
 
 
+_run_events_jit = functools.partial(
+    jax.jit, static_argnames=("alg", "T", "N", "K", "n_events"))(_run_events)
+
+
+def topology(alg: str, n_nodes: int, threads_per_node: int, n_locks: int,
+             cm: CostModel = CostModel()):
+    """Static per-shape operands: (thread_node, lock_node, cost scalars).
+
+    Everything here is fully determined by (alg, N, tpn, K) + the cost
+    model, i.e. constant within a ``batch.sweep`` shape bucket.
+    """
+    T, N, K = n_nodes * threads_per_node, n_nodes, n_locks
+    assert K % N == 0, "locks must partition evenly across nodes"
+    thread_node = jnp.asarray([t // threads_per_node for t in range(T)], I32)
+    lock_node = jnp.asarray([k // (K // N) for k in range(K)], I32)
+    uses_loopback = alg != "alock"
+    costs = tuple(int(round(v)) for v in (
+        cm.local_ns, cm.spin_poll_ns, cm.cs_ns, cm.think_ns,
+        cm.svc_ns(N, threads_per_node, uses_loopback, False),
+        cm.svc_ns(N, threads_per_node, uses_loopback, True),
+        cm.remote_wire_ns, cm.loopback_wire_ns,
+    ))
+    return thread_node, lock_node, costs
+
+
 def simulate(cfg: SimConfig, n_events: int = 400_000,
              cm: CostModel = CostModel()) -> SimResult:
     T = cfg.n_nodes * cfg.threads_per_node
     N, K = cfg.n_nodes, cfg.n_locks
-    assert K % N == 0, "locks must partition evenly across nodes"
-    thread_node = jnp.asarray([t // cfg.threads_per_node for t in range(T)],
-                              I32)
-    lock_node = jnp.asarray([k // (K // N) for k in range(K)], I32)
-    uses_loopback = cfg.alg != "alock"
-    costs = tuple(jnp.int32(round(v)) for v in (
-        cm.local_ns, cm.spin_poll_ns, cm.cs_ns, cm.think_ns,
-        cm.svc_ns(N, cfg.threads_per_node, uses_loopback, False),
-        cm.svc_ns(N, cfg.threads_per_node, uses_loopback, True),
-        cm.remote_wire_ns, cm.loopback_wire_ns,
-    ))
-    done, lat, lat_n, t_end, nreacq, npass = _run_events(
-        cfg.alg, T, N, K, n_events, cfg.locality,
-        jnp.asarray(cfg.b_init, I32), thread_node, lock_node, costs,
-        cfg.seed)
+    thread_node, lock_node, costs = topology(
+        cfg.alg, N, cfg.threads_per_node, K, cm)
+    with enable_x64():
+        done, lat, lat_n, t_end, nreacq, npass = _run_events_jit(
+            cfg.alg, T, N, K, n_events, jnp.float32(cfg.locality),
+            jnp.asarray(cfg.b_init, I32), thread_node, lock_node,
+            tuple(jnp.int32(c) for c in costs), cfg.seed)
     ops = int(done.sum())
     sim_ns = max(int(t_end), 1)
     return SimResult(ops, sim_ns, ops / sim_ns * 1e3, lat, done,

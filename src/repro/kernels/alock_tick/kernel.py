@@ -135,20 +135,31 @@ def alock_tick(tails, victim, pc, budget, nxt, prev, sched, cohorts, *,
 
     tails (Tab,2), victim (Tab,1), pc/budget/nxt/prev (Tab,T),
     sched (Tab,steps), cohorts (Tab,T) — all int32.
+
+    Tab need not be a multiple of `tile`: the batch is zero-padded to the
+    next tile boundary (pad rows are fresh all-NCS tables stepped by thread
+    0 — valid but ignored) and the outputs are sliced back to Tab rows.
     """
     Tab, T = pc.shape
     steps = sched.shape[1]
     tile = min(tile, Tab)
-    assert Tab % tile == 0
-    grid = (Tab // tile,)
+    pad = -Tab % tile
+    if pad:
+        def zpad(a):
+            return jnp.pad(a, ((0, pad), (0, 0)))
+        sched, cohorts, tails, victim, pc, budget, nxt, prev = map(
+            zpad, (sched, cohorts, tails, victim, pc, budget, nxt, prev))
+    ptab = Tab + pad
+    grid = (ptab // tile,)
     kern = functools.partial(_tick_kernel, T=T, steps=steps,
                              b_local=int(b_init[0]), b_remote=int(b_init[1]))
 
     def row_spec(w):
         return pl.BlockSpec((tile, w), lambda i: (i, 0))
 
-    shapes = [(Tab, 2), (Tab, 1), (Tab, T), (Tab, T), (Tab, T), (Tab, T)]
-    return pl.pallas_call(
+    shapes = [(ptab, 2), (ptab, 1), (ptab, T), (ptab, T), (ptab, T),
+              (ptab, T)]
+    out = pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[row_spec(steps), row_spec(T)] + [
@@ -157,3 +168,6 @@ def alock_tick(tails, victim, pc, budget, nxt, prev, sched, cohorts, *,
         out_shape=[jax.ShapeDtypeStruct(s, jnp.int32) for s in shapes],
         interpret=interpret,
     )(sched, cohorts, tails, victim, pc, budget, nxt, prev)
+    if pad:
+        out = [o[:Tab] for o in out]
+    return out

@@ -1,6 +1,10 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
 # ^ MUST precede any jax import: device count locks at first backend init.
+# The 512-device override is a *host platform* feature, so the dry run must
+# pin the cpu backend — otherwise images with an accelerator runtime baked
+# in (e.g. libtpu) auto-init it and the forced device count never applies.
 
 import argparse
 import gzip
@@ -172,6 +176,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
             ca = compiled.cost_analysis() or {}
+            if isinstance(ca, (list, tuple)):  # older jax: one dict per
+                ca = ca[0] if ca else {}       # computation, take the entry
             try:
                 mem = compiled.memory_analysis()
                 mem_d = {a: getattr(mem, a) for a in (

@@ -24,7 +24,7 @@ from jax import lax
 
 from repro.configs.base import LayerSpec, ModelConfig
 from repro.models.params import ParamSpec
-from repro.parallel.sharding import constrain
+from repro.parallel.sharding import constrain, shard_map
 
 F32 = jnp.float32
 
@@ -656,7 +656,7 @@ def moe_apply_ep(cfg: ModelConfig, params, x, gate, idx, pos_c, keep, C):
         # boundary, where this XLA build requires it
         return lax.psum(y.astype(cdt), "model").astype(F32)
 
-    f = jax.shard_map(
+    f = shard_map(
         body, mesh=mesh,
         in_specs=(P(), P(), P(), P(), P(), P("model"), P("model"),
                   P("model"), P("model")),

@@ -26,6 +26,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
+from repro.parallel.sharding import shard_map
 from repro.train.optimizer import OptConfig, adamw_update
 
 
@@ -45,7 +46,7 @@ def make_budgeted_steps(cfg: ModelConfig, opt_cfg: OptConfig, mesh,
                                        grads)
         return grads, loss[None]
 
-    sharded = jax.shard_map(
+    sharded = shard_map(
         per_pod, mesh=mesh,
         in_specs=(P(), P("pod")),
         out_specs=(P("pod"), P("pod")),
@@ -106,5 +107,5 @@ def hierarchical_mean(x, mesh):
         v = jax.lax.pmean(v, "data")
         return jax.lax.pmean(v, "pod")
     specs = P("pod", "data")
-    return jax.shard_map(f, mesh=mesh, in_specs=specs, out_specs=specs,
-                         axis_names={"pod", "data"}, check_vma=False)(x)
+    return shard_map(f, mesh=mesh, in_specs=specs, out_specs=specs,
+                     axis_names={"pod", "data"}, check_vma=False)(x)

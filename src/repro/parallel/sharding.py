@@ -242,6 +242,22 @@ def constrain(x: jax.Array, *axes: str | None) -> jax.Array:
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
 
+def shard_map(f, mesh: Mesh, in_specs, out_specs, axis_names,
+              check_vma: bool = False):
+    """Version-portable shard_map: the public ``jax.shard_map``
+    (axis_names/check_vma kwargs) when this jax has it, else the
+    ``jax.experimental.shard_map`` one (auto/check_rep kwargs —
+    ``auto`` is the complement of ``axis_names``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=axis_names,
+                             check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      auto=auto, check_rep=check_vma)
+
+
 def tree_pspecs(spec_tree, rules: Rules, mesh: Mesh):
     """Map a tree of ParamSpec (anything with .shape/.axes) to PartitionSpecs."""
     from repro.models.params import ParamSpec  # local import, avoid cycle

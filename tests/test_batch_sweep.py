@@ -1,0 +1,89 @@
+"""batch.sweep contract: per-seed bitwise equality with simulate(), one
+compile per shape bucket, aggregates consistent with the samples."""
+import numpy as np
+import pytest
+import jax
+
+from repro.core import batch
+from repro.core.sim import SimConfig, simulate
+
+EV = 4_000
+
+
+def test_sweep_bitwise_matches_simulate():
+    """Every (config, seed) replica out of the vmapped engine equals the
+    serial simulate() run bit for bit."""
+    cfgs = [SimConfig("alock", 2, 2, 8, 0.9, (2, 3), seed=7),
+            SimConfig("spinlock", 2, 2, 8, 0.5, (5, 20), seed=1),
+            SimConfig("mcs", 3, 2, 6, 0.95, (5, 20), seed=3)]
+    res = batch.sweep(cfgs, n_seeds=2, n_events=EV)
+    for cfg, br in zip(cfgs, res):
+        assert br.config == cfg and br.n_seeds == 2
+        np.testing.assert_array_equal(br.seeds, cfg.seed + np.arange(2))
+        for j, seed in enumerate(br.seeds):
+            r = simulate(cfg._replace(seed=int(seed)), n_events=EV)
+            assert int(br.ops[j]) == r.ops
+            assert int(br.sim_ns[j]) == r.sim_ns
+            assert float(br.throughput_mops[j]) == r.throughput_mops
+            np.testing.assert_array_equal(br.lat_ns[j],
+                                          np.asarray(r.lat_ns))
+            np.testing.assert_array_equal(br.per_thread_ops[j],
+                                          np.asarray(r.per_thread_ops))
+            assert int(br.reacquires[j]) == r.reacquires
+            assert int(br.passes[j]) == r.passes
+            assert br.result(j).ops == r.ops
+
+
+def test_sweep_compiles_once_per_shape_bucket():
+    """Configs differing only in locality/budget/seed share one executable;
+    a second sweep over the same buckets reuses the cache."""
+    jax.clear_caches()
+    cfgs = ([SimConfig("alock", 2, 2, 8, loc, (2, 3)) for loc in
+             (0.5, 0.9, 1.0)]
+            + [SimConfig("alock", 2, 2, 8, 0.9, (1, 1), seed=5)]
+            + [SimConfig("mcs", 2, 2, 8, 0.9)])
+    batch.sweep(cfgs, n_seeds=2, n_events=2_000)
+    n_keys = len({batch.shape_key(c, 2_000) for c in cfgs})
+    assert n_keys == 2
+    assert batch._run_events_batch._cache_size() == n_keys
+    batch.sweep(cfgs, n_seeds=2, n_events=2_000)
+    assert batch._run_events_batch._cache_size() == n_keys
+
+
+def test_sweep_clocks_are_int64():
+    """Satellite of the int32-wrap fix: latencies come back as real int64
+    (enable_x64 held during tracing), so ~hours of simulated time cannot
+    wrap negative."""
+    br = batch.sweep([SimConfig("alock", 2, 2, 8, 0.9)], n_seeds=1,
+                     n_events=EV)[0]
+    assert br.lat_ns.dtype == np.int64
+    assert br.sim_ns.dtype == np.int64
+    valid = br.lat_ns[br.lat_ns >= 0]
+    assert (valid > 0).all()
+
+
+def test_aggregates_consistent_with_samples():
+    br = batch.sweep([SimConfig("alock", 2, 2, 8, 0.9)], n_seeds=3,
+                     n_events=EV)[0]
+    s = br.throughput_mops
+    assert br.mean_mops == pytest.approx(float(s.mean()))
+    assert br.ci95_mops == pytest.approx(
+        1.96 * float(s.std(ddof=1)) / np.sqrt(3))
+    pool = br.lat_ns[br.lat_ns >= 0]
+    assert br.p50_lat_ns == pytest.approx(np.percentile(pool, 50))
+    assert br.p99_lat_ns == pytest.approx(np.percentile(pool, 99))
+    assert br.mean_lat_us == pytest.approx(float(pool.mean()) / 1e3)
+    m, ci = br.lat_pct(50)
+    per_seed = [np.percentile(row[row >= 0], 50) for row in br.lat_ns]
+    assert m == pytest.approx(np.mean(per_seed))
+    assert ci >= 0.0
+    # seeds are independent replicas, not copies
+    assert len({int(o) for o in br.ops}) > 1 or len(
+        {int(t) for t in br.sim_ns}) > 1
+
+
+def test_single_seed_ci_is_zero():
+    br = batch.sweep([SimConfig("mcs", 2, 2, 8, 0.9)], n_seeds=1,
+                     n_events=EV)[0]
+    assert br.ci95_mops == 0.0
+    assert br.lat_pct(99)[1] == 0.0

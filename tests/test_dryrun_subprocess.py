@@ -8,7 +8,19 @@ import subprocess
 import sys
 import textwrap
 
+import jax
 import pytest
+
+# On jax<0.5 (experimental shard_map, partial-auto via `auto=`), taking
+# grad through a partial-manual shard_map CHECK-crashes XLA-CPU (process
+# abort, not a catchable error) — same blocked-path family as the
+# grad(scan(shard_map)) crash documented in configs/base.py. The budgeted
+# cohort-collective test needs exactly that path, so gate it on the public
+# jax.shard_map API.
+requires_partial_shard_map_grad = pytest.mark.skipif(
+    not hasattr(jax, "shard_map"),
+    reason="grad(partial-auto shard_map) CHECK-crashes XLA-CPU on "
+           "jax<0.5's experimental shard_map")
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 ENV = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
@@ -80,6 +92,7 @@ def test_dryrun_cell_tiny_mesh():
     assert "OK" in r.stdout, r.stdout + r.stderr
 
 
+@requires_partial_shard_map_grad
 def test_budgeted_cohort_steps_multi_pod():
     """local_accum_step must contain NO cross-pod collectives; sync_step
     must contain the cross-pod reduction. Budget=1 equals the sync baseline

@@ -4,7 +4,7 @@ import numpy.random as npr
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import machine as mc
 from repro.core.sim import SimConfig, run_schedule, simulate
@@ -97,10 +97,11 @@ def test_ssd_kernel_sweep(S, H, P, N, chunk):
                                rtol=2e-4)
 
 
-def test_alock_tick_kernel_matches_machine():
+def _run_tick_vs_machine(rng_seed, Tab, T, steps, tile):
+    """Run alock_tick on fresh tables and assert every table's final
+    (pc, tail, budget) matches the Python machine oracle."""
     from repro.kernels.alock_tick.kernel import alock_tick
-    rng = npr.default_rng(5)
-    Tab, T, steps = 8, 4, 300
+    rng = npr.default_rng(rng_seed)
     cohorts = rng.integers(0, 2, T).astype(np.int32)
     sched = rng.integers(0, T, (Tab, steps)).astype(np.int32)
     b_init = (2, 3)
@@ -110,7 +111,8 @@ def test_alock_tick_kernel_matches_machine():
         jnp.full((Tab, T), mc.NCS, jnp.int32),
         jnp.full((Tab, T), -1, jnp.int32), z(), z(),
         jnp.asarray(sched), jnp.broadcast_to(jnp.asarray(cohorts), (Tab, T)),
-        b_init=b_init, tile=4, interpret=True)
+        b_init=b_init, tile=tile, interpret=True)
+    assert all(o.shape[0] == Tab for o in out)
     for t in range(Tab):
         st_ = mc.initial_state(T)
         for tid in sched[t]:
@@ -118,6 +120,16 @@ def test_alock_tick_kernel_matches_machine():
         assert tuple(np.asarray(out[2][t])) == st_.pc
         assert tuple(np.asarray(out[0][t])) == st_.tail
         assert tuple(np.asarray(out[3][t])) == st_.budget
+
+
+def test_alock_tick_kernel_matches_machine():
+    _run_tick_vs_machine(rng_seed=5, Tab=8, T=4, steps=300, tile=4)
+
+
+def test_alock_tick_kernel_pads_nonmultiple_tables():
+    """Tab not divisible by tile (e.g. 300 tables, tile 128) must pad the
+    batch internally and slice back, not crash."""
+    _run_tick_vs_machine(rng_seed=11, Tab=6, T=3, steps=150, tile=4)
 
 
 def test_blockwise_flash_layer_grads():
