@@ -11,7 +11,9 @@ All simulator figures route through ``repro.core.batch.sweep``: configs are
 built up front and bucketed by shape key ``(alg, T, N, K, n_events)``, so
 each bucket compiles once and runs its whole locality/budget/seed batch as
 one vmapped device call. Pass ``--seeds N`` to ``benchmarks.run`` for
-error bars.
+error bars; ``--backend xla|pallas``, ``--devices N`` and ``--chunk R``
+select the execution backend and the sharded bucket layout (see
+``core/batch.py``) for every section at once.
 """
 from __future__ import annotations
 
@@ -26,22 +28,55 @@ from repro.core.sim import SimConfig, SimResult, simulate
 # identical bucketing/compile behavior (n_events is part of the shape key).
 EVENTS = int(os.environ.get("REPRO_BENCH_EVENTS", 150_000))
 
+# Suite-wide execution options, set once by benchmarks.run (or env) and
+# honored by every sweep_all/run call.
+EXEC = {
+    "backend": os.environ.get("REPRO_BACKEND", "auto"),
+    "devices": None,   # int: shard sweeps over jax.devices()[:n]
+    "chunk": None,     # int: rows per device per dispatch
+}
 
-def cfg(alg, nodes, tpn, locks, loc, b=(5, 20), seed=0) -> SimConfig:
-    return SimConfig(alg, nodes, tpn, locks, loc, b, seed)
+
+def set_exec_options(backend=None, devices=None, chunk=None) -> None:
+    """Install suite-wide backend/sharding choices (None = leave as is)."""
+    if backend is not None:
+        EXEC["backend"] = backend
+    if devices is not None:
+        EXEC["devices"] = int(devices)
+    if chunk is not None:
+        EXEC["chunk"] = int(chunk)
+
+
+def _devices():
+    if EXEC["devices"] is None:
+        return None
+    import jax
+    n = EXEC["devices"]
+    devs = jax.devices()
+    if n > len(devs):
+        raise ValueError(f"--devices {n} but only {len(devs)} JAX device(s) "
+                         f"are visible")
+    return devs[:n]
+
+
+def cfg(alg, nodes, tpn, locks, loc, b=(5, 20), seed=0,
+        zipf=0.0) -> SimConfig:
+    return SimConfig(alg, nodes, tpn, locks, loc, b, seed, zipf)
 
 
 def run(alg, nodes, tpn, locks, loc, b=(5, 20), events=EVENTS,
         seed=0) -> SimResult:
     """One-off serial run (kept for interactive use; figures use sweep)."""
     return simulate(SimConfig(alg, nodes, tpn, locks, loc, b, seed),
-                    n_events=events)
+                    n_events=events, backend=EXEC["backend"])
 
 
 def sweep_all(cfgs, n_seeds: int = 1, events: int = EVENTS) -> dict:
     """Batched run of deduped ``cfgs``; returns {SimConfig: BatchResult}."""
     uniq = list(dict.fromkeys(cfgs))
-    return dict(zip(uniq, sweep(uniq, n_seeds=n_seeds, n_events=events)))
+    return dict(zip(uniq, sweep(uniq, n_seeds=n_seeds, n_events=events,
+                                backend=EXEC["backend"], devices=_devices(),
+                                chunk=EXEC["chunk"])))
 
 
 def us_per_op(r) -> float:

@@ -11,6 +11,11 @@ The whole grid (plus the thread-scaling strip) is one ``sweep`` call:
 per-(alg, T, N, K) shape bucket it compiles once and evaluates every
 locality x contention x seed point in a single vmapped dispatch. Rows
 report mean±ci95 throughput across ``n_seeds`` replicas.
+
+``--zipf S`` (or ``main(zipf=S)``) skews every config's within-node lock
+choice with a Zipf(S) draw — hot-key contention on top of the locality
+grid. The CDF rides the traced batch axis, so a skewed grid costs no extra
+compiles (row names gain a ``.zipfS`` suffix).
 """
 from benchmarks.common import cfg, emit, mops, sweep_all, us_per_op
 
@@ -22,30 +27,38 @@ ALGS = ("alock", "spinlock", "mcs")
 SCALING_TPN = (2, 4, 8, 12)
 
 
-def main(n_seeds: int = 1) -> None:
+def main(n_seeds: int = 1, zipf: float = 0.0) -> None:
+    sfx = f".zipf{zipf:g}" if zipf else ""
     grid = [(n, k, l) for n in GRID_NODES for k in LOCKS for l in LOCALITY]
-    cfgs = [cfg(alg, n, TPN, k, l) for (n, k, l) in grid for alg in ALGS]
+    cfgs = [cfg(alg, n, TPN, k, l, zipf=zipf)
+            for (n, k, l) in grid for alg in ALGS]
     # thread scaling at the paper's largest config rides the same sweep
-    cfgs += [cfg(alg, 20, tpn, 20, 0.95) for tpn in SCALING_TPN
+    cfgs += [cfg(alg, 20, tpn, 20, 0.95, zipf=zipf) for tpn in SCALING_TPN
              for alg in ("alock", "spinlock")]
     res = sweep_all(cfgs, n_seeds=n_seeds)
 
     for n, k, l in grid:
         best = {}
         for alg in ALGS:
-            br = res[cfg(alg, n, TPN, k, l)]
+            br = res[cfg(alg, n, TPN, k, l, zipf=zipf)]
             best[alg] = br.mean_mops
-            emit(f"fig5.{alg}.n{n}.k{k}.loc{int(l*100)}", us_per_op(br),
-                 mops(br))
-        emit(f"fig5.gap.n{n}.k{k}.loc{int(l*100)}", 0.0,
+            emit(f"fig5.{alg}.n{n}.k{k}.loc{int(l*100)}{sfx}",
+                 us_per_op(br), mops(br))
+        emit(f"fig5.gap.n{n}.k{k}.loc{int(l*100)}{sfx}", 0.0,
              f"alock_over_spin={best['alock']/max(best['spinlock'],1e-9):.2f}x,"
              f"alock_over_mcs={best['alock']/max(best['mcs'],1e-9):.2f}x")
     for tpn in SCALING_TPN:
-        a = res[cfg("alock", 20, tpn, 20, 0.95)]
-        s = res[cfg("spinlock", 20, tpn, 20, 0.95)]
-        emit(f"fig5.scaling.t{tpn}.n20.k20", us_per_op(a),
+        a = res[cfg("alock", 20, tpn, 20, 0.95, zipf=zipf)]
+        s = res[cfg("spinlock", 20, tpn, 20, 0.95, zipf=zipf)]
+        emit(f"fig5.scaling.t{tpn}.n20.k20{sfx}", us_per_op(a),
              f"alock={mops(a)},spin={mops(s)}")
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seeds", type=int, default=1)
+    ap.add_argument("--zipf", type=float, default=0.0,
+                    help="Zipf skew of within-node lock targets")
+    a = ap.parse_args()
+    main(n_seeds=a.seeds, zipf=a.zipf)

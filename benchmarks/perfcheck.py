@@ -1,0 +1,141 @@
+"""Perf trajectory check: aggregate simulator events/sec, recorded per PR.
+
+Runs a Fig.5-shaped grid through ``batch.sweep`` once per execution backend
+(XLA fori_loop vs the Pallas event-loop kernel) and once through the
+chunked/sharded bucket layout, then writes ``BENCH_events_per_sec.json`` so
+every PR leaves an events/sec data point behind (CI uploads it as an
+artifact).
+
+Measured quantities:
+  * events/sec per backend (warm: one untimed sweep first, so compile cost
+    is reported separately and the steady-state rate is comparable PR to
+    PR);
+  * dispatch/compile counts from ``batch.exec_stats`` — the chunked layout
+    must show one dispatch per chunk per mesh (vs one per bucket) while
+    reusing a single compile per shape key, which is the CPU-visible half
+    of the scaling story (on TPU the pallas backend's events/sec carries
+    it).
+
+Smoke mode: REPRO_BENCH_EVENTS=2000 (same knob as the other benchmarks).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import EVENTS, cfg
+from repro.core import batch
+
+GRID_NODES, TPN, LOCKS = 10, 8, 100
+LOCALITY = (0.85, 0.95, 1.0)
+ALGS = ("alock", "spinlock", "mcs")
+
+
+def _grid():
+    return [cfg(alg, GRID_NODES, TPN, LOCKS, l)
+            for alg in ALGS for l in LOCALITY]
+
+
+def _timed_sweep(cfgs, n_seeds, events, **kw):
+    """(results, wall_s of the warm run, stats) — stats carries the warm
+    run's dispatch count plus the cold (first) run's compile count."""
+    batch.reset_exec_stats()
+    batch.sweep(cfgs, n_seeds=n_seeds, n_events=events, **kw)  # warm/compile
+    cold = batch.exec_stats()
+    batch.reset_exec_stats()
+    t0 = time.perf_counter()
+    res = batch.sweep(cfgs, n_seeds=n_seeds, n_events=events, **kw)
+    wall = time.perf_counter() - t0
+    st = batch.exec_stats()
+    st["compiles"] = cold["compiles"]
+    return res, wall, st
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backends", default="xla,pallas",
+                    help="comma list of backends to measure")
+    ap.add_argument("--events", type=int, default=EVENTS)
+    ap.add_argument("--seeds", type=int, default=1)
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="rows/device/dispatch for the sharded leg "
+                         "(default: half a bucket, forcing 2 chunks)")
+    ap.add_argument("--out", default="BENCH_events_per_sec.json")
+    args = ap.parse_args()
+
+    cfgs = _grid()
+    n_buckets = len({batch.shape_key(c, args.events) for c in cfgs})
+    total_events = len(cfgs) * args.seeds * args.events
+    report = {
+        "grid": {"configs": len(cfgs), "seeds": args.seeds,
+                 "events_per_replica": args.events,
+                 "total_events": total_events, "buckets": n_buckets},
+        "backends": {},
+    }
+
+    base = None     # (backend, results) of the first measured backend
+    base_xla = None  # unsharded XLA results — the oracle both legs diff to
+    for backend in [b.strip() for b in args.backends.split(",") if b.strip()]:
+        res, wall, st = _timed_sweep(cfgs, args.seeds, args.events,
+                                     backend=backend)
+        eps = total_events / max(wall, 1e-9)
+        report["backends"][backend] = {
+            "wall_s": round(wall, 4), "events_per_sec": round(eps, 1),
+            "dispatches": st["dispatches"], "compiles": st["compiles"],
+        }
+        print(f"perfcheck.{backend},{wall*1e6/len(cfgs):.1f},"
+              f"{eps/1e6:.3f}Mevents/s", flush=True)
+        if backend == "xla":
+            base_xla = res
+        if base is None:
+            base = (backend, res)
+        else:
+            same = all(np.array_equal(a.lat_ns, b.lat_ns)
+                       and np.array_equal(a.ops, b.ops)
+                       for a, b in zip(base[1], res))
+            report["backends"][backend]["bitwise_equal_to_" + base[0]] = same
+    if base_xla is None:
+        # the sharded leg below runs on xla, so its bitwise check needs an
+        # unsharded xla oracle even when --backends skipped it (untimed)
+        base_xla = batch.sweep(cfgs, n_seeds=args.seeds,
+                               n_events=args.events, backend="xla")
+
+    # sharded/chunked layout: one dispatch per chunk (per mesh), one compile
+    # per shape key — dispatch-count evidence that oversized buckets spill
+    # into fixed-size chunks instead of recompiling
+    bucket_rows = max(args.seeds * len(LOCALITY), 1)
+    chunk = args.chunk or max(1, -(-bucket_rows // 2))
+    res_c, wall_c, st_c = _timed_sweep(cfgs, args.seeds, args.events,
+                                       backend="xla", chunk=chunk)
+    eq = all(
+        np.array_equal(a.lat_ns, b.lat_ns) and np.array_equal(a.ops, b.ops)
+        for a, b in zip(base_xla, res_c))
+    report["sharding"] = {
+        "chunk_rows_per_device": chunk,
+        "bucket_rows": bucket_rows,
+        "wall_s": round(wall_c, 4),
+        "events_per_sec": round(total_events / max(wall_c, 1e-9), 1),
+        "dispatches": st_c["dispatches"],
+        "compiles": st_c["compiles"],
+        "unsharded_dispatches_per_bucket": 1,
+        "bitwise_equal_to_unsharded": bool(eq),
+    }
+    print(f"perfcheck.sharded.chunk{chunk},{wall_c*1e6/len(cfgs):.1f},"
+          f"dispatches={st_c['dispatches']},compiles={st_c['compiles']},"
+          f"bitwise_ok={eq}", flush=True)
+
+    bk = report["backends"]
+    if "xla" in bk and "pallas" in bk:
+        report["pallas_over_xla"] = round(
+            bk["pallas"]["events_per_sec"] / max(bk["xla"]["events_per_sec"],
+                                                 1e-9), 3)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"# wrote {args.out}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

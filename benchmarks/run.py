@@ -1,17 +1,23 @@
 """Benchmark entry point — one section per paper table/figure.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [section ...] [--seeds N]
+           [--backend auto|xla|pallas] [--devices N] [--chunk R] [--zipf S]
 Prints ``name,us_per_call,derived`` CSV rows.
 
 --seeds N runs every simulator config with N independent seeds (batched in
 one vmapped dispatch per shape bucket — no extra compiles) and turns the
-derived columns into mean±ci95. Kernel/roofline sections ignore the flag.
+derived columns into mean±ci95. --backend selects the per-replica engine
+(XLA fori_loop vs the Pallas event-loop kernel); --devices/--chunk shard
+each bucket's flattened (config x seed) axis across devices in fixed-size
+chunks (see core/batch.py). --zipf skews the within-node lock choice for
+sections that support it (fig5). Kernel/roofline sections ignore the
+simulator flags. ``benchmarks.perfcheck`` records events/sec per backend.
 """
 import argparse
 import inspect
 import time
 
-from benchmarks import (fig1_loopback, fig4_budget, fig5_throughput,
+from benchmarks import (common, fig1_loopback, fig4_budget, fig5_throughput,
                         fig6_latency, microbench, roofline)
 
 SECTIONS = {
@@ -31,9 +37,23 @@ def main() -> None:
                          f"{', '.join(SECTIONS)})")
     ap.add_argument("--seeds", type=int, default=1,
                     help="independent seeds per simulator config")
+    ap.add_argument("--backend", choices=("auto", "xla", "pallas"),
+                    default=None, help="simulator execution backend")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard sweep buckets over this many JAX devices")
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="rows per device per dispatch (fixed-size chunks)")
+    ap.add_argument("--zipf", type=float, default=0.0,
+                    help="Zipf skew of within-node lock targets (fig5)")
     args = ap.parse_args()
     if args.seeds < 1:
         ap.error(f"--seeds must be >= 1, got {args.seeds}")
+    if args.devices is not None and args.devices < 1:
+        ap.error(f"--devices must be >= 1, got {args.devices}")
+    if args.chunk is not None and args.chunk < 1:
+        ap.error(f"--chunk must be >= 1, got {args.chunk}")
+    common.set_exec_options(backend=args.backend, devices=args.devices,
+                            chunk=args.chunk)
     unknown = [s for s in args.sections if s not in SECTIONS]
     if unknown:
         ap.error(f"unknown section(s) {unknown}; pick from "
@@ -42,9 +62,12 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name in which:
         fn = SECTIONS[name]
+        params = inspect.signature(fn).parameters
         kwargs = {}
-        if "n_seeds" in inspect.signature(fn).parameters:
+        if "n_seeds" in params:
             kwargs["n_seeds"] = args.seeds
+        if "zipf" in params and args.zipf:
+            kwargs["zipf"] = args.zipf
         t0 = time.time()
         fn(**kwargs)
         print(f"# section {name} done in {time.time()-t0:.1f}s", flush=True)

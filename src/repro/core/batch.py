@@ -9,31 +9,76 @@ seed with no error bars. This module batches instead:
     (config x seed) axis, so one compile + one dispatch yields S independent
     replicas for every config that shares a shape;
   * ``sweep`` buckets an arbitrary config list by the static shape key
-    ``(alg, T, N, K, n_events)`` — everything else (locality, budgets, cost
-    scalars, seeds) rides along as *batched traced operands*, so each bucket
-    compiles exactly once no matter how many configs/seeds it carries;
+    ``(alg, T, N, K, n_events)`` — everything else (locality, budgets, Zipf
+    CDFs, cost scalars, seeds) rides along as *batched traced operands*, so
+    each bucket compiles exactly once no matter how many configs/seeds it
+    carries;
   * ``BatchResult`` keeps the per-seed samples bitwise-identical to
     individual ``simulate()`` calls (tested) and derives mean/ci95/p50/p99
     aggregates from them.
 
-This is the foundation for multi-device scaling: a bucket's flattened batch
-axis is exactly the axis a later PR shards with pmap/shard_map.
+Execution backends and sharding
+-------------------------------
+``sweep(..., backend=)`` picks the per-replica engine: the XLA ``fori_loop``
+(``"xla"``, the correctness oracle) or the Pallas event-loop kernel
+(``"pallas"``, ``repro.kernels.event_loop`` — VMEM-resident state, replicas
+tiled across the Pallas grid). ``"auto"`` resolves per
+``sim.resolve_backend``. Both produce bitwise-identical replicas.
+
+``sweep(..., devices=, chunk=)`` turns on the sharded bucket layout: each
+bucket's flattened (config x seed) axis is split into fixed-size chunks of
+``chunk`` rows per device, each chunk edge-padded to exactly
+``chunk * n_devices`` rows and dispatched once through a cached
+``shard_map`` runner (``parallel/sharding.py``'s compat wrapper, mesh axis
+``"data"``). Fixed chunk sizes mean the executable is keyed by
+``(shape key, chunk, devices, backend)`` alone — an arbitrarily large
+bucket reuses one compile and costs one dispatch per chunk, instead of one
+compile per bucket size. ``exec_stats()`` exposes the dispatch/compile
+counters so benchmarks (``benchmarks/perfcheck.py``) can record the
+dispatch-count reduction.
 """
 from __future__ import annotations
 
 import functools
+import math
 from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.cost_model import CostModel
-from repro.core.sim import (I32, LAT_SAMPLES, SimConfig, SimResult,
-                            _run_events, topology)
+from repro.core.sim import (LAT_SAMPLES, SimConfig, SimResult, _run_events,
+                            resolve_backend, topology, zipf_cdf)
+from repro.parallel.sharding import shard_map
 
 _N_COSTS = 8
+
+# -- execution statistics ----------------------------------------------------
+# A "dispatch" is one host->device call of a compiled bucket runner (covering
+# every device in its mesh); a "compile" is one new (runner, input shape)
+# pair. perfcheck.py records these next to events/sec.
+_STATS = {"dispatches": 0, "compiles": 0}
+_COMPILED: set = set()
+
+
+def exec_stats() -> dict:
+    """Snapshot of {dispatches, compiles} since the last reset."""
+    return dict(_STATS)
+
+
+def reset_exec_stats() -> None:
+    _STATS["dispatches"] = 0
+    _STATS["compiles"] = 0
+
+
+def _note_call(key) -> None:
+    _STATS["dispatches"] += 1
+    if key not in _COMPILED:
+        _COMPILED.add(key)
+        _STATS["compiles"] += 1
 
 
 def shape_key(cfg: SimConfig, n_events: int):
@@ -46,15 +91,58 @@ def shape_key(cfg: SimConfig, n_events: int):
 @functools.partial(jax.jit,
                    static_argnames=("alg", "T", "N", "K", "n_events"))
 def _run_events_batch(alg, T, N, K, n_events, locality, b_init, thread_node,
-                      lock_node, costs, seed):
+                      lock_node, costs, seed, zcdf):
     """One shape bucket: every batched operand has leading axis B = C * S.
 
     thread_node/lock_node are functions of the shape key alone and stay
     unbatched (broadcast).
     """
     point = functools.partial(_run_events, alg, T, N, K, n_events)
-    return jax.vmap(point, in_axes=(0, 0, None, None, 0, 0))(
-        locality, b_init, thread_node, lock_node, costs, seed)
+    return jax.vmap(point, in_axes=(0, 0, None, None, 0, 0, 0))(
+        locality, b_init, thread_node, lock_node, costs, seed, zcdf)
+
+
+# -- sharded bucket runners --------------------------------------------------
+
+_RUNNER_CACHE: dict = {}
+
+
+def _bucket_runner(key, backend: str, mesh: Mesh):
+    """Cached jitted shard_map runner for one (shape key, backend, mesh).
+
+    The wrapped function maps the flattened replica axis onto the mesh's
+    ``data`` axis; inside each shard the local block runs through the
+    selected backend. Fixed chunk sizes upstream mean each runner compiles
+    once per chunk shape and is reused across chunks and buckets.
+    """
+    alg, T, N, K, n_events = key
+    ck = (key, backend, tuple(d.id for d in mesh.devices.flat))
+    if ck in _RUNNER_CACHE:
+        return _RUNNER_CACHE[ck], ck
+
+    def local_block(loc, bi, cst, sd, zc, tn, ln):
+        if backend == "pallas":
+            from repro.kernels.event_loop.ops import run_events
+            return run_events(alg, T, N, K, n_events, loc, bi, tn, ln, cst,
+                              sd, zc)
+        from repro.kernels.event_loop.ref import run_events_ref
+        return run_events_ref(alg, T, N, K, n_events, loc, bi, tn, ln, cst,
+                              sd, zc)
+
+    fn = jax.jit(shard_map(
+        local_block, mesh,
+        in_specs=(P("data"), P("data"), P("data"), P("data"), P("data"),
+                  P(), P()),
+        out_specs=(P("data"),) * 6, axis_names={"data"}))
+    _RUNNER_CACHE[ck] = fn
+    return fn, ck
+
+
+def _pad_rows(a: np.ndarray, n: int) -> np.ndarray:
+    """Edge-pad the leading axis by n rows (duplicates, sliced off after)."""
+    if n == 0:
+        return a
+    return np.concatenate([a, np.repeat(a[-1:], n, axis=0)], axis=0)
 
 
 class BatchResult(NamedTuple):
@@ -137,17 +225,85 @@ class BatchResult(NamedTuple):
                            / np.sqrt(len(per_seed)))
 
 
+def _exec_bucket(key, thread_node, lock_node, loc, b_init, cost_rows, seeds,
+                 zcdfs, backend: str, devices, chunk):
+    """Run one flattened bucket (B rows) and return the 6 output arrays.
+
+    Unsharded (devices/chunk both None): one dispatch for the whole bucket —
+    the XLA leg is the original ``_run_events_batch`` oracle. Sharded: the
+    row axis is split over the device mesh in fixed chunks of ``chunk`` rows
+    per device, one dispatch per chunk, executables shared across chunks.
+    """
+    alg, T, N, K, n_events = key
+    B = loc.shape[0]
+    if devices is None and chunk is None:
+        with enable_x64():
+            if backend == "pallas":
+                from repro.kernels.event_loop.ops import run_events_jit
+                out = run_events_jit(
+                    alg, T, N, K, n_events, jnp.asarray(loc),
+                    jnp.asarray(b_init), thread_node, lock_node,
+                    jnp.asarray(cost_rows), jnp.asarray(seeds),
+                    jnp.asarray(zcdfs))
+            else:
+                out = _run_events_batch(
+                    alg, T, N, K, n_events, jnp.asarray(loc),
+                    jnp.asarray(b_init), thread_node, lock_node,
+                    tuple(jnp.asarray(cost_rows[:, j])
+                          for j in range(_N_COSTS)),
+                    jnp.asarray(seeds), jnp.asarray(zcdfs))
+        _note_call((key, backend, "bucket", B))
+        return tuple(np.asarray(o) for o in out)
+
+    devs = list(devices) if devices is not None else jax.devices()
+    mesh = Mesh(np.asarray(devs), ("data",))
+    D = len(devs)
+    rows = int(chunk) if chunk is not None else math.ceil(B / D)
+    if rows < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    step = rows * D
+    n_chunks = math.ceil(B / step)
+    pad = n_chunks * step - B
+    loc, b_init, cost_rows, seeds, zcdfs = (
+        _pad_rows(a, pad) for a in (loc, b_init, cost_rows, seeds, zcdfs))
+    tn = np.asarray(thread_node)
+    ln = np.asarray(lock_node)
+    runner, ck = _bucket_runner(key, backend, mesh)
+    outs = []
+    with enable_x64():
+        for c in range(n_chunks):
+            sl = slice(c * step, (c + 1) * step)
+            outs.append(runner(loc[sl], b_init[sl], cost_rows[sl], seeds[sl],
+                               zcdfs[sl], tn, ln))
+            _note_call((ck, step))
+    return tuple(np.concatenate([np.asarray(o[j]) for o in outs])[:B]
+                 for j in range(6))
+
+
 def sweep(configs: Sequence[SimConfig], n_seeds: int = 1,
-          n_events: int = 400_000,
-          cm: CostModel = CostModel()) -> list[BatchResult]:
+          n_events: int = 400_000, cm: CostModel = CostModel(), *,
+          backend: str = "auto", devices=None,
+          chunk: int | None = None) -> list[BatchResult]:
     """Run every config with seeds ``cfg.seed + [0, n_seeds)``; one compile
-    and one device dispatch per ``shape_key`` bucket.
+    per ``shape_key`` bucket (per chunk shape when sharding).
+
+    backend: "xla" | "pallas" | "auto" — per-replica engine (see module
+      docstring); every backend/layout combination returns bitwise-identical
+      replicas (tested).
+    devices: device list to shard the flattened (config x seed) axis over
+      (mesh axis "data"); None with chunk=None keeps the single-dispatch
+      layout.
+    chunk: rows per device per dispatch. Fixing it pins the executable
+      shape, so oversized buckets spill into extra dispatches of the SAME
+      compile instead of recompiling; chunk=None with devices set derives
+      one even chunk per device.
 
     Returns BatchResults parallel to ``configs`` (duplicates are simulated
     twice — dedupe upstream if the grid overlaps).
     """
     if n_seeds < 1:
         raise ValueError(f"n_seeds must be >= 1, got {n_seeds}")
+    backend = resolve_backend(backend)
     configs = list(configs)
     buckets: dict[tuple, list[int]] = {}
     for i, cfg in enumerate(configs):
@@ -156,11 +312,13 @@ def sweep(configs: Sequence[SimConfig], n_seeds: int = 1,
     out: list[BatchResult | None] = [None] * len(configs)
     for key, idxs in buckets.items():
         alg, T, N, K, _ = key
+        kpn = K // N
         thread_node, lock_node, costs = topology(alg, N, T // N, K, cm)
         C, S = len(idxs), n_seeds
         loc = np.empty((C, S), np.float32)
         b_init = np.empty((C, S, 2), np.int32)
         seeds = np.empty((C, S), np.int32)
+        zcdfs = np.empty((C, S, kpn), np.float32)
         # constant within a bucket today, but kept a batched operand so a
         # later PR can vary the cost model per config without recompiling
         cost_rows = np.broadcast_to(
@@ -170,21 +328,20 @@ def sweep(configs: Sequence[SimConfig], n_seeds: int = 1,
             loc[row] = cfg.locality
             b_init[row] = np.asarray(cfg.b_init, np.int32)
             seeds[row] = cfg.seed + np.arange(S, dtype=np.int32)
+            zcdfs[row] = zipf_cdf(kpn, cfg.zipf_s)
 
         def flat(a):
-            return jnp.asarray(a.reshape((C * S,) + a.shape[2:]))
+            return a.reshape((C * S,) + a.shape[2:])
 
-        with enable_x64():
-            done, lat, _lat_n, t_end, nreacq, npass = _run_events_batch(
-                alg, T, N, K, n_events, flat(loc), flat(b_init),
-                thread_node, lock_node,
-                tuple(flat(cost_rows[..., j]) for j in range(_N_COSTS)),
-                flat(seeds))
-        done = np.asarray(done).reshape(C, S, T)
-        lat = np.asarray(lat).reshape(C, S, LAT_SAMPLES)
-        t_end = np.asarray(t_end).reshape(C, S)
-        nreacq = np.asarray(nreacq).reshape(C, S)
-        npass = np.asarray(npass).reshape(C, S)
+        done, lat, _lat_n, t_end, nreacq, npass = _exec_bucket(
+            key, thread_node, lock_node, flat(loc), flat(b_init),
+            flat(cost_rows), flat(seeds), flat(zcdfs), backend, devices,
+            chunk)
+        done = done.reshape(C, S, T)
+        lat = lat.reshape(C, S, LAT_SAMPLES)
+        t_end = t_end.reshape(C, S)
+        nreacq = nreacq.reshape(C, S)
+        npass = npass.reshape(C, S)
 
         for row, i in enumerate(idxs):
             ops = done[row].sum(axis=1).astype(np.int64)

@@ -13,6 +13,28 @@ int32 clocks wrap after ~2.1s of simulated time — roughly 2M events at
 ~1us/event — which silently corrupts the argmin event order, so widening is
 correctness, not hygiene. f32 time would likewise lose sub-ulp increments
 past ~10ms.
+
+Two execution backends share this module's semantics:
+
+  * ``backend="xla"`` — the original serial ``lax.fori_loop`` over
+    ``sem_step`` (argmin + ``lax.switch`` per event). This path is the
+    correctness oracle.
+  * ``backend="pallas"`` — ``repro.kernels.event_loop``: the same loop as a
+    Pallas kernel with all per-replica state (Sem, ready/busy clocks,
+    latency ring) resident in VMEM for the whole run, replicas tiled across
+    the grid, branch dispatch re-expressed as masked ``jnp.select`` over PC
+    classes. Bitwise-identical outputs to the XLA path (tested); the
+    workload draws are precomputed per event from the same counter-based
+    ``jax.random.fold_in`` stream so per-seed results match exactly.
+
+``backend="auto"`` picks pallas on TPU and the XLA loop elsewhere; asking
+for pallas explicitly on CPU runs the kernel in interpret mode.
+
+Workloads: thread ``tid`` draws its next lock target in two stages — a
+node (own node with probability ``locality``, else uniform remote) and a
+lock within that node drawn from a Zipf(``zipf_s``) CDF (``zipf_s=0`` is
+uniform). The CDF is a *traced operand*, so a sweep can mix skews without
+recompiling.
 """
 from __future__ import annotations
 
@@ -21,6 +43,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.experimental import enable_x64
 
@@ -267,6 +290,36 @@ class SimConfig(NamedTuple):
     locality: float           # P(target lock is on own node)
     b_init: tuple = (5, 20)   # (local, remote) budgets
     seed: int = 0
+    zipf_s: float = 0.0       # Zipf skew of the per-node lock choice
+
+
+def zipf_cdf(kpn: int, s: float) -> np.ndarray:
+    """Inclusive CDF of a Zipf(s) draw over the ``kpn`` locks of one node.
+
+    ``cdf[j] = P(lock_rank <= j)`` with ``P(rank j) ∝ (j+1)^-s``; ``s=0`` is
+    the uniform workload. float32 so it can ride the traced batch axis next
+    to ``locality`` without recompiles.
+    """
+    if kpn < 1:
+        raise ValueError(f"need at least one lock per node, got kpn={kpn}")
+    ranks = np.arange(1, kpn + 1, dtype=np.float64)
+    w = ranks ** (-float(s))
+    return np.cumsum(w / w.sum()).astype(np.float32)
+
+
+def resolve_backend(backend: str) -> str:
+    """'auto' -> pallas where natively supported (TPU), else the XLA loop.
+
+    Explicitly requesting 'pallas' off-TPU runs the kernel in interpret
+    mode (slow, but bitwise-faithful — that is what the equivalence tests
+    exercise on CPU CI).
+    """
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend not in ("xla", "pallas"):
+        raise ValueError(
+            f"backend must be 'xla', 'pallas' or 'auto', got {backend!r}")
+    return backend
 
 
 class SimResult(NamedTuple):
@@ -283,13 +336,19 @@ LAT_SAMPLES = 1 << 15
 
 
 def _run_events(alg, T, N, K, n_events, locality, b_init, thread_node,
-                lock_node, costs, seed):
-    """Serial next-event loop for one (config, seed) point.
+                lock_node, costs, seed, zcdf):
+    """Serial next-event loop for one (config, seed) point — XLA backend.
 
     Plain (unjitted) so callers can compose it: ``simulate`` jits it directly
     (``_run_events_jit``), ``batch.sweep`` vmaps it over a flattened
     (config x seed) axis. Must run under ``enable_x64()`` so the clock
-    arrays below really are int64.
+    arrays below really are int64. ``zcdf`` is the (K//N,) float32 Zipf CDF
+    of the within-node lock draw (see ``zipf_cdf``); it is a traced operand
+    and may vary per replica in the batched path.
+
+    The Pallas backend (``repro.kernels.event_loop``) reproduces this loop
+    bitwise; any semantic change here must be mirrored there (the
+    equivalence tests will catch a divergence).
     """
     (c_local, c_poll, c_cs, c_think, c_svc_r, c_svc_l, c_wire_r,
      c_wire_l) = costs
@@ -315,7 +374,11 @@ def _run_events(alg, T, N, K, n_events, locality, b_init, thread_node,
         other = (mynode + 1 +
                  jax.random.randint(k2, (), 0, max(N - 1, 1), dtype=I32)) % N
         node = jnp.where(go_local, mynode, other).astype(I32)
-        new_t = node * kpn + jax.random.randint(k3, (), 0, kpn, dtype=I32)
+        u3 = jax.random.uniform(k3, dtype=jnp.float32)
+        # inverse-CDF draw of the within-node lock (uniform when zipf_s=0);
+        # clamp guards the cumsum's final float32 ulp falling short of 1.0
+        off = jnp.minimum(jnp.sum(u3 >= zcdf).astype(I32), kpn - 1)
+        new_t = node * kpn + off
         new_c = (node != mynode).astype(I32)
 
         was_ncs_bound = (sem.pc[tid] == mc.REL_CAS) | (sem.pc[tid] == mc.PASS) \
@@ -378,7 +441,15 @@ def topology(alg: str, n_nodes: int, threads_per_node: int, n_locks: int,
     model, i.e. constant within a ``batch.sweep`` shape bucket.
     """
     T, N, K = n_nodes * threads_per_node, n_nodes, n_locks
-    assert K % N == 0, "locks must partition evenly across nodes"
+    if N < 1 or K < 1:
+        raise ValueError(f"need n_nodes >= 1 and n_locks >= 1, got "
+                         f"(n_locks={K}, n_nodes={N})")
+    if K % N != 0:
+        # a real error, not an assert: benchmark CLIs feed user arguments
+        # straight in here, and asserts vanish under `python -O`
+        raise ValueError(
+            f"locks must partition evenly across nodes: n_locks={K} is not "
+            f"a multiple of n_nodes={N} (got (n_locks, n_nodes)=({K}, {N}))")
     thread_node = jnp.asarray([t // threads_per_node for t in range(T)], I32)
     lock_node = jnp.asarray([k // (K // N) for k in range(K)], I32)
     uses_loopback = alg != "alock"
@@ -392,16 +463,29 @@ def topology(alg: str, n_nodes: int, threads_per_node: int, n_locks: int,
 
 
 def simulate(cfg: SimConfig, n_events: int = 400_000,
-             cm: CostModel = CostModel()) -> SimResult:
+             cm: CostModel = CostModel(), backend: str = "auto") -> SimResult:
     T = cfg.n_nodes * cfg.threads_per_node
     N, K = cfg.n_nodes, cfg.n_locks
     thread_node, lock_node, costs = topology(
         cfg.alg, N, cfg.threads_per_node, K, cm)
+    zcdf = jnp.asarray(zipf_cdf(K // N, cfg.zipf_s))
+    backend = resolve_backend(backend)
     with enable_x64():
-        done, lat, lat_n, t_end, nreacq, npass = _run_events_jit(
-            cfg.alg, T, N, K, n_events, jnp.float32(cfg.locality),
-            jnp.asarray(cfg.b_init, I32), thread_node, lock_node,
-            tuple(jnp.int32(c) for c in costs), cfg.seed)
+        if backend == "pallas":
+            from repro.kernels.event_loop.ops import run_events_jit
+            out = run_events_jit(
+                cfg.alg, T, N, K, n_events,
+                jnp.float32(cfg.locality)[None],
+                jnp.asarray(cfg.b_init, I32)[None],
+                thread_node, lock_node,
+                jnp.asarray(costs, I32)[None],
+                jnp.asarray([cfg.seed], I32), zcdf[None])
+            done, lat, lat_n, t_end, nreacq, npass = (o[0] for o in out)
+        else:
+            done, lat, lat_n, t_end, nreacq, npass = _run_events_jit(
+                cfg.alg, T, N, K, n_events, jnp.float32(cfg.locality),
+                jnp.asarray(cfg.b_init, I32), thread_node, lock_node,
+                tuple(jnp.int32(c) for c in costs), cfg.seed, zcdf)
     ops = int(done.sum())
     sim_ns = max(int(t_end), 1)
     return SimResult(ops, sim_ns, ops / sim_ns * 1e3, lat, done,

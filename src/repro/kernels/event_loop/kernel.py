@@ -1,0 +1,300 @@
+"""Pallas TPU kernel: the discrete-event simulator's next-event loop.
+
+``sim._run_events`` is a serial argmin+switch ``fori_loop`` lowered through
+XLA: every event re-dispatches a chain of gather/scatter/select HLOs against
+HBM-resident state. This kernel keeps ALL per-replica state — the semantic
+``Sem`` machine (tails/victim/word, per-thread descriptors), the ``ready``/
+``busy``/``op_start`` clocks and the latency ring — resident in VMEM for the
+entire ``n_events`` run: one HBM read and one write per replica, replicas
+tiled across the first grid axis exactly like ``kernels/alock_tick``.
+
+Layout
+  grid = (replica_tiles, event_chunks); the second axis is the innermost
+  (sequential) one, so VMEM scratch carries the simulation state from chunk
+  to chunk while each chunk streams in its (tile, ev_chunk) slice of the
+  precomputed workload draws. Outputs index-map to the same block for every
+  chunk and are only flushed to HBM when the tile changes.
+
+Branch dispatch
+  ``sim.sem_step``'s ``lax.switch`` over 14 PC branches is re-expressed as
+  masked ``jnp.select`` over the PC classes (the ``alock_tick`` pattern):
+  per event each replica row computes every branch's update and keeps the
+  one selected by its thread's PC. Scatters at per-row indices (lock k,
+  thread tid/pred/succ, node) are one-hot masked writes.
+
+Randomness
+  The XLA loop draws from ``jax.random.fold_in(key, i)`` per event. Those
+  draws depend only on (seed, i) — never on simulation state — so ``ops.py``
+  precomputes the whole stream with the *same* jax.random calls and feeds
+  the kernel three int32 streams (go_local, remote-node offset, within-node
+  Zipf offset). Per-seed results are therefore bitwise-equal to the XLA
+  path, which the tier-1 equivalence tests assert.
+
+Clocks are int64 (callers hold ``enable_x64()``, as for the XLA path); on
+CPU the kernel runs in interpret mode where i64 vector state is free. The
+semantic state stays int32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core import machine as mc
+from repro.core.sim import (LAT_SAMPLES, OP_CS, OP_LOCAL, OP_LOOP, OP_POLL,
+                            OP_RDMA, OP_THINK)
+
+I32 = jnp.int32
+I64 = jnp.int64
+
+
+def event_loop_kernel(glocal_ref, r2_ref, r3_ref, binit_ref, costs_ref,
+                      tn_ref, ln_ref,
+                      done_ref, lat_ref, latn_ref, tend_ref, reacq_ref,
+                      npass_ref,
+                      s_t0, s_t1, s_vic, s_pc, s_bud, s_nxt, s_prev, s_tgt,
+                      s_coh, s_ready, s_busy, s_opst,
+                      *, alg: str, T: int, N: int, K: int, n_events: int,
+                      ev_chunk: int):
+    """One (replica_tile, event_chunk) grid step.
+
+    s_t0/s_t1 are the two cohort tails for alock; for mcs/spinlock s_t0 is
+    the lock word and s_t1/s_vic stay zero (those PCs are unreachable).
+    """
+    is_alock = alg == "alock"
+    is_spin = alg == "spinlock"
+    j = pl.program_id(1)
+    tile = s_pc.shape[0]
+    kpn = K // N
+
+    @pl.when(j == 0)
+    def _init():
+        # fresh replicas == sim.init_sem + zeroed clocks/accounting
+        for ref in (s_t0, s_t1, s_vic, s_nxt, s_prev, s_tgt, s_coh,
+                    s_ready, s_busy, s_opst, done_ref, latn_ref, tend_ref,
+                    reacq_ref, npass_ref):
+            ref[...] = jnp.zeros(ref.shape, ref.dtype)
+        s_pc[...] = jnp.full((tile, T), mc.NCS, I32)
+        s_bud[...] = jnp.full((tile, T), -1, I32)
+        lat_ref[...] = jnp.full((tile, LAT_SAMPLES), -1, I64)
+
+    glocal = glocal_ref[...].astype(I32)
+    r2s = r2_ref[...].astype(I32)
+    r3s = r3_ref[...].astype(I32)
+    binit = binit_ref[...].astype(I32)
+    cst = costs_ref[...].astype(I32)
+    tn = jnp.broadcast_to(tn_ref[...].astype(I32), (tile, T))
+    ln = jnp.broadcast_to(ln_ref[...].astype(I32), (tile, K))
+
+    rows = jnp.arange(tile)
+    tids = jnp.arange(T, dtype=I32)[None, :]
+    kio = jnp.arange(K, dtype=I32)[None, :]
+    nio = jnp.arange(N, dtype=I32)[None, :]
+
+    def gat_t(arr, idx):
+        """(tile, T) gathered at per-row thread idx -> (tile,). The sum
+        dtype is pinned: under x64 ``jnp.sum(int32)`` would widen to the
+        default int and poison every downstream carry dtype."""
+        return jnp.sum(jnp.where(tids == idx[:, None], arr, 0), axis=1,
+                       dtype=arr.dtype)
+
+    def gat_k(arr, idx):
+        return jnp.sum(jnp.where(kio == idx[:, None], arr, 0), axis=1,
+                       dtype=arr.dtype)
+
+    state = (s_t0[...], s_t1[...], s_vic[...], s_pc[...], s_bud[...],
+             s_nxt[...], s_prev[...], s_tgt[...], s_coh[...],
+             s_ready[...], s_busy[...], s_opst[...],
+             done_ref[...], lat_ref[...], latn_ref[...][:, 0],
+             reacq_ref[...][:, 0], npass_ref[...][:, 0])
+
+    def step(e, st):
+        (t0, t1, vic, pc, bud, nxt, prv, tgt, coh, ready, busy, opst,
+         done, lat, latn, reacq, npass) = st
+
+        tid = jnp.argmin(ready, axis=1).astype(I32)
+        ohT = tids == tid[:, None]
+        now = jnp.sum(jnp.where(ohT, ready, 0), axis=1)
+        me = tid + 1
+        p = gat_t(pc, tid)
+        tg = gat_t(tgt, tid)
+        ch = gat_t(coh, tid)
+        bd = gat_t(bud, tid)
+        nx = gat_t(nxt, tid)
+        pv = gat_t(prv, tid)
+        ohK = kio == tg[:, None]
+        mynode = gat_t(tn, tid)
+
+        # -- workload draw (precomputed stream; NCS branch consumes it) ----
+        ge = lax.dynamic_index_in_dim(glocal, e, 1, keepdims=False)
+        r2e = lax.dynamic_index_in_dim(r2s, e, 1, keepdims=False)
+        r3e = lax.dynamic_index_in_dim(r3s, e, 1, keepdims=False)
+        other = (mynode + 1 + r2e) % N
+        node_w = jnp.where(ge != 0, mynode, other).astype(I32)
+        new_t = node_w * kpn + r3e
+        new_c = (node_w != mynode).astype(I32)
+
+        # -- PC class masks (exactly one true per row) ---------------------
+        is_ncs = p == mc.NCS
+        is_swap = p == mc.SWAP
+        is_wn = p == mc.WRITE_NEXT
+        is_sb = p == mc.SPIN_BUDGET
+        is_sv = p == mc.SET_VICTIM
+        is_svr = p == mc.SET_VICTIM_R
+        is_pw = p == mc.PET_WAIT
+        is_pwr = p == mc.PET_WAIT_R
+        is_cs = p == mc.CS
+        is_rc = p == mc.REL_CAS
+        is_sn = p == mc.SPIN_NEXT
+        is_ps = p == mc.PASS
+        is_slc = p == mc.SL_CAS
+        is_slr = p == mc.SL_REL
+
+        Bc = jnp.where(ch == 0, binit[:, 0], binit[:, 1])
+        tail_c = jnp.where(ch == 0, gat_k(t0, tg), gat_k(t1, tg))
+        tail_o = jnp.where(ch == 0, gat_k(t1, tg), gat_k(t0, tg))
+        wv = gat_k(t0, tg)            # lock word at target (mcs/spinlock)
+        vk = gat_k(vic, tg)
+        pred = pv - 1
+        succ = nx - 1
+        oh_pred = tids == pred[:, None]
+        oh_succ = tids == succ[:, None]
+        has_succ = nx != 0
+        prev_val = tail_c if is_alock else wv
+        empty = prev_val == 0
+        solo = (tail_c if is_alock else wv) == me
+        free = wv == 0
+        can = (tail_o == 0) | (vk != ch)
+        newb = (bd - 1) if is_alock else jnp.ones_like(bd)
+
+        # -- lock word / tails / victim ------------------------------------
+        if is_alock:
+            m0 = (is_swap & (ch == 0))[:, None] & ohK
+            m1 = (is_swap & (ch == 1))[:, None] & ohK
+            t0 = jnp.where(m0, me[:, None], t0)
+            t1 = jnp.where(m1, me[:, None], t1)
+            r0 = (is_rc & solo & (ch == 0))[:, None] & ohK
+            r1 = (is_rc & solo & (ch == 1))[:, None] & ohK
+            t0 = jnp.where(r0, 0, t0)
+            t1 = jnp.where(r1, 0, t1)
+            vmask = (is_sv | is_svr)[:, None] & ohK
+            vic = jnp.where(vmask, ch[:, None], vic)
+        else:
+            t0 = jnp.where(is_swap[:, None] & ohK, me[:, None], t0)
+            t0 = jnp.where((is_rc & solo)[:, None] & ohK, 0, t0)
+            t0 = jnp.where((is_slc & free)[:, None] & ohK, me[:, None], t0)
+            t0 = jnp.where(is_slr[:, None] & ohK, 0, t0)
+
+        # -- per-thread descriptors ----------------------------------------
+        prv = jnp.where(is_swap[:, None] & ohT, prev_val[:, None], prv)
+        nxt = jnp.where(is_ncs[:, None] & ohT, 0, nxt)
+        nxt = jnp.where(is_wn[:, None] & oh_pred, me[:, None], nxt)
+        bud_tid_val = jnp.select([is_ncs, is_swap, is_pwr],
+                                 [jnp.full_like(bd, -1), Bc, Bc], bd)
+        swap_bud = (is_swap & empty) if is_alock else jnp.zeros_like(is_swap)
+        bud_tid_m = is_ncs | swap_bud | (is_pwr & can)
+        bud = jnp.where(bud_tid_m[:, None] & ohT, bud_tid_val[:, None], bud)
+        bud = jnp.where(is_ps[:, None] & oh_succ, newb[:, None], bud)
+        tgt = jnp.where(is_ncs[:, None] & ohT, new_t[:, None], tgt)
+        coh = jnp.where(is_ncs[:, None] & ohT, new_c[:, None], coh)
+
+        # -- next PC (the lax.switch, as one select over PC classes) -------
+        first = mc.SL_CAS if is_spin else mc.SWAP
+        if is_alock:
+            pc_swap = jnp.where(empty, mc.SET_VICTIM, mc.WRITE_NEXT)
+            pc_sb = jnp.where(bd == -1, mc.SPIN_BUDGET,
+                              jnp.where(bd == 0, mc.SET_VICTIM_R, mc.CS))
+        else:
+            pc_swap = jnp.where(empty, mc.CS, mc.WRITE_NEXT)
+            pc_sb = jnp.where(bd == -1, mc.SPIN_BUDGET, mc.CS)
+        new_pc = jnp.select(
+            [is_ncs, is_swap, is_wn, is_sb, is_sv, is_svr, is_pw, is_pwr,
+             is_cs, is_rc, is_sn, is_ps, is_slc, is_slr],
+            [jnp.full_like(p, first), pc_swap,
+             jnp.full_like(p, mc.SPIN_BUDGET), pc_sb,
+             jnp.full_like(p, mc.PET_WAIT), jnp.full_like(p, mc.PET_WAIT_R),
+             jnp.where(can, mc.CS, mc.PET_WAIT),
+             jnp.where(can, mc.CS, mc.PET_WAIT_R),
+             jnp.full_like(p, mc.SL_REL if is_spin else mc.REL_CAS),
+             jnp.where(solo, mc.NCS, mc.SPIN_NEXT),
+             jnp.where(has_succ, mc.PASS, mc.SPIN_NEXT),
+             jnp.full_like(p, mc.NCS),
+             jnp.where(free, mc.CS, mc.SL_CAS),
+             jnp.full_like(p, mc.NCS)],
+            p).astype(I32)
+        pc = jnp.where(ohT, new_pc[:, None], pc)
+
+        # -- cost opcode + RNIC node (sim._step_fns' cost functions) -------
+        lnode = gat_k(ln, tg)
+        pred_node = gat_t(tn, pred)
+        succ_node = gat_t(tn, succ)
+        if is_alock:
+            lock_code = jnp.where(ch == 0, OP_LOCAL, OP_RDMA)
+            peer_local = OP_LOCAL
+        else:
+            lock_code = jnp.where(lnode == mynode, OP_LOOP, OP_RDMA)
+            peer_local = OP_LOOP
+        lock_m = (is_swap | is_sv | is_svr | is_pw | is_pwr | is_rc
+                  | is_slc | is_slr)
+        code = jnp.select(
+            [is_ncs, is_wn, is_sb, is_cs, is_sn, is_ps, lock_m],
+            [jnp.full_like(p, OP_THINK),
+             jnp.where(pred_node == mynode, peer_local, OP_RDMA),
+             jnp.where(bd == -1, OP_POLL, OP_LOCAL),
+             jnp.full_like(p, OP_CS),
+             jnp.where(has_succ, OP_LOCAL, OP_POLL),
+             jnp.where(succ_node == mynode, peer_local, OP_RDMA),
+             lock_code], 0).astype(I32)
+        tnode = jnp.select([is_wn, is_ps, lock_m],
+                           [pred_node, succ_node, lnode], 0).astype(I32)
+
+        # -- cost application (identical int arithmetic to _run_events) ----
+        is_rdma = (code == OP_RDMA) | (code == OP_LOOP)
+        svc = jnp.where(code == OP_LOOP, cst[:, 5], cst[:, 4])
+        wire = jnp.where(code == OP_LOOP, cst[:, 7], cst[:, 6])
+        ohN = nio == tnode[:, None]
+        busy_t = jnp.sum(jnp.where(ohN, busy, 0), axis=1)
+        start = jnp.maximum(now, busy_t)
+        fin = start + svc
+        busy = jnp.where(is_rdma[:, None] & ohN, fin[:, None], busy)
+        dt_plain = jnp.select(
+            [code == OP_LOCAL, code == OP_POLL, code == OP_CS,
+             code == OP_THINK],
+            [cst[:, 0], cst[:, 1], cst[:, 2], cst[:, 3]], cst[:, 0])
+        new_ready = jnp.where(is_rdma, fin + wire, now + dt_plain)
+        ready = jnp.where(ohT, new_ready[:, None], ready)
+
+        # -- completion accounting (latency ring, counters) ----------------
+        finished = (is_rc | is_ps | is_slr) & (new_pc == mc.NCS)
+        lat_val = now - jnp.sum(jnp.where(ohT, opst, 0), axis=1)
+        slot = latn % LAT_SAMPLES
+        lat = lat.at[rows, slot].set(
+            jnp.where(finished, lat_val, lat[rows, slot]))
+        latn = latn + finished.astype(I32)
+        done = done + jnp.where(ohT & finished[:, None], 1, 0).astype(I32)
+        opst = jnp.where(is_ncs[:, None] & ohT, new_ready[:, None], opst)
+        reacq = reacq + (is_sb & (new_pc == mc.SET_VICTIM_R)).astype(I32)
+        npass = npass + is_ps.astype(I32)
+
+        new_st = (t0, t1, vic, pc, bud, nxt, prv, tgt, coh, ready, busy,
+                  opst, done, lat, latn, reacq, npass)
+        # ragged final chunk: events past n_events are masked no-ops
+        valid = (j * ev_chunk + e) < n_events
+        return tuple(jnp.where(valid, n, o) for n, o in zip(new_st, st))
+
+    state = lax.fori_loop(0, ev_chunk, step, state)
+    (t0, t1, vic, pc, bud, nxt, prv, tgt, coh, ready, busy, opst,
+     done, lat, latn, reacq, npass) = state
+
+    for ref, val in ((s_t0, t0), (s_t1, t1), (s_vic, vic), (s_pc, pc),
+                     (s_bud, bud), (s_nxt, nxt), (s_prev, prv), (s_tgt, tgt),
+                     (s_coh, coh), (s_ready, ready), (s_busy, busy),
+                     (s_opst, opst)):
+        ref[...] = val
+    done_ref[...] = done
+    lat_ref[...] = lat
+    latn_ref[...] = latn[:, None]
+    tend_ref[...] = jnp.max(ready, axis=1)[:, None]
+    reacq_ref[...] = reacq[:, None]
+    npass_ref[...] = npass[:, None]

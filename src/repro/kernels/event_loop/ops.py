@@ -1,0 +1,158 @@
+"""Public entry points for the Pallas event-loop backend.
+
+``run_events`` mirrors ``sim._run_events``'s batched contract (leading
+replica axis B on every per-replica operand) and returns the same tuple
+(done, lat, lat_n, t_end, nreacq, npass). Replicas are padded to a tile
+multiple and tiled across the first grid axis; events are padded to a chunk
+multiple and streamed along the second (sequential) grid axis while the
+simulation state persists in VMEM scratch.
+
+The workload draw stream is precomputed here (``precompute_draws``) from
+the identical ``jax.random.fold_in`` counter scheme the XLA loop uses —
+draws depend only on (seed, event index), never on simulation state, so
+hoisting them preserves bitwise equality while keeping the kernel integer-
+only. The precompute itself is one vmapped pass fused into the surrounding
+jit, not a per-event dispatch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.sim import I32, I64, LAT_SAMPLES
+from repro.kernels.event_loop.kernel import event_loop_kernel
+
+DEFAULT_TILE = 8
+DEFAULT_EV_CHUNK = 4096
+
+
+def default_interpret() -> bool:
+    """Native Mosaic lowering on TPU; interpreter everywhere else."""
+    return jax.default_backend() != "tpu"
+
+
+def precompute_draws(seed, locality, zcdf, n_events: int, N: int, kpn: int):
+    """The per-event workload draw stream, replica-batched.
+
+    Returns int32 (B, n_events) arrays (go_local, remote_offset,
+    zipf_offset) — exactly the values ``sim._run_events`` draws at event i
+    from ``split(fold_in(key, i), 3)``, so consuming them in-kernel
+    reproduces the XLA path bit for bit.
+    """
+    def one(sd, loc, cdf):
+        key = jax.random.key(sd)
+
+        def ev(i):
+            k1, k2, k3 = jax.random.split(jax.random.fold_in(key, i), 3)
+            go = jax.random.uniform(k1, dtype=jnp.float32) < loc
+            r2 = jax.random.randint(k2, (), 0, max(N - 1, 1), dtype=I32)
+            u3 = jax.random.uniform(k3, dtype=jnp.float32)
+            r3 = jnp.minimum(jnp.sum(u3 >= cdf).astype(I32), kpn - 1)
+            return go.astype(I32), r2, r3
+
+        return jax.vmap(ev)(jnp.arange(n_events))
+
+    return jax.vmap(one)(seed, locality, zcdf)
+
+
+def run_events(alg, T, N, K, n_events, locality, b_init, thread_node,
+               lock_node, costs, seed, zcdf, *, tile: int = DEFAULT_TILE,
+               ev_chunk: int = DEFAULT_EV_CHUNK, interpret=None):
+    """Batched Pallas event loop; must run under ``enable_x64()``.
+
+    locality (B,) f32, b_init (B,2) i32, costs (B,8) i32 (or a tuple of 8
+    (B,) arrays, as the XLA batch path passes them), seed (B,) i32,
+    zcdf (B, K//N) f32; thread_node (T,)/lock_node (K,) broadcast. Returns
+    (done (B,T) i32, lat (B,LAT_SAMPLES) i64, lat_n (B,) i32, t_end (B,)
+    i64, nreacq (B,) i32, npass (B,) i32).
+
+    B need not divide the replica tile and n_events need not divide the
+    event chunk: replicas are edge-padded (duplicates, sliced off) and the
+    final chunk masks events past n_events inside the kernel.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    if isinstance(costs, (tuple, list)):
+        costs = jnp.stack(costs, axis=-1)
+    B = locality.shape[0]
+    if n_events < 1:
+        # degenerate run: match the XLA loop's 0-iteration outputs instead
+        # of tracing a zero-size grid (which Pallas rejects obscurely)
+        return (jnp.zeros((B, T), I32),
+                jnp.full((B, LAT_SAMPLES), -1, I64), jnp.zeros(B, I32),
+                jnp.zeros(B, I64), jnp.zeros(B, I32), jnp.zeros(B, I32))
+    kpn = K // N
+    glocal, r2, r3 = precompute_draws(seed, locality, zcdf, n_events, N, kpn)
+
+    tile = max(1, min(tile, B))
+    pad_b = -B % tile
+    ev_chunk = max(1, min(ev_chunk, n_events))
+    pad_e = -n_events % ev_chunk
+
+    def prep(a):
+        a = jnp.asarray(a)
+        return jnp.pad(a, ((0, pad_b),) + ((0, 0),) * (a.ndim - 1),
+                       mode="edge") if pad_b else a
+
+    glocal, r2, r3 = (jnp.pad(prep(a), ((0, 0), (0, pad_e))) if pad_e
+                      else prep(a) for a in (glocal, r2, r3))
+    b_init, costs = prep(b_init), prep(costs)
+    Bp = B + pad_b
+    n_chunks = (n_events + pad_e) // ev_chunk
+    grid = (Bp // tile, n_chunks)
+
+    def row(w):
+        return pl.BlockSpec((tile, w), lambda i, j: (i, 0))
+
+    out = pl.pallas_call(
+        functools.partial(event_loop_kernel, alg=alg, T=T, N=N, K=K,
+                          n_events=n_events, ev_chunk=ev_chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, ev_chunk), lambda i, j: (i, j)),
+            pl.BlockSpec((tile, ev_chunk), lambda i, j: (i, j)),
+            pl.BlockSpec((tile, ev_chunk), lambda i, j: (i, j)),
+            row(2), row(8),
+            pl.BlockSpec((1, T), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, K), lambda i, j: (0, 0)),
+        ],
+        out_specs=[row(T), row(LAT_SAMPLES), row(1), row(1), row(1), row(1)],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, T), I32),
+            jax.ShapeDtypeStruct((Bp, LAT_SAMPLES), I64),
+            jax.ShapeDtypeStruct((Bp, 1), I32),
+            jax.ShapeDtypeStruct((Bp, 1), I64),
+            jax.ShapeDtypeStruct((Bp, 1), I32),
+            jax.ShapeDtypeStruct((Bp, 1), I32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tile, K), I32),   # tail0 / lock word
+            pltpu.VMEM((tile, K), I32),   # tail1
+            pltpu.VMEM((tile, K), I32),   # victim
+            pltpu.VMEM((tile, T), I32),   # pc
+            pltpu.VMEM((tile, T), I32),   # budget
+            pltpu.VMEM((tile, T), I32),   # nxt
+            pltpu.VMEM((tile, T), I32),   # prev
+            pltpu.VMEM((tile, T), I32),   # target
+            pltpu.VMEM((tile, T), I32),   # cohort
+            pltpu.VMEM((tile, T), I64),   # ready
+            pltpu.VMEM((tile, N), I64),   # busy
+            pltpu.VMEM((tile, T), I64),   # op_start
+        ],
+        interpret=interpret,
+    )(glocal, r2, r3, b_init,
+      jnp.asarray(costs, I32),
+      jnp.asarray(thread_node, I32)[None, :],
+      jnp.asarray(lock_node, I32)[None, :])
+    done, lat, lat_n, t_end, nreacq, npass = (o[:B] for o in out)
+    return (done, lat, lat_n[:, 0], t_end[:, 0], nreacq[:, 0],
+            npass[:, 0])
+
+
+run_events_jit = functools.partial(
+    jax.jit, static_argnames=("alg", "T", "N", "K", "n_events", "tile",
+                              "ev_chunk", "interpret"))(run_events)

@@ -1,0 +1,35 @@
+"""XLA oracle for the event-loop kernel: the serial ``sim._run_events``
+next-event loop, vmapped over the flattened replica axis.
+
+``repro.core.sim._run_events`` is the single source of truth for the
+simulator's semantics; this wrapper gives it the same batched call
+signature as ``ops.run_events`` so the kernel tests can diff the two paths
+operand-for-operand (bitwise — both consume the identical counter-based
+``fold_in`` draw stream). ``batch.sweep``'s sharded XLA leg reuses it as
+its per-shard block, so the oracle and the production fallback are one
+code path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core.sim import _run_events
+
+
+def run_events_ref(alg, T, N, K, n_events, locality, b_init, thread_node,
+                   lock_node, costs, seed, zcdf):
+    """Batched XLA reference. Operands carry a leading replica axis B:
+    locality (B,), b_init (B,2), costs (B,8), seed (B,), zcdf (B,K//N);
+    thread_node (T,) and lock_node (K,) broadcast. Returns
+    (done (B,T), lat (B,LAT), lat_n (B,), t_end (B,), nreacq (B,),
+    npass (B,)) — must run under ``enable_x64()``.
+    """
+    point = functools.partial(_run_events, alg, T, N, K, n_events)
+
+    def one(loc, bi, cst, sd, zc):
+        return point(loc, bi, thread_node, lock_node,
+                     tuple(cst[j] for j in range(cst.shape[0])), sd, zc)
+
+    return jax.vmap(one)(locality, b_init, costs, seed, zcdf)

@@ -1,0 +1,146 @@
+"""Event-loop Pallas kernel vs the XLA oracle (bitwise), sharded/chunked
+sweep vs the single-dispatch layout (bitwise), and the workload-draw
+satellites (Zipf CDF operand, topology ValueError)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from repro.core import batch
+from repro.core.sim import SimConfig, simulate, topology, zipf_cdf
+
+EV = 1500
+
+
+def _assert_same(rx, rp):
+    assert rx.ops == rp.ops
+    assert rx.sim_ns == rp.sim_ns
+    assert rx.reacquires == rp.reacquires
+    assert rx.passes == rp.passes
+    np.testing.assert_array_equal(np.asarray(rx.lat_ns),
+                                  np.asarray(rp.lat_ns))
+    np.testing.assert_array_equal(np.asarray(rx.per_thread_ops),
+                                  np.asarray(rp.per_thread_ops))
+
+
+@pytest.mark.parametrize("alg", ["alock", "spinlock", "mcs"])
+@pytest.mark.parametrize("loc", [0.85, 1.0])
+def test_pallas_simulate_bitwise_matches_xla(alg, loc):
+    """The tentpole contract: same (config, seed) -> bitwise-identical
+    done/lat/t_end through the Pallas kernel (interpret mode on CPU)."""
+    cfg = SimConfig(alg, 2, 2, 8, loc, (2, 3), seed=7)
+    _assert_same(simulate(cfg, n_events=EV, backend="xla"),
+                 simulate(cfg, n_events=EV, backend="pallas"))
+
+
+def test_pallas_bitwise_with_zipf_and_multi_node():
+    cfg = SimConfig("alock", 3, 4, 6, 0.9, (5, 20), seed=3, zipf_s=1.2)
+    _assert_same(simulate(cfg, n_events=EV, backend="xla"),
+                 simulate(cfg, n_events=EV, backend="pallas"))
+
+
+def test_kernel_ragged_tile_and_chunk_bitwise():
+    """Replica count not a tile multiple + events not a chunk multiple must
+    pad internally and still match the vmapped XLA reference exactly."""
+    from repro.kernels.event_loop.ops import run_events
+    from repro.kernels.event_loop.ref import run_events_ref
+    alg, N, tpn, K = "alock", 3, 4, 6
+    T, B, ev = N * tpn, 5, 1100
+    tn, ln, costs = topology(alg, N, tpn, K)
+    loc = jnp.asarray(np.float32([0.9, 1.0, 0.5, 0.85, 0.95]))
+    bi = jnp.asarray(np.tile(np.int32([2, 3]), (B, 1)))
+    cst = jnp.asarray(np.tile(np.int32(costs), (B, 1)))
+    sd = jnp.arange(B, dtype=np.int32) + 11
+    zc = jnp.asarray(np.stack([zipf_cdf(K // N, s)
+                               for s in (0.0, 1.2, 0.7, 0.0, 2.0)]))
+    with enable_x64():
+        ref = run_events_ref(alg, T, N, K, ev, loc, bi, tn, ln, cst, sd, zc)
+        out = run_events(alg, T, N, K, ev, loc, bi, tn, ln, cst, sd, zc,
+                         tile=2, ev_chunk=256, interpret=True)
+    for a, b in zip(ref, out):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sweep_pallas_backend_matches_xla():
+    cfgs = [SimConfig("mcs", 2, 2, 8, 0.9, seed=1),
+            SimConfig("alock", 2, 2, 8, 0.95, (2, 3), seed=5)]
+    rx = batch.sweep(cfgs, n_seeds=2, n_events=EV, backend="xla")
+    rp = batch.sweep(cfgs, n_seeds=2, n_events=EV, backend="pallas")
+    for a, b in zip(rx, rp):
+        np.testing.assert_array_equal(a.ops, b.ops)
+        np.testing.assert_array_equal(a.sim_ns, b.sim_ns)
+        np.testing.assert_array_equal(a.lat_ns, b.lat_ns)
+        np.testing.assert_array_equal(a.per_thread_ops, b.per_thread_ops)
+
+
+def test_sweep_chunked_matches_unsharded_and_counts_dispatches():
+    """A bucket larger than the chunk spills into fixed-size dispatches of
+    one shared executable; results stay bitwise-equal to the one-dispatch
+    layout."""
+    cfgs = [SimConfig("alock", 2, 2, 8, l, (2, 3), seed=s, zipf_s=z)
+            for l, s, z in ((0.9, 7, 0.0), (0.5, 1, 1.2), (0.95, 3, 0.0))]
+    base = batch.sweep(cfgs, n_seeds=2, n_events=EV)      # bucket B = 6
+    batch.reset_exec_stats()
+    ch = batch.sweep(cfgs, n_seeds=2, n_events=EV, chunk=2)
+    st = batch.exec_stats()
+    assert st["dispatches"] == 3        # ceil(6 / (2 rows * 1 device))
+    for b, c in zip(base, ch):
+        np.testing.assert_array_equal(b.ops, c.ops)
+        np.testing.assert_array_equal(b.sim_ns, c.sim_ns)
+        np.testing.assert_array_equal(b.lat_ns, c.lat_ns)
+        np.testing.assert_array_equal(b.per_thread_ops, c.per_thread_ops)
+    # same chunk shape again: zero new compiles, only dispatches
+    batch.reset_exec_stats()
+    batch.sweep(cfgs, n_seeds=2, n_events=EV, chunk=2)
+    st2 = batch.exec_stats()
+    assert st2["dispatches"] == 3 and st2["compiles"] == 0
+
+
+def test_sweep_devices_path_matches_unsharded():
+    """devices= routes through the shard_map runner (1-device mesh on CPU
+    CI) and must not perturb results."""
+    cfgs = [SimConfig("spinlock", 2, 2, 8, 0.9, seed=2)]
+    base = batch.sweep(cfgs, n_seeds=2, n_events=EV)
+    shd = batch.sweep(cfgs, n_seeds=2, n_events=EV, devices=jax.devices())
+    np.testing.assert_array_equal(base[0].lat_ns, shd[0].lat_ns)
+    np.testing.assert_array_equal(base[0].ops, shd[0].ops)
+
+
+# ---------------------------------------------------------------------------
+# satellites: Zipf workload + topology validation
+
+
+def test_zipf_cdf_properties():
+    u = zipf_cdf(8, 0.0)
+    np.testing.assert_allclose(u, np.arange(1, 9) / 8.0, rtol=1e-6)
+    z = zipf_cdf(8, 1.5)
+    assert z.dtype == np.float32
+    assert np.all(np.diff(z) > 0) and z[-1] == pytest.approx(1.0)
+    # skew concentrates mass on the first ranks
+    assert z[0] > u[0]
+    with pytest.raises(ValueError):
+        zipf_cdf(0, 1.0)
+
+
+def test_zipf_skew_changes_contention():
+    """zipf_s rides the traced axis: same shape bucket, different dynamics
+    (heavier skew -> more contention on the hot lock)."""
+    flat = SimConfig("alock", 2, 2, 8, 1.0, seed=0, zipf_s=0.0)
+    hot = SimConfig("alock", 2, 2, 8, 1.0, seed=0, zipf_s=4.0)
+    r0 = simulate(flat, n_events=6_000)
+    r4 = simulate(hot, n_events=6_000)
+    assert r0.ops > 0 and r4.ops > 0
+    # with s=4 nearly every draw is the node's rank-0 lock; the serialized
+    # hot lock completes fewer ops in the same event count
+    assert r4.ops < r0.ops
+    # and the two ride one executable (same shape key)
+    assert batch.shape_key(flat, 6_000) == batch.shape_key(hot, 6_000)
+
+
+def test_topology_rejects_uneven_lock_partition():
+    with pytest.raises(ValueError, match=r"\(n_locks, n_nodes\)=\(7, 2\)"):
+        topology("alock", 2, 2, 7)
+    with pytest.raises(ValueError):
+        simulate(SimConfig("alock", 3, 2, 8, 0.9), n_events=10)
