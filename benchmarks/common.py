@@ -7,13 +7,19 @@ Every benchmark prints CSV rows: name,us_per_call,derived
   - derived: the figure-specific statistic; simulator rows report
     mean±ci95 across seeds (ci95 is 0.000 for a single seed)
 
-All simulator figures route through ``repro.core.batch.sweep``: configs are
-built up front and bucketed by shape key ``(alg, T, N, K, n_events)``, so
-each bucket compiles once and runs its whole locality/budget/seed batch as
-one vmapped device call. Pass ``--seeds N`` to ``benchmarks.run`` for
-error bars; ``--backend xla|pallas``, ``--devices N`` and ``--chunk R``
-select the execution backend and the sharded bucket layout (see
-``core/batch.py``) for every section at once.
+All simulator figures are built on the declarative Workload/Experiment
+API: each ``fig*`` section composes ``repro.workloads.Workload`` specs
+(per-thread locality, Zipf skew, phases) into a
+``repro.experiments.Experiment`` and runs them as one batched sweep —
+bucketed by shape key ``(alg, T, N, K, n_events)``, one compile per
+bucket, all workload shape as traced operands. Named scenario programs
+(``benchmarks.run --scenario``) come from the registry in
+``repro.experiments.registry``.
+
+Execution choices (backend, device sharding, chunking) travel as an
+explicit immutable ``repro.experiments.ExecOptions`` value, threaded from
+``benchmarks.run`` into every section — there is no process-wide mutable
+execution state (the old ``EXEC`` module global is gone).
 """
 from __future__ import annotations
 
@@ -22,61 +28,43 @@ import os
 import numpy as np
 
 from repro.core.batch import BatchResult, sweep
-from repro.core.sim import SimConfig, SimResult, simulate
+from repro.core.sim import SimResult, simulate
+from repro.experiments import ExecOptions, Experiment
+from repro.workloads import Workload
 
 # Paper-scale default; REPRO_BENCH_EVENTS=2000 gives a fast smoke pass with
 # identical bucketing/compile behavior (n_events is part of the shape key).
 EVENTS = int(os.environ.get("REPRO_BENCH_EVENTS", 150_000))
 
-# Suite-wide execution options, set once by benchmarks.run (or env) and
-# honored by every sweep_all/run call.
-EXEC = {
-    "backend": os.environ.get("REPRO_BACKEND", "auto"),
-    "devices": None,   # int: shard sweeps over jax.devices()[:n]
-    "chunk": None,     # int: rows per device per dispatch
-}
+
+def wl(alg, nodes, tpn, locks, loc, b=(5, 20), seed=0,
+       zipf=0.0, phases=()) -> Workload:
+    return Workload(alg, nodes, tpn, locks, locality=loc, zipf_s=zipf,
+                    b_init=b, seed=seed, phases=phases)
 
 
-def set_exec_options(backend=None, devices=None, chunk=None) -> None:
-    """Install suite-wide backend/sharding choices (None = leave as is)."""
-    if backend is not None:
-        EXEC["backend"] = backend
-    if devices is not None:
-        EXEC["devices"] = int(devices)
-    if chunk is not None:
-        EXEC["chunk"] = int(chunk)
+def experiment(name: str, n_seeds: int = 1, events: int = EVENTS,
+               options: ExecOptions | None = None) -> Experiment:
+    """An Experiment wired to the suite's defaults (env backend honored)."""
+    return Experiment(name, n_seeds=n_seeds, n_events=events,
+                      options=options or ExecOptions.from_env())
 
 
-def _devices():
-    if EXEC["devices"] is None:
-        return None
-    import jax
-    n = EXEC["devices"]
-    devs = jax.devices()
-    if n > len(devs):
-        raise ValueError(f"--devices {n} but only {len(devs)} JAX device(s) "
-                         f"are visible")
-    return devs[:n]
-
-
-def cfg(alg, nodes, tpn, locks, loc, b=(5, 20), seed=0,
-        zipf=0.0) -> SimConfig:
-    return SimConfig(alg, nodes, tpn, locks, loc, b, seed, zipf)
-
-
-def run(alg, nodes, tpn, locks, loc, b=(5, 20), events=EVENTS,
-        seed=0) -> SimResult:
+def run(alg, nodes, tpn, locks, loc, b=(5, 20), events=EVENTS, seed=0,
+        options: ExecOptions | None = None) -> SimResult:
     """One-off serial run (kept for interactive use; figures use sweep)."""
-    return simulate(SimConfig(alg, nodes, tpn, locks, loc, b, seed),
-                    n_events=events, backend=EXEC["backend"])
+    options = options or ExecOptions.from_env()
+    return simulate(wl(alg, nodes, tpn, locks, loc, b, seed),
+                    n_events=events, backend=options.backend)
 
 
-def sweep_all(cfgs, n_seeds: int = 1, events: int = EVENTS) -> dict:
-    """Batched run of deduped ``cfgs``; returns {SimConfig: BatchResult}."""
+def sweep_all(cfgs, n_seeds: int = 1, events: int = EVENTS,
+              options: ExecOptions | None = None) -> dict:
+    """Batched run of deduped ``cfgs``; returns {workload: BatchResult}."""
+    options = options or ExecOptions.from_env()
     uniq = list(dict.fromkeys(cfgs))
     return dict(zip(uniq, sweep(uniq, n_seeds=n_seeds, n_events=events,
-                                backend=EXEC["backend"], devices=_devices(),
-                                chunk=EXEC["chunk"])))
+                                **options.sweep_kwargs())))
 
 
 def us_per_op(r) -> float:

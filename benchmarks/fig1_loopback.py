@@ -3,26 +3,30 @@
 Paper claim: throughput peaks at a few threads, then declines as loopback
 traffic drains PCIe bandwidth. ALock (no loopback) keeps scaling.
 
-One ``sweep`` call covers every (tpn, alg, seed) point; each tpn is its own
-shape bucket (T changes), compiled once. Rows report mean±ci95 across seeds.
+One Experiment covers every (tpn, alg, seed) point; each tpn is its own
+shape bucket (T changes), compiled once. Rows report mean±ci95 across
+seeds.
 """
-from benchmarks.common import cfg, emit, mops, sweep_all, us_per_op
+from benchmarks.common import emit, experiment, mops, us_per_op, wl
+from repro.experiments import ExecOptions
 
 TPNS = (1, 2, 4, 8, 12, 16)
 
 
-def main(n_seeds: int = 1) -> None:
-    cfgs = [cfg(alg, 1, t, 1000, 1.0) for t in TPNS
-            for alg in ("spinlock", "alock")]
-    res = sweep_all(cfgs, n_seeds=n_seeds)
+def main(n_seeds: int = 1, options: ExecOptions | None = None) -> None:
+    exp = experiment("fig1", n_seeds=n_seeds, options=options)
+    for t in TPNS:
+        for alg in ("spinlock", "alock"):
+            exp.add(wl(alg, 1, t, 1000, 1.0), label=f"{alg}.t{t}")
+    res = exp.run()
     peak = 0.0
     last = None
     for tpn in TPNS:
-        r = res[cfg("spinlock", 1, tpn, 1000, 1.0)]
+        r = res[f"spinlock.t{tpn}"]
         emit(f"fig1.spinlock.1node.t{tpn}", us_per_op(r), mops(r))
         peak = max(peak, r.mean_mops)
         last = r.mean_mops
-        a = res[cfg("alock", 1, tpn, 1000, 1.0)]
+        a = res[f"alock.t{tpn}"]
         emit(f"fig1.alock.1node.t{tpn}", us_per_op(a), mops(a))
     emit("fig1.spinlock.collapse_ratio", 0.0,
          f"{peak / max(last, 1e-9):.2f}x_peak_over_t16")

@@ -4,33 +4,40 @@ Paper: averaged over 95/90/85% locality on 20 nodes with 100 locks, raising
 the remote budget to 20 while keeping the local budget at 5 improves
 throughput by up to ~23%.
 
-Every config here shares one shape key (alock, T=240, N=20, K=100), so the
-entire figure — baselines, budget grid, sensitivity strip, all seeds — is a
-single compile + a single vmapped dispatch. Rows report mean±ci95.
+Every workload here shares one shape key (alock, T=240, N=20, K=100), so
+the entire figure — baselines, budget grid, sensitivity strip, all seeds —
+is a single compile + a single vmapped dispatch. Rows report mean±ci95.
 """
 import numpy as np
 
-from benchmarks.common import cfg, emit, mops, sweep_all, us_per_op
+from benchmarks.common import emit, experiment, mops, us_per_op, wl
+from repro.experiments import ExecOptions
 
 NODES, TPN, LOCKS = 20, 12, 100
 LOCALITIES = (0.95, 0.90, 0.85)
 B_SENS = ((1, 1), (2, 2), (2, 8), (2, 20), (20, 5))
 
 
-def main(n_seeds: int = 1) -> None:
-    cfgs = [cfg("alock", NODES, TPN, LOCKS, loc, b=(5, 5))
-            for loc in LOCALITIES]
-    cfgs += [cfg("alock", NODES, TPN, LOCKS, loc, b=(5, rb))
-             for rb in (5, 10, 20) for loc in LOCALITIES]
-    cfgs += [cfg("alock", NODES, TPN, LOCKS, 0.90, b=b) for b in B_SENS]
-    res = sweep_all(cfgs, n_seeds=n_seeds)
+def main(n_seeds: int = 1, options: ExecOptions | None = None) -> None:
+    exp = experiment("fig4", n_seeds=n_seeds, options=options)
+    for loc in LOCALITIES:
+        exp.add(wl("alock", NODES, TPN, LOCKS, loc, b=(5, 5)),
+                label=f"base.loc{int(loc * 100)}")
+        for rb in (10, 20):
+            exp.add(wl("alock", NODES, TPN, LOCKS, loc, b=(5, rb)),
+                    label=f"rb{rb}.loc{int(loc * 100)}")
+    for b in B_SENS:
+        exp.add(wl("alock", NODES, TPN, LOCKS, 0.90, b=b),
+                label=f"b{b[0]}_{b[1]}")
+    res = exp.run()
 
-    base = {loc: res[cfg("alock", NODES, TPN, LOCKS, loc, b=(5, 5))].mean_mops
+    base = {loc: res[f"base.loc{int(loc * 100)}"].mean_mops
             for loc in LOCALITIES}
     for rb in (5, 10, 20):
         sps = []
         for loc in LOCALITIES:
-            br = res[cfg("alock", NODES, TPN, LOCKS, loc, b=(5, rb))]
+            br = res[f"base.loc{int(loc * 100)}" if rb == 5
+                     else f"rb{rb}.loc{int(loc * 100)}"]
             sp = br.mean_mops / max(base[loc], 1e-9)
             sps.append(sp)
             emit(f"fig4.alock.rb{rb}.loc{int(loc*100)}", us_per_op(br),
@@ -41,7 +48,7 @@ def main(n_seeds: int = 1) -> None:
     # budget-space sensitivity: tight budgets force frequent (expensive)
     # reacquires — the mechanism behind the paper's asymmetric choice
     for b in B_SENS:
-        br = res[cfg("alock", NODES, TPN, LOCKS, 0.90, b=b)]
+        br = res[f"b{b[0]}_{b[1]}"]
         emit(f"fig4.alock.b{b[0]}_{b[1]}.loc90", us_per_op(br),
              f"{mops(br)},reacq={br.reacquires.mean():.0f}")
 

@@ -7,17 +7,18 @@ Trends validated against the paper:
   - low contention (1000 locks): the gap narrows but ALock still leads at
     high locality.
 
-The whole grid (plus the thread-scaling strip) is one ``sweep`` call:
+The whole grid (plus the thread-scaling strip) is one Experiment:
 per-(alg, T, N, K) shape bucket it compiles once and evaluates every
 locality x contention x seed point in a single vmapped dispatch. Rows
 report mean±ci95 throughput across ``n_seeds`` replicas.
 
-``--zipf S`` (or ``main(zipf=S)``) skews every config's within-node lock
+``--zipf S`` (or ``main(zipf=S)``) skews every workload's within-node lock
 choice with a Zipf(S) draw — hot-key contention on top of the locality
 grid. The CDF rides the traced batch axis, so a skewed grid costs no extra
 compiles (row names gain a ``.zipfS`` suffix).
 """
-from benchmarks.common import cfg, emit, mops, sweep_all, us_per_op
+from benchmarks.common import emit, experiment, mops, us_per_op, wl
+from repro.experiments import ExecOptions
 
 GRID_NODES = (5, 10, 20)
 LOCKS = (20, 100, 1000)
@@ -27,20 +28,26 @@ ALGS = ("alock", "spinlock", "mcs")
 SCALING_TPN = (2, 4, 8, 12)
 
 
-def main(n_seeds: int = 1, zipf: float = 0.0) -> None:
+def main(n_seeds: int = 1, zipf: float = 0.0,
+         options: ExecOptions | None = None) -> None:
     sfx = f".zipf{zipf:g}" if zipf else ""
     grid = [(n, k, l) for n in GRID_NODES for k in LOCKS for l in LOCALITY]
-    cfgs = [cfg(alg, n, TPN, k, l, zipf=zipf)
-            for (n, k, l) in grid for alg in ALGS]
+    exp = experiment("fig5", n_seeds=n_seeds, options=options)
+    for (n, k, l) in grid:
+        for alg in ALGS:
+            exp.add(wl(alg, n, TPN, k, l, zipf=zipf),
+                    label=f"{alg}.n{n}.k{k}.loc{int(l * 100)}")
     # thread scaling at the paper's largest config rides the same sweep
-    cfgs += [cfg(alg, 20, tpn, 20, 0.95, zipf=zipf) for tpn in SCALING_TPN
-             for alg in ("alock", "spinlock")]
-    res = sweep_all(cfgs, n_seeds=n_seeds)
+    for tpn in SCALING_TPN:
+        for alg in ("alock", "spinlock"):
+            exp.add(wl(alg, 20, tpn, 20, 0.95, zipf=zipf),
+                    label=f"{alg}.scale.t{tpn}")
+    res = exp.run()
 
     for n, k, l in grid:
         best = {}
         for alg in ALGS:
-            br = res[cfg(alg, n, TPN, k, l, zipf=zipf)]
+            br = res[f"{alg}.n{n}.k{k}.loc{int(l * 100)}"]
             best[alg] = br.mean_mops
             emit(f"fig5.{alg}.n{n}.k{k}.loc{int(l*100)}{sfx}",
                  us_per_op(br), mops(br))
@@ -48,8 +55,8 @@ def main(n_seeds: int = 1, zipf: float = 0.0) -> None:
              f"alock_over_spin={best['alock']/max(best['spinlock'],1e-9):.2f}x,"
              f"alock_over_mcs={best['alock']/max(best['mcs'],1e-9):.2f}x")
     for tpn in SCALING_TPN:
-        a = res[cfg("alock", 20, tpn, 20, 0.95, zipf=zipf)]
-        s = res[cfg("spinlock", 20, tpn, 20, 0.95, zipf=zipf)]
+        a = res[f"alock.scale.t{tpn}"]
+        s = res[f"spinlock.scale.t{tpn}"]
         emit(f"fig5.scaling.t{tpn}.n20.k20{sfx}", us_per_op(a),
              f"alock={mops(a)},spin={mops(s)}")
 

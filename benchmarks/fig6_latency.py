@@ -1,10 +1,11 @@
 """Fig. 6: latency CDF percentiles (p50/p90/p99) per algorithm/workload.
 
 Latency samples measure acquire->release only (think_ns excluded), matching
-the paper's Fig. 6. One ``sweep`` call batches the whole grid; percentile
+the paper's Fig. 6. One Experiment batches the whole grid; percentile
 rows report mean±ci95 of the per-seed percentile across seeds.
 """
-from benchmarks.common import cfg, emit, sweep_all
+from benchmarks.common import emit, experiment, wl
+from repro.experiments import ExecOptions
 
 NODES, TPN = 10, 8
 ALGS = ("alock", "spinlock", "mcs")
@@ -15,14 +16,18 @@ def _pct(br, q):
     return f"{m/1e3:.2f}±{ci/1e3:.2f}us"
 
 
-def main(n_seeds: int = 1) -> None:
+def main(n_seeds: int = 1, options: ExecOptions | None = None) -> None:
     grid = [(k, l) for k in (20, 100, 1000) for l in (0.85, 0.95, 1.0)]
-    cfgs = [cfg(alg, NODES, TPN, k, l) for (k, l) in grid for alg in ALGS]
-    res = sweep_all(cfgs, n_seeds=n_seeds)
+    exp = experiment("fig6", n_seeds=n_seeds, options=options)
+    for (k, l) in grid:
+        for alg in ALGS:
+            exp.add(wl(alg, NODES, TPN, k, l),
+                    label=f"{alg}.k{k}.loc{int(l * 100)}")
+    res = exp.run()
     for k, l in grid:
         rows = {}
         for alg in ALGS:
-            br = res[cfg(alg, NODES, TPN, k, l)]
+            br = res[f"{alg}.k{k}.loc{int(l * 100)}"]
             p50, _ = br.lat_pct(50)
             if not (p50 == p50):  # no completed ops at all
                 continue

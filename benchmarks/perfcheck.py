@@ -26,17 +26,17 @@ import time
 
 import numpy as np
 
-from benchmarks.common import EVENTS, cfg
+from benchmarks.common import EVENTS
 from repro.core import batch
+from repro.experiments import fig5_workloads
 
-GRID_NODES, TPN, LOCKS = 10, 8, 100
 LOCALITY = (0.85, 0.95, 1.0)
-ALGS = ("alock", "spinlock", "mcs")
 
 
 def _grid():
-    return [cfg(alg, GRID_NODES, TPN, LOCKS, l)
-            for alg in ALGS for l in LOCALITY]
+    # the registry's paper-fig5 grid: perfcheck and --scenario paper-fig5
+    # measure the identical workload program
+    return fig5_workloads()
 
 
 def _timed_sweep(cfgs, n_seeds, events, **kw):
@@ -70,6 +70,7 @@ def main() -> None:
     n_buckets = len({batch.shape_key(c, args.events) for c in cfgs})
     total_events = len(cfgs) * args.seeds * args.events
     report = {
+        "scenario": "paper-fig5",
         "grid": {"configs": len(cfgs), "seeds": args.seeds,
                  "events_per_replica": args.events,
                  "total_events": total_events, "buckets": n_buckets},

@@ -1,24 +1,34 @@
-"""Benchmark entry point — one section per paper table/figure.
+"""Benchmark entry point — paper sections and registered scenarios.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [section ...] [--seeds N]
            [--backend auto|xla|pallas] [--devices N] [--chunk R] [--zipf S]
+           [--scenario NAME ... | --scenario all] [--list-scenarios]
+           [--scenario-out FILE]
 Prints ``name,us_per_call,derived`` CSV rows.
 
---seeds N runs every simulator config with N independent seeds (batched in
-one vmapped dispatch per shape bucket — no extra compiles) and turns the
-derived columns into mean±ci95. --backend selects the per-replica engine
-(XLA fori_loop vs the Pallas event-loop kernel); --devices/--chunk shard
-each bucket's flattened (config x seed) axis across devices in fixed-size
-chunks (see core/batch.py). --zipf skews the within-node lock choice for
-sections that support it (fig5). Kernel/roofline sections ignore the
-simulator flags. ``benchmarks.perfcheck`` records events/sec per backend.
+Sections reproduce the paper's figures; ``--scenario NAME`` runs a named
+workload program from the registry (``repro.experiments.registry``) — the
+same single entry point ``perfcheck.py`` and CI use. ``--scenario all``
+runs every registered scenario; ``--scenario-out FILE`` additionally
+writes the scenario rows as JSON with the scenario name recorded per row.
+
+--seeds N runs every simulator workload with N independent seeds (batched
+in one vmapped dispatch per shape bucket — no extra compiles) and turns
+the derived columns into mean±ci95. --backend/--devices/--chunk build the
+immutable ``ExecOptions`` value threaded explicitly into every section and
+scenario (no process-wide execution state). --zipf skews the within-node
+lock choice for sections that support it (fig5). Kernel/roofline sections
+ignore the simulator flags. ``benchmarks.perfcheck`` records events/sec
+per backend.
 """
 import argparse
 import inspect
+import json
 import time
 
 from benchmarks import (common, fig1_loopback, fig4_budget, fig5_throughput,
                         fig6_latency, microbench, roofline)
+from repro.experiments import ExecOptions, run_scenario, scenario_names
 
 SECTIONS = {
     "fig1": fig1_loopback.main,
@@ -30,13 +40,36 @@ SECTIONS = {
 }
 
 
+def _emit_scenario(name: str, n_seeds: int, options: ExecOptions) -> list:
+    t0 = time.time()
+    rows = run_scenario(name, n_seeds=n_seeds, n_events=common.EVENTS,
+                        options=options)
+    wall = time.time() - t0
+    for r in rows:
+        common.emit(f"scenario.{name}.{r['name']}", r["us_per_call"],
+                    r["derived"])
+        r["scenario"] = name
+    print(f"# scenario {name} done in {wall:.1f}s", flush=True)
+    # one simulator replica set per row carrying mean_mops; scenarios that
+    # never touch the simulator (coord-stress) report wall time only
+    n_sim = sum(1 for r in rows if "mean_mops" in r)
+    summary = {"scenario": name, "name": f"{name}.wall",
+               "wall_s": round(wall, 3), "simulated_workloads": n_sim,
+               "events_per_replica": common.EVENTS, "seeds": n_seeds}
+    if n_sim:
+        total_events = common.EVENTS * n_seeds * n_sim
+        summary["total_events"] = total_events
+        summary["events_per_sec"] = round(total_events / max(wall, 1e-9), 1)
+    return rows + [summary]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("sections", nargs="*", metavar="section",
                     help=f"sections to run (default: all of "
                          f"{', '.join(SECTIONS)})")
     ap.add_argument("--seeds", type=int, default=1,
-                    help="independent seeds per simulator config")
+                    help="independent seeds per simulator workload")
     ap.add_argument("--backend", choices=("auto", "xla", "pallas"),
                     default=None, help="simulator execution backend")
     ap.add_argument("--devices", type=int, default=None,
@@ -45,27 +78,61 @@ def main() -> None:
                     help="rows per device per dispatch (fixed-size chunks)")
     ap.add_argument("--zipf", type=float, default=0.0,
                     help="Zipf skew of within-node lock targets (fig5)")
+    ap.add_argument("--scenario", action="append", default=[],
+                    metavar="NAME",
+                    help="run a registered scenario ('all' = every one); "
+                         "repeatable; replaces the default section list")
+    ap.add_argument("--list-scenarios", action="store_true",
+                    help="print registered scenario names and exit")
+    ap.add_argument("--scenario-out", default=None, metavar="FILE",
+                    help="write scenario rows as JSON (scenario name "
+                         "recorded per row)")
     args = ap.parse_args()
+    if args.list_scenarios:
+        for name in scenario_names():
+            print(name)
+        return
     if args.seeds < 1:
         ap.error(f"--seeds must be >= 1, got {args.seeds}")
-    if args.devices is not None and args.devices < 1:
-        ap.error(f"--devices must be >= 1, got {args.devices}")
-    if args.chunk is not None and args.chunk < 1:
-        ap.error(f"--chunk must be >= 1, got {args.chunk}")
-    common.set_exec_options(backend=args.backend, devices=args.devices,
-                            chunk=args.chunk)
+    try:
+        options = ExecOptions.from_env(backend=args.backend,
+                                       devices=args.devices,
+                                       chunk=args.chunk)
+    except ValueError as e:
+        ap.error(str(e))
+
+    scen = args.scenario
+    if "all" in scen:
+        scen = scenario_names()
+    unknown = [s for s in scen if s not in scenario_names()]
+    if unknown:
+        ap.error(f"unknown scenario(s) {unknown}; pick from "
+                 f"{scenario_names()}")
     unknown = [s for s in args.sections if s not in SECTIONS]
     if unknown:
         ap.error(f"unknown section(s) {unknown}; pick from "
                  f"{list(SECTIONS)}")
-    which = args.sections or list(SECTIONS)
+    if args.scenario_out and not scen:
+        ap.error("--scenario-out requires --scenario")
+
     print("name,us_per_call,derived")
+    all_rows = []
+    for name in scen:
+        all_rows += _emit_scenario(name, args.seeds, options)
+    if args.scenario_out and scen:
+        with open(args.scenario_out, "w") as f:
+            json.dump(all_rows, f, indent=2, sort_keys=True, default=str)
+        print(f"# wrote {args.scenario_out}", flush=True)
+
+    which = args.sections or ([] if scen else list(SECTIONS))
     for name in which:
         fn = SECTIONS[name]
         params = inspect.signature(fn).parameters
         kwargs = {}
         if "n_seeds" in params:
             kwargs["n_seeds"] = args.seeds
+        if "options" in params:
+            kwargs["options"] = options
         if "zipf" in params and args.zipf:
             kwargs["zipf"] = args.zipf
         t0 = time.time()

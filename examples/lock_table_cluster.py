@@ -10,7 +10,7 @@ import time
 
 from repro.core.batch import sweep
 from repro.core.lock_table import LockTable
-from repro.core.sim import SimConfig
+from repro.workloads import Workload
 
 
 def threaded_cluster(nodes: int, tpn: int, locks_per_node: int,
@@ -61,8 +61,8 @@ def main():
     print(f"== calibrated simulator, same topology, all algorithms "
           f"({args.seeds} seed{'s' if args.seeds > 1 else ''}) ==")
     algs = ("alock", "spinlock", "mcs")
-    cfgs = [SimConfig(alg, args.nodes, args.tpn, 8 * args.nodes,
-                      args.locality) for alg in algs]
+    cfgs = [Workload(alg, args.nodes, args.tpn, 8 * args.nodes,
+                     locality=args.locality) for alg in algs]
     for alg, br in zip(algs, sweep(cfgs, n_seeds=args.seeds,
                                    n_events=100_000)):
         print(f"  {alg:9s} {br.mean_mops:7.2f} ±{br.ci95_mops:.2f} Mops/s "

@@ -1,7 +1,8 @@
 """Quickstart: the three layers of the framework in one page.
 
   1. the ALock itself (threaded, real concurrency),
-  2. the cluster simulator reproducing the paper's headline comparison,
+  2. the cluster simulator through the declarative Workload/Experiment
+     API — the paper's headline comparison plus a phased hot-key storm,
   3. a model forward + loss through the public API.
 
 Run: PYTHONPATH=src python examples/quickstart.py
@@ -13,9 +14,10 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core.lock_table import LockTable
-from repro.core.sim import SimConfig, simulate
+from repro.experiments import Experiment, ExecOptions
 from repro.models import model as M
 from repro.models.params import init_tree, param_count
+from repro.workloads import Phase, Workload
 
 
 def demo_lock_table():
@@ -38,9 +40,17 @@ def demo_lock_table():
 
 def demo_simulator():
     print("== 2. cluster simulator (5 nodes x 4 threads, 95% locality) ==")
-    for alg in ("alock", "spinlock", "mcs"):
-        r = simulate(SimConfig(alg, 5, 4, 100, 0.95), n_events=80_000)
-        print(f"  {alg:9s} {r.throughput_mops:7.2f} Mops/s "
+    base = Workload("alock", n_nodes=5, threads_per_node=4, n_locks=100,
+                    locality=0.95)
+    storm = (Phase(frac=0.4), Phase(frac=0.2, zipf_s=3.0),
+             Phase(frac=0.4))
+    exp = (Experiment("quickstart", n_events=80_000,
+                      options=ExecOptions(backend="auto"))
+           .add_grid(base, alg=("alock", "spinlock", "mcs"))
+           .add(base.replace(phases=storm), label="alock.hotkey_storm"))
+    for label, _, br in exp.run():
+        r = br.result(0)
+        print(f"  {label:18s} {r.throughput_mops:7.2f} Mops/s "
               f"(passes={r.passes}, reacquires={r.reacquires})")
 
 

@@ -63,16 +63,23 @@ class LeaseManager:
 
     acquire() is mutual-exclusive via the ALock; expiry lets a restarted
     node steal a dead holder's lease after ttl.
+
+    ``clock`` is any zero-arg callable returning seconds (default
+    ``time.monotonic``). Injecting a manual clock makes lease-expiry-storm
+    scenarios deterministic — ``coord/stress.py`` and the tests drive
+    expiry by advancing the clock instead of sleeping.
     """
 
-    def __init__(self, svc: CoordService, ttl_s: float = 5.0):
+    def __init__(self, svc: CoordService, ttl_s: float = 5.0,
+                 clock=time.monotonic):
         self.svc = svc
         self.ttl = ttl_s
+        self._clock = clock
 
     def acquire(self, node_id: int, name: str) -> Lease | None:
         with self.svc.critical(node_id, "lease:" + name):
             cur: Lease | None = self.svc.get("lease:" + name)
-            now = time.monotonic()
+            now = self._clock()
             if cur is not None and cur.deadline > now and \
                     cur.holder != node_id:
                 return None
@@ -87,7 +94,7 @@ class LeaseManager:
             cur: Lease | None = self.svc.get("lease:" + lease.name)
             if cur is None or cur.epoch != lease.epoch:
                 return False
-            lease.deadline = time.monotonic() + self.ttl
+            lease.deadline = self._clock() + self.ttl
             with self.svc._kv_lock:
                 self.svc._kv["lease:" + lease.name] = lease
             return True
@@ -100,16 +107,22 @@ class LeaseManager:
 
 
 class Membership:
-    """Elastic membership + heartbeat + straggler-aware shard ownership."""
+    """Elastic membership + heartbeat + straggler-aware shard ownership.
 
-    def __init__(self, svc: CoordService, heartbeat_ttl: float = 2.0):
+    ``clock`` mirrors :class:`LeaseManager`'s injectable clock so churn
+    scenarios (node join/leave storms) run deterministically in tests.
+    """
+
+    def __init__(self, svc: CoordService, heartbeat_ttl: float = 2.0,
+                 clock=time.monotonic):
         self.svc = svc
         self.ttl = heartbeat_ttl
+        self._clock = clock
 
     def join(self, node_id: int):
         def upd(m):
             m = dict(m or {})
-            m[node_id] = time.monotonic()
+            m[node_id] = self._clock()
             return m
         self.svc.update(node_id, "members", upd, default={})
 
@@ -118,7 +131,7 @@ class Membership:
 
     def alive(self) -> list[int]:
         m = self.svc.get("members") or {}
-        now = time.monotonic()
+        now = self._clock()
         return sorted(n for n, t in m.items() if now - t < self.ttl)
 
     def leave(self, node_id: int):

@@ -1,18 +1,22 @@
-"""Batched simulation engine: vmap-over-(config x seed) on top of sim.py.
+"""Batched simulation engine: vmap-over-(workload x seed) on top of sim.py.
 
 The paper's headline figures (Fig. 5/6) are grids of simulator runs. Running
-each ``(alg, nodes, tpn, locks, locality, seed)`` point as its own
-``simulate()`` call costs one device dispatch per point and gives a single
-seed with no error bars. This module batches instead:
+each (workload, seed) point as its own ``simulate()`` call costs one device
+dispatch per point and gives a single seed with no error bars. This module
+batches instead:
 
   * ``_run_events_batch`` vmaps the serial event loop over a flattened
-    (config x seed) axis, so one compile + one dispatch yields S independent
-    replicas for every config that shares a shape;
-  * ``sweep`` buckets an arbitrary config list by the static shape key
-    ``(alg, T, N, K, n_events)`` — everything else (locality, budgets, Zipf
-    CDFs, cost scalars, seeds) rides along as *batched traced operands*, so
-    each bucket compiles exactly once no matter how many configs/seeds it
-    carries;
+    (workload x seed) axis, so one compile + one dispatch yields S
+    independent replicas for every workload that shares a shape;
+  * ``sweep`` accepts ``repro.workloads.Workload`` specs (legacy
+    ``SimConfig`` rides through the bitwise-faithful adapter), lowers each
+    to its traced ``WorkloadOperands`` struct, and buckets by the static
+    shape key ``(alg, T, N, K, n_events)`` — everything workload-shaped
+    (per-thread locality, Zipf CDFs, phase programs, think times, active
+    masks, budgets, seeds, cost scalars) rides along as *batched traced
+    operands*. Replicas with fewer phases than their bucket's max are
+    padded with unreachable phases (``pad_phases`` — provably inert), so a
+    sweep mixing scenarios still compiles exactly once per bucket;
   * ``BatchResult`` keeps the per-seed samples bitwise-identical to
     individual ``simulate()`` calls (tested) and derives mean/ci95/p50/p99
     aggregates from them.
@@ -26,16 +30,18 @@ tiled across the Pallas grid). ``"auto"`` resolves per
 ``sim.resolve_backend``. Both produce bitwise-identical replicas.
 
 ``sweep(..., devices=, chunk=)`` turns on the sharded bucket layout: each
-bucket's flattened (config x seed) axis is split into fixed-size chunks of
-``chunk`` rows per device, each chunk edge-padded to exactly
+bucket's flattened (workload x seed) axis is split into fixed-size chunks
+of ``chunk`` rows per device, each chunk edge-padded to exactly
 ``chunk * n_devices`` rows and dispatched once through a cached
 ``shard_map`` runner (``parallel/sharding.py``'s compat wrapper, mesh axis
 ``"data"``). Fixed chunk sizes mean the executable is keyed by
-``(shape key, chunk, devices, backend)`` alone — an arbitrarily large
-bucket reuses one compile and costs one dispatch per chunk, instead of one
-compile per bucket size. ``exec_stats()`` exposes the dispatch/compile
-counters so benchmarks (``benchmarks/perfcheck.py``) can record the
-dispatch-count reduction.
+``(shape key, phases, chunk, devices, backend)`` alone — an arbitrarily
+large bucket reuses one compile and costs one dispatch per chunk, instead
+of one compile per bucket size. ``exec_stats()`` exposes the
+dispatch/compile counters so benchmarks (``benchmarks/perfcheck.py``) can
+record the dispatch-count reduction. ``repro.experiments.ExecOptions``
+carries (backend, devices, chunk) as one immutable object through the
+benchmark suite — there is no process-wide execution state.
 """
 from __future__ import annotations
 
@@ -51,8 +57,10 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.cost_model import CostModel
 from repro.core.sim import (LAT_SAMPLES, SimConfig, SimResult, _run_events,
-                            resolve_backend, topology, zipf_cdf)
+                            resolve_backend, topology)
 from repro.parallel.sharding import shard_map
+from repro.workloads import (Workload, WorkloadOperands, as_workload, lower,
+                             pad_phases)
 
 _N_COSTS = 8
 
@@ -81,25 +89,26 @@ def _note_call(key) -> None:
         _STATS["compiles"] += 1
 
 
-def shape_key(cfg: SimConfig, n_events: int):
-    """The static-argument tuple that determines a compile: two configs with
-    equal keys can share one XLA executable."""
+def shape_key(cfg, n_events: int):
+    """The static-argument tuple that determines a compile: two workloads
+    (or SimConfigs) with equal keys can share one XLA executable."""
     return (cfg.alg, cfg.n_nodes * cfg.threads_per_node, cfg.n_nodes,
             cfg.n_locks, n_events)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("alg", "T", "N", "K", "n_events"))
-def _run_events_batch(alg, T, N, K, n_events, locality, b_init, thread_node,
-                      lock_node, costs, seed, zcdf):
-    """One shape bucket: every batched operand has leading axis B = C * S.
+def _run_events_batch(alg, T, N, K, n_events, wl, thread_node, lock_node,
+                      costs):
+    """One shape bucket: every ``wl`` leaf and ``costs`` has leading axis
+    B = C * S. thread_node/lock_node are functions of the shape key alone
+    and stay unbatched (broadcast)."""
+    def point(w, cst):
+        return _run_events(alg, T, N, K, n_events, w, thread_node,
+                           lock_node,
+                           tuple(cst[j] for j in range(_N_COSTS)))
 
-    thread_node/lock_node are functions of the shape key alone and stay
-    unbatched (broadcast).
-    """
-    point = functools.partial(_run_events, alg, T, N, K, n_events)
-    return jax.vmap(point, in_axes=(0, 0, None, None, 0, 0, 0))(
-        locality, b_init, thread_node, lock_node, costs, seed, zcdf)
+    return jax.vmap(point)(wl, costs)
 
 
 # -- sharded bucket runners --------------------------------------------------
@@ -107,8 +116,8 @@ def _run_events_batch(alg, T, N, K, n_events, locality, b_init, thread_node,
 _RUNNER_CACHE: dict = {}
 
 
-def _bucket_runner(key, backend: str, mesh: Mesh):
-    """Cached jitted shard_map runner for one (shape key, backend, mesh).
+def _bucket_runner(key, n_phases: int, backend: str, mesh: Mesh):
+    """Cached jitted shard_map runner for one (shape key, P, backend, mesh).
 
     The wrapped function maps the flattened replica axis onto the mesh's
     ``data`` axis; inside each shard the local block runs through the
@@ -116,23 +125,21 @@ def _bucket_runner(key, backend: str, mesh: Mesh):
     once per chunk shape and is reused across chunks and buckets.
     """
     alg, T, N, K, n_events = key
-    ck = (key, backend, tuple(d.id for d in mesh.devices.flat))
+    ck = (key, n_phases, backend, tuple(d.id for d in mesh.devices.flat))
     if ck in _RUNNER_CACHE:
         return _RUNNER_CACHE[ck], ck
 
-    def local_block(loc, bi, cst, sd, zc, tn, ln):
+    def local_block(loc, zc, ed, th, ac, bi, sd, cst, tn, ln):
+        wl = WorkloadOperands(loc, zc, ed, th, ac, bi, sd)
         if backend == "pallas":
             from repro.kernels.event_loop.ops import run_events
-            return run_events(alg, T, N, K, n_events, loc, bi, tn, ln, cst,
-                              sd, zc)
+            return run_events(alg, T, N, K, n_events, wl, tn, ln, cst)
         from repro.kernels.event_loop.ref import run_events_ref
-        return run_events_ref(alg, T, N, K, n_events, loc, bi, tn, ln, cst,
-                              sd, zc)
+        return run_events_ref(alg, T, N, K, n_events, wl, tn, ln, cst)
 
     fn = jax.jit(shard_map(
         local_block, mesh,
-        in_specs=(P("data"), P("data"), P("data"), P("data"), P("data"),
-                  P(), P()),
+        in_specs=(P("data"),) * 8 + (P(), P()),
         out_specs=(P("data"),) * 6, axis_names={"data"}))
     _RUNNER_CACHE[ck] = fn
     return fn, ck
@@ -146,13 +153,14 @@ def _pad_rows(a: np.ndarray, n: int) -> np.ndarray:
 
 
 class BatchResult(NamedTuple):
-    """Per-seed samples + aggregate statistics for one config.
+    """Per-seed samples + aggregate statistics for one workload.
 
-    Sample arrays are stacked over the seed axis S; ``result(i)`` recovers
-    the i-th seed as a plain ``SimResult`` (bitwise-equal to running
-    ``simulate`` with that seed).
+    ``config`` is the item as passed to ``sweep`` (a ``Workload`` or a
+    legacy ``SimConfig``). Sample arrays are stacked over the seed axis S;
+    ``result(i)`` recovers the i-th seed as a plain ``SimResult``
+    (bitwise-equal to running ``simulate`` with that seed).
     """
-    config: SimConfig
+    config: object
     n_events: int
     seeds: np.ndarray             # (S,)
     ops: np.ndarray               # (S,)
@@ -225,34 +233,33 @@ class BatchResult(NamedTuple):
                            / np.sqrt(len(per_seed)))
 
 
-def _exec_bucket(key, thread_node, lock_node, loc, b_init, cost_rows, seeds,
-                 zcdfs, backend: str, devices, chunk):
+def _exec_bucket(key, thread_node, lock_node, wl: WorkloadOperands,
+                 cost_rows, backend: str, devices, chunk):
     """Run one flattened bucket (B rows) and return the 6 output arrays.
 
-    Unsharded (devices/chunk both None): one dispatch for the whole bucket —
-    the XLA leg is the original ``_run_events_batch`` oracle. Sharded: the
-    row axis is split over the device mesh in fixed chunks of ``chunk`` rows
-    per device, one dispatch per chunk, executables shared across chunks.
+    ``wl`` leaves and ``cost_rows`` carry the flattened (workload x seed)
+    axis B. Unsharded (devices/chunk both None): one dispatch for the whole
+    bucket — the XLA leg is the original ``_run_events_batch`` oracle.
+    Sharded: the row axis is split over the device mesh in fixed chunks of
+    ``chunk`` rows per device, one dispatch per chunk, executables shared
+    across chunks.
     """
     alg, T, N, K, n_events = key
-    B = loc.shape[0]
+    B = wl.seed.shape[0]
+    n_phases = wl.edges.shape[1]
     if devices is None and chunk is None:
         with enable_x64():
+            wj = WorkloadOperands(*(jnp.asarray(a) for a in wl))
             if backend == "pallas":
                 from repro.kernels.event_loop.ops import run_events_jit
-                out = run_events_jit(
-                    alg, T, N, K, n_events, jnp.asarray(loc),
-                    jnp.asarray(b_init), thread_node, lock_node,
-                    jnp.asarray(cost_rows), jnp.asarray(seeds),
-                    jnp.asarray(zcdfs))
+                out = run_events_jit(alg, T, N, K, n_events, wj,
+                                     thread_node, lock_node,
+                                     jnp.asarray(cost_rows))
             else:
-                out = _run_events_batch(
-                    alg, T, N, K, n_events, jnp.asarray(loc),
-                    jnp.asarray(b_init), thread_node, lock_node,
-                    tuple(jnp.asarray(cost_rows[:, j])
-                          for j in range(_N_COSTS)),
-                    jnp.asarray(seeds), jnp.asarray(zcdfs))
-        _note_call((key, backend, "bucket", B))
+                out = _run_events_batch(alg, T, N, K, n_events, wj,
+                                        thread_node, lock_node,
+                                        jnp.asarray(cost_rows))
+        _note_call((key, n_phases, backend, "bucket", B))
         return tuple(np.asarray(o) for o in out)
 
     devs = list(devices) if devices is not None else jax.devices()
@@ -264,33 +271,34 @@ def _exec_bucket(key, thread_node, lock_node, loc, b_init, cost_rows, seeds,
     step = rows * D
     n_chunks = math.ceil(B / step)
     pad = n_chunks * step - B
-    loc, b_init, cost_rows, seeds, zcdfs = (
-        _pad_rows(a, pad) for a in (loc, b_init, cost_rows, seeds, zcdfs))
+    leaves = [_pad_rows(np.asarray(a), pad) for a in wl]
+    cost_rows = _pad_rows(cost_rows, pad)
     tn = np.asarray(thread_node)
     ln = np.asarray(lock_node)
-    runner, ck = _bucket_runner(key, backend, mesh)
+    runner, ck = _bucket_runner(key, n_phases, backend, mesh)
     outs = []
     with enable_x64():
         for c in range(n_chunks):
             sl = slice(c * step, (c + 1) * step)
-            outs.append(runner(loc[sl], b_init[sl], cost_rows[sl], seeds[sl],
-                               zcdfs[sl], tn, ln))
+            outs.append(runner(*(a[sl] for a in leaves), cost_rows[sl],
+                               tn, ln))
             _note_call((ck, step))
     return tuple(np.concatenate([np.asarray(o[j]) for o in outs])[:B]
                  for j in range(6))
 
 
-def sweep(configs: Sequence[SimConfig], n_seeds: int = 1,
+def sweep(configs: Sequence[SimConfig | Workload], n_seeds: int = 1,
           n_events: int = 400_000, cm: CostModel = CostModel(), *,
           backend: str = "auto", devices=None,
           chunk: int | None = None) -> list[BatchResult]:
-    """Run every config with seeds ``cfg.seed + [0, n_seeds)``; one compile
+    """Run every workload with seeds ``w.seed + [0, n_seeds)``; one compile
     per ``shape_key`` bucket (per chunk shape when sharding).
 
+    configs: ``Workload`` specs and/or legacy ``SimConfig`` (adapter).
     backend: "xla" | "pallas" | "auto" — per-replica engine (see module
       docstring); every backend/layout combination returns bitwise-identical
       replicas (tested).
-    devices: device list to shard the flattened (config x seed) axis over
+    devices: device list to shard the flattened (workload x seed) axis over
       (mesh axis "data"); None with chunk=None keeps the single-dispatch
       layout.
     chunk: rows per device per dispatch. Fixing it pins the executable
@@ -299,15 +307,17 @@ def sweep(configs: Sequence[SimConfig], n_seeds: int = 1,
       one even chunk per device.
 
     Returns BatchResults parallel to ``configs`` (duplicates are simulated
-    twice — dedupe upstream if the grid overlaps).
+    twice — dedupe upstream if the grid overlaps; ``experiments.Experiment``
+    does).
     """
     if n_seeds < 1:
         raise ValueError(f"n_seeds must be >= 1, got {n_seeds}")
     backend = resolve_backend(backend)
     configs = list(configs)
+    lowered = [lower(as_workload(c), n_events, cm) for c in configs]
     buckets: dict[tuple, list[int]] = {}
-    for i, cfg in enumerate(configs):
-        buckets.setdefault(shape_key(cfg, n_events), []).append(i)
+    for i, lw in enumerate(lowered):
+        buckets.setdefault(lw.shape_key, []).append(i)
 
     out: list[BatchResult | None] = [None] * len(configs)
     for key, idxs in buckets.items():
@@ -315,28 +325,34 @@ def sweep(configs: Sequence[SimConfig], n_seeds: int = 1,
         kpn = K // N
         thread_node, lock_node, costs = topology(alg, N, T // N, K, cm)
         C, S = len(idxs), n_seeds
-        loc = np.empty((C, S), np.float32)
-        b_init = np.empty((C, S, 2), np.int32)
-        seeds = np.empty((C, S), np.int32)
-        zcdfs = np.empty((C, S, kpn), np.float32)
+        # scenarios with fewer phases pad up to the bucket max with
+        # unreachable phases, so mixed phase programs share one executable
+        Pmax = max(lowered[i].operands.n_phases for i in idxs)
+        loc = np.empty((C, S, Pmax, T), np.float32)
+        zc = np.empty((C, S, Pmax, kpn), np.float32)
+        ed = np.empty((C, S, Pmax), np.int32)
+        th = np.empty((C, S, Pmax), np.int32)
+        ac = np.empty((C, S, Pmax, T), np.int32)
+        bi = np.empty((C, S, 2), np.int32)
+        sd = np.empty((C, S), np.int32)
         # constant within a bucket today, but kept a batched operand so a
         # later PR can vary the cost model per config without recompiling
         cost_rows = np.broadcast_to(
             np.asarray(costs, np.int32), (C, S, _N_COSTS)).copy()
         for row, i in enumerate(idxs):
-            cfg = configs[i]
-            loc[row] = cfg.locality
-            b_init[row] = np.asarray(cfg.b_init, np.int32)
-            seeds[row] = cfg.seed + np.arange(S, dtype=np.int32)
-            zcdfs[row] = zipf_cdf(kpn, cfg.zipf_s)
+            o = pad_phases(lowered[i].operands, Pmax)
+            loc[row], zc[row], ed[row] = o.locality, o.zcdf, o.edges
+            th[row], ac[row], bi[row] = o.think_ns, o.active, o.b_init
+            sd[row] = int(o.seed) + np.arange(S, dtype=np.int32)
 
         def flat(a):
             return a.reshape((C * S,) + a.shape[2:])
 
+        wl = WorkloadOperands(flat(loc), flat(zc), flat(ed), flat(th),
+                              flat(ac), flat(bi), flat(sd))
         done, lat, _lat_n, t_end, nreacq, npass = _exec_bucket(
-            key, thread_node, lock_node, flat(loc), flat(b_init),
-            flat(cost_rows), flat(seeds), flat(zcdfs), backend, devices,
-            chunk)
+            key, thread_node, lock_node, wl, flat(cost_rows), backend,
+            devices, chunk)
         done = done.reshape(C, S, T)
         lat = lat.reshape(C, S, LAT_SAMPLES)
         t_end = t_end.reshape(C, S)
@@ -349,7 +365,7 @@ def sweep(configs: Sequence[SimConfig], n_seeds: int = 1,
             # per-element arithmetic matches simulate()'s scalar formula
             # bitwise: ops / sim_ns * 1e3 in float64 either way
             mops = ops / sim_ns * 1e3
-            out[i] = BatchResult(configs[i], n_events, seeds[row], ops,
+            out[i] = BatchResult(configs[i], n_events, sd[row], ops,
                                  sim_ns, mops, lat[row], done[row],
                                  nreacq[row], npass[row])
     return out

@@ -30,11 +30,27 @@ Two execution backends share this module's semantics:
 ``backend="auto"`` picks pallas on TPU and the XLA loop elsewhere; asking
 for pallas explicitly on CPU runs the kernel in interpret mode.
 
-Workloads: thread ``tid`` draws its next lock target in two stages — a
-node (own node with probability ``locality``, else uniform remote) and a
-lock within that node drawn from a Zipf(``zipf_s``) CDF (``zipf_s=0`` is
-uniform). The CDF is a *traced operand*, so a sweep can mix skews without
-recompiling.
+Workloads — the declarative front door
+--------------------------------------
+The engines consume ``repro.workloads.WorkloadOperands``: the lowered form
+of a declarative ``repro.workloads.Workload`` spec. *Everything* workload-
+shaped is a traced operand — per-phase **per-thread** locality ``(P, T)``,
+per-phase Zipf CDFs ``(P, kpn)``, phase boundaries over the event axis
+(``edges``), per-phase think times, and a per-phase active-thread mask
+(node join/leave churn). At event ``i`` thread ``tid`` first resolves its
+phase (``sum(i >= edges) - 1``), then draws a node (own node with
+probability ``locality[phase, tid]``, else uniform remote) and a lock
+within that node by inverse-CDF from ``zcdf[phase]``. Threads whose node
+is down in the current phase are never scheduled (masked out of the
+ready-time argmin).
+
+Because only ``(alg, T, N, K, n_events)`` — plus the phase count via
+operand *shapes* — is static, a ``batch.sweep`` mixing arbitrary
+scenarios (locality mixes, hot-key storms, churn programs) compiles once
+per shape bucket.
+
+``simulate`` accepts a ``Workload`` directly, or a legacy flat
+``SimConfig`` through the bitwise-faithful ``from_simconfig`` adapter.
 """
 from __future__ import annotations
 
@@ -49,6 +65,14 @@ from jax.experimental import enable_x64
 
 from repro.core import machine as mc
 from repro.core.cost_model import CostModel
+from repro.workloads import (Workload, WorkloadOperands, as_workload, lower,
+                             zipf_cdf)
+
+__all__ = [
+    "SimConfig", "SimResult", "Sem", "simulate", "topology", "zipf_cdf",
+    "resolve_backend", "init_sem", "sem_step", "run_schedule",
+    "Workload", "WorkloadOperands", "LAT_SAMPLES",
+]
 
 I32 = jnp.int32
 I64 = jnp.int64
@@ -283,6 +307,15 @@ def run_schedule(alg, cohorts, b_init, schedule, n_locks: int = 1):
 
 
 class SimConfig(NamedTuple):
+    """Legacy flat per-run config.
+
+    .. deprecated::
+        Kept as a compatibility front door only — it can express neither
+        per-thread locality nor phases. New code should build
+        ``repro.workloads.Workload`` specs; ``simulate``/``batch.sweep``
+        route SimConfig through the bitwise-faithful
+        ``repro.workloads.from_simconfig`` adapter.
+    """
     alg: str
     n_nodes: int
     threads_per_node: int
@@ -291,20 +324,6 @@ class SimConfig(NamedTuple):
     b_init: tuple = (5, 20)   # (local, remote) budgets
     seed: int = 0
     zipf_s: float = 0.0       # Zipf skew of the per-node lock choice
-
-
-def zipf_cdf(kpn: int, s: float) -> np.ndarray:
-    """Inclusive CDF of a Zipf(s) draw over the ``kpn`` locks of one node.
-
-    ``cdf[j] = P(lock_rank <= j)`` with ``P(rank j) ∝ (j+1)^-s``; ``s=0`` is
-    the uniform workload. float32 so it can ride the traced batch axis next
-    to ``locality`` without recompiles.
-    """
-    if kpn < 1:
-        raise ValueError(f"need at least one lock per node, got kpn={kpn}")
-    ranks = np.arange(1, kpn + 1, dtype=np.float64)
-    w = ranks ** (-float(s))
-    return np.cumsum(w / w.sum()).astype(np.float32)
 
 
 def resolve_backend(backend: str) -> str:
@@ -335,22 +354,22 @@ class SimResult(NamedTuple):
 LAT_SAMPLES = 1 << 15
 
 
-def _run_events(alg, T, N, K, n_events, locality, b_init, thread_node,
-                lock_node, costs, seed, zcdf):
-    """Serial next-event loop for one (config, seed) point — XLA backend.
+def _run_events(alg, T, N, K, n_events, wl: WorkloadOperands, thread_node,
+                lock_node, costs):
+    """Serial next-event loop for one (workload, seed) point — XLA backend.
 
     Plain (unjitted) so callers can compose it: ``simulate`` jits it directly
     (``_run_events_jit``), ``batch.sweep`` vmaps it over a flattened
     (config x seed) axis. Must run under ``enable_x64()`` so the clock
-    arrays below really are int64. ``zcdf`` is the (K//N,) float32 Zipf CDF
-    of the within-node lock draw (see ``zipf_cdf``); it is a traced operand
-    and may vary per replica in the batched path.
+    arrays below really are int64. ``wl`` is the lowered
+    ``WorkloadOperands`` struct (see ``repro.workloads.lower``) — every
+    leaf is a traced operand and may vary per replica in the batched path.
 
     The Pallas backend (``repro.kernels.event_loop``) reproduces this loop
     bitwise; any semantic change here must be mirrored there (the
     equivalence tests will catch a divergence).
     """
-    (c_local, c_poll, c_cs, c_think, c_svc_r, c_svc_l, c_wire_r,
+    (c_local, c_poll, c_cs, _c_think, c_svc_r, c_svc_l, c_wire_r,
      c_wire_l) = costs
     sem = init_sem(T, K)
     ready = jnp.zeros(T, I64)
@@ -359,32 +378,63 @@ def _run_events(alg, T, N, K, n_events, locality, b_init, thread_node,
     done = jnp.zeros(T, I32)
     lat = jnp.full(LAT_SAMPLES, -1, I64)
     lat_n = jnp.int32(0)
-    key = jax.random.key(seed)
+    key = jax.random.key(wl.seed)
     kpn = K // N
+    never = jnp.iinfo(jnp.int64).max   # parked threads lose every argmin
+
+    # static via the operand shape: single-phase workloads (every paper
+    # figure, the whole SimConfig adapter path) skip the per-event phase
+    # resolve / active-mask / rejoin machinery entirely. Sound because
+    # lowering guarantees P == 1 operands are all-active (a masked single
+    # phase is lowered as two identical halves).
+    multi_phase = wl.edges.shape[0] > 1
 
     def event(i, carry):
         sem, ready, busy, op_start, done, lat, lat_n, nreacq, npass = carry
-        tid = jnp.argmin(ready).astype(I32)
+        if multi_phase:
+            # piecewise phase over the event axis; with all-active phases
+            # every line below reduces bitwise to the flat engine
+            ph = jnp.sum(i >= wl.edges) - 1
+            act = wl.active[ph]
+            # phase boundary: a thread whose node rejoins resumes from the
+            # cluster's current clock — not its stale park time — so a
+            # down phase really costs it the interval (no deferred-event
+            # catch-up). "now" is the next event time of the continuously-
+            # active threads (a rejoiner's own parked clock must not drag
+            # it backwards).
+            was_act = wl.active[jnp.maximum(ph - 1, 0)]
+            rejoin = jnp.any(i == wl.edges) & (act != 0) & (was_act == 0)
+            cont_min = jnp.min(jnp.where((act != 0) & (was_act != 0),
+                                         ready, never))
+            now_min = jnp.where(cont_min == never,
+                                jnp.min(jnp.where(act != 0, ready, never)),
+                                cont_min)
+            ready = jnp.where(rejoin, jnp.maximum(ready, now_min), ready)
+            tid = jnp.argmin(jnp.where(act != 0, ready, never)).astype(I32)
+        else:
+            ph = 0
+            tid = jnp.argmin(ready).astype(I32)
         now = ready[tid]
         k1, k2, k3 = jax.random.split(jax.random.fold_in(key, i), 3)
         # workload draw (used only when this step is the NCS re-arm);
         # dtypes pinned so enabling x64 does not change the draws
         mynode = thread_node[tid]
-        go_local = jax.random.uniform(k1, dtype=jnp.float32) < locality
+        go_local = (jax.random.uniform(k1, dtype=jnp.float32)
+                    < wl.locality[ph, tid])
         other = (mynode + 1 +
                  jax.random.randint(k2, (), 0, max(N - 1, 1), dtype=I32)) % N
         node = jnp.where(go_local, mynode, other).astype(I32)
         u3 = jax.random.uniform(k3, dtype=jnp.float32)
         # inverse-CDF draw of the within-node lock (uniform when zipf_s=0);
         # clamp guards the cumsum's final float32 ulp falling short of 1.0
-        off = jnp.minimum(jnp.sum(u3 >= zcdf).astype(I32), kpn - 1)
+        off = jnp.minimum(jnp.sum(u3 >= wl.zcdf[ph]).astype(I32), kpn - 1)
         new_t = node * kpn + off
         new_c = (node != mynode).astype(I32)
 
         was_ncs_bound = (sem.pc[tid] == mc.REL_CAS) | (sem.pc[tid] == mc.PASS) \
             | (sem.pc[tid] == mc.SL_REL)
         pre_pc = sem.pc[tid]
-        sem2, code, tnode = sem_step(alg, sem, tid, b_init, thread_node,
+        sem2, code, tnode = sem_step(alg, sem, tid, wl.b_init, thread_node,
                                      lock_node, new_t, new_c)
         finished = was_ncs_bound & (sem2.pc[tid] == mc.NCS)
         reacq = (pre_pc == mc.SPIN_BUDGET) & (sem2.pc[tid] == mc.SET_VICTIM_R)
@@ -410,7 +460,7 @@ def _run_events(alg, T, N, K, n_events, locality, b_init, thread_node,
         dt_plain = jnp.select(
             [code == OP_LOCAL, code == OP_POLL, code == OP_CS,
              code == OP_THINK],
-            [c_local, c_poll, c_cs, c_think], c_local)
+            [c_local, c_poll, c_cs, wl.think_ns[ph]], c_local)
         new_ready = jnp.where(is_rdma, fin + wire, now + dt_plain)
         ready = ready.at[tid].set(new_ready)
         # latency clock starts when the first lock op (SWAP/SL_CAS) can
@@ -462,30 +512,30 @@ def topology(alg: str, n_nodes: int, threads_per_node: int, n_locks: int,
     return thread_node, lock_node, costs
 
 
-def simulate(cfg: SimConfig, n_events: int = 400_000,
+def simulate(cfg: SimConfig | Workload, n_events: int = 400_000,
              cm: CostModel = CostModel(), backend: str = "auto") -> SimResult:
-    T = cfg.n_nodes * cfg.threads_per_node
-    N, K = cfg.n_nodes, cfg.n_locks
+    """Run one workload (a ``Workload`` spec, or a legacy ``SimConfig``
+    through the adapter) for ``n_events`` events on the chosen backend."""
+    w = as_workload(cfg)
+    lw = lower(w, n_events, cm)
+    T, N, K = lw.n_threads, w.n_nodes, w.n_locks
     thread_node, lock_node, costs = topology(
-        cfg.alg, N, cfg.threads_per_node, K, cm)
-    zcdf = jnp.asarray(zipf_cdf(K // N, cfg.zipf_s))
+        w.alg, N, w.threads_per_node, K, cm)
     backend = resolve_backend(backend)
     with enable_x64():
         if backend == "pallas":
             from repro.kernels.event_loop.ops import run_events_jit
+            batched = WorkloadOperands(
+                *(jnp.asarray(a)[None] for a in lw.operands))
             out = run_events_jit(
-                cfg.alg, T, N, K, n_events,
-                jnp.float32(cfg.locality)[None],
-                jnp.asarray(cfg.b_init, I32)[None],
-                thread_node, lock_node,
-                jnp.asarray(costs, I32)[None],
-                jnp.asarray([cfg.seed], I32), zcdf[None])
+                w.alg, T, N, K, n_events, batched, thread_node, lock_node,
+                jnp.asarray(costs, I32)[None])
             done, lat, lat_n, t_end, nreacq, npass = (o[0] for o in out)
         else:
+            wl = WorkloadOperands(*(jnp.asarray(a) for a in lw.operands))
             done, lat, lat_n, t_end, nreacq, npass = _run_events_jit(
-                cfg.alg, T, N, K, n_events, jnp.float32(cfg.locality),
-                jnp.asarray(cfg.b_init, I32), thread_node, lock_node,
-                tuple(jnp.int32(c) for c in costs), cfg.seed, zcdf)
+                w.alg, T, N, K, n_events, wl, thread_node, lock_node,
+                tuple(jnp.int32(c) for c in costs))
     ops = int(done.sum())
     sim_ns = max(int(t_end), 1)
     return SimResult(ops, sim_ns, ops / sim_ns * 1e3, lat, done,

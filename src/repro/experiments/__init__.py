@@ -1,0 +1,26 @@
+"""Experiment composition: workload grids x seeds x execution options.
+
+>>> from repro.experiments import Experiment, ExecOptions
+>>> from repro.workloads import Workload
+>>> exp = (Experiment("demo", n_seeds=5, n_events=50_000,
+...                   options=ExecOptions(backend="xla"))
+...        .add_grid(Workload("alock", 4, 4, 16),
+...                  alg=("alock", "mcs"), locality=(0.85, 1.0)))
+>>> res = exp.run()
+>>> res["alock.locality0.85"].mean_mops      # doctest: +SKIP
+
+Named scenario programs live in the registry (``run_scenario`` /
+``scenario_names``) — the single entry point behind
+``benchmarks.run --scenario`` and ``benchmarks/perfcheck.py``.
+"""
+from repro.experiments.experiment import Experiment, ExperimentResult
+from repro.experiments.options import ExecOptions
+from repro.experiments.registry import (Scenario, fig5_workloads,
+                                        get_scenario, run_scenario,
+                                        scenario, scenario_names)
+
+__all__ = [
+    "ExecOptions", "Experiment", "ExperimentResult", "Scenario",
+    "fig5_workloads", "get_scenario", "run_scenario", "scenario",
+    "scenario_names",
+]

@@ -1,0 +1,191 @@
+"""Scenario registry: named, self-contained workload programs.
+
+A *scenario* is a named function that builds and runs a workload program —
+an :class:`~repro.experiments.experiment.Experiment` over the simulator,
+or a threaded coordination-plane stress (``repro.coord.stress``) — and
+returns CSV-able rows. The registry gives ``benchmarks.run --scenario``,
+``benchmarks/perfcheck.py`` and CI one entry point: every registered name
+is runnable with nothing but ``(n_seeds, n_events, options)``.
+
+Rows are dicts with at least ``name`` / ``us_per_call`` / ``derived``
+(the benchmark suite's CSV columns); extra keys ride into the JSON
+artifacts (``BENCH_events_per_sec.json`` records them per row together
+with the scenario name).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+from repro.experiments.experiment import Experiment
+from repro.experiments.options import ExecOptions
+from repro.workloads import Phase, Workload, mixed
+
+_SCENARIOS: dict[str, "Scenario"] = {}
+
+
+@dataclass(frozen=True)
+class Scenario:
+    name: str
+    summary: str
+    fn: Callable
+
+
+def scenario(name: str, summary: str):
+    """Register ``fn(n_seeds, n_events, options) -> list[dict]``."""
+    def deco(fn):
+        if name in _SCENARIOS:
+            raise ValueError(f"scenario {name!r} already registered")
+        _SCENARIOS[name] = Scenario(name, summary, fn)
+        return fn
+    return deco
+
+
+def scenario_names() -> list[str]:
+    return sorted(_SCENARIOS)
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return _SCENARIOS[name]
+    except KeyError:
+        raise ValueError(f"unknown scenario {name!r}; registered: "
+                         f"{scenario_names()}") from None
+
+
+def run_scenario(name: str, n_seeds: int = 1, n_events: int = 150_000,
+                 options: ExecOptions = ExecOptions()) -> list[dict]:
+    return get_scenario(name).fn(n_seeds, n_events, options)
+
+
+# ---------------------------------------------------------------------------
+# built-ins
+
+# the common mid-size topology the sim scenarios share: one shape bucket
+# per algorithm no matter how phases / localities / skews vary
+_BASE = Workload("alock", n_nodes=4, threads_per_node=4, n_locks=16,
+                 locality=0.95)
+
+
+def _rows(result) -> list[dict]:
+    out = []
+    for lbl, w, br in result:
+        out.append({
+            "name": lbl, "us_per_call": br.mean_lat_us,
+            "derived": f"{br.mean_mops:.3f}±{br.ci95_mops:.3f}Mops",
+            "mean_mops": br.mean_mops, "ci95_mops": br.ci95_mops,
+            "ops": int(br.ops.sum()),
+        })
+    return out
+
+
+@scenario("uniform-grid",
+          "alg x locality grid on the shared 4-node topology")
+def _uniform_grid(n_seeds, n_events, options):
+    exp = Experiment("uniform-grid", n_seeds=n_seeds, n_events=n_events,
+                     options=options)
+    exp.add_grid(_BASE, alg=("alock", "spinlock", "mcs"),
+                 locality=(0.85, 0.95, 1.0))
+    return _rows(exp.run())
+
+
+@scenario("hot-key-storm",
+          "mid-run Zipf(3) burst vs steady uniform traffic (phased)")
+def _hot_key_storm(n_seeds, n_events, options):
+    storm = (Phase(frac=0.4), Phase(frac=0.2, zipf_s=3.0),
+             Phase(frac=0.4))
+    exp = Experiment("hot-key-storm", n_seeds=n_seeds, n_events=n_events,
+                     options=options)
+    for alg in ("alock", "mcs"):
+        exp.add(_BASE.replace(alg=alg), label=f"{alg}.steady")
+        exp.add(_BASE.replace(alg=alg, phases=storm), label=f"{alg}.storm")
+    res = exp.run()
+    rows = _rows(res)
+    for alg in ("alock", "mcs"):
+        hit = res[f"{alg}.storm"].mean_mops / \
+            max(res[f"{alg}.steady"].mean_mops, 1e-9)
+        rows.append({"name": f"{alg}.storm_throughput_ratio",
+                     "us_per_call": 0.0, "derived": f"{hit:.3f}x",
+                     "ratio": hit})
+    return rows
+
+
+@scenario("mixed-locality",
+          "per-thread locality splits (mixed(local, frac, rest)) vs flat")
+def _mixed_locality(n_seeds, n_events, options):
+    exp = Experiment("mixed-locality", n_seeds=n_seeds, n_events=n_events,
+                     options=options)
+    exp.add(_BASE, label="flat95")
+    for frac in (0.25, 0.5, 0.75):
+        exp.add(_BASE.replace(locality=mixed(local=0.95, frac=frac,
+                                             rest=0.5)),
+                label=f"mix{int(frac * 100)}")
+    return _rows(exp.run())
+
+
+@scenario("node-churn",
+          "a node leaves mid-run and rejoins (phased active mask)")
+def _node_churn(n_seeds, n_events, options):
+    churn = (Phase(frac=0.3), Phase(frac=0.4, down_nodes=(3,)),
+             Phase(frac=0.3))
+    exp = Experiment("node-churn", n_seeds=n_seeds, n_events=n_events,
+                     options=options)
+    exp.add(_BASE, label="steady")
+    exp.add(_BASE.replace(phases=churn), label="churn")
+    res = exp.run()
+    rows = _rows(res)
+    pto = res["churn"].per_thread_ops.sum(axis=0)   # (T,) over seeds
+    tpn = _BASE.threads_per_node
+    share = float(pto[3 * tpn:4 * tpn].sum()) / max(float(pto.sum()), 1e-9)
+    rows.append({"name": "churn.node3_op_share", "us_per_call": 0.0,
+                 "derived": f"{share:.3f} (vs {1 / 4:.3f} steady)",
+                 "node3_share": share})
+    return rows
+
+
+def fig5_workloads() -> list[Workload]:
+    """The Fig.5-shaped perf grid (shared by perfcheck and `paper-fig5`)."""
+    return [Workload(alg, n_nodes=10, threads_per_node=8, n_locks=100,
+                     locality=loc)
+            for alg in ("alock", "spinlock", "mcs")
+            for loc in (0.85, 0.95, 1.0)]
+
+
+@scenario("paper-fig5",
+          "the paper's Fig.5 throughput grid (perfcheck's measuring stick)")
+def _paper_fig5(n_seeds, n_events, options):
+    exp = Experiment("paper-fig5", n_seeds=n_seeds, n_events=n_events,
+                     options=options)
+    for w in fig5_workloads():
+        exp.add(w, label=f"{w.alg}.loc{int(float(w.locality[0]) * 100)}"
+                if isinstance(w.locality, tuple)
+                else f"{w.alg}.loc{int(w.locality * 100)}")
+    return _rows(exp.run())
+
+
+@scenario("coord-stress",
+          "threaded coordination plane under churn + lease-expiry storms")
+def _coord_stress(n_seeds, n_events, options):
+    from repro.coord.stress import ManualClock, run_coord_stress
+    churn = (Phase(frac=0.3), Phase(frac=0.4, down_nodes=(2,),
+                                    zipf_s=2.0),
+             Phase(frac=0.3))
+    rows = []
+    ops_per_thread = max(20, min(n_events // 100, 300))
+    for seed in range(n_seeds):
+        w = Workload("alock", n_nodes=3, threads_per_node=4, n_locks=12,
+                     locality=0.9, seed=seed, phases=churn)
+        rep = run_coord_stress(w, ops_per_thread=ops_per_thread,
+                               clock=ManualClock())
+        rows.append({
+            "name": f"coord.churn.seed{seed}", "us_per_call": 0.0,
+            "derived": (f"ops={rep.ops},local={rep.local_ops},"
+                        f"remote={rep.remote_ops},"
+                        f"steals={rep.lease_steals}"),
+            "ops": rep.ops, "local_ops": rep.local_ops,
+            "remote_ops": rep.remote_ops,
+            "lease_grants": rep.lease_grants,
+            "lease_steals": rep.lease_steals,
+            "phase_members": rep.phase_members,
+        })
+    return rows

@@ -22,13 +22,20 @@ Branch dispatch
   one selected by its thread's PC. Scatters at per-row indices (lock k,
   thread tid/pred/succ, node) are one-hot masked writes.
 
-Randomness
-  The XLA loop draws from ``jax.random.fold_in(key, i)`` per event. Those
-  draws depend only on (seed, i) — never on simulation state — so ``ops.py``
-  precomputes the whole stream with the *same* jax.random calls and feeds
-  the kernel three int32 streams (go_local, remote-node offset, within-node
-  Zipf offset). Per-seed results are therefore bitwise-equal to the XLA
-  path, which the tier-1 equivalence tests assert.
+Randomness + workload operands
+  The XLA loop draws from ``jax.random.fold_in(key, i)`` per event. The
+  raw draws depend only on (seed, i) — never on simulation state — so
+  ``ops.py`` precomputes the stream with the *same* jax.random calls and
+  feeds the kernel three streams: the locality uniform (f32), the
+  remote-node offset and the phase-resolved within-node Zipf offset. The
+  thread-dependent half of the locality draw (``u < locality[phase, tid]``)
+  runs here, against the per-phase per-thread locality operand, because
+  ``tid`` is the runtime argmin of the ready clocks. Phases are resolved
+  per event from the ``edges`` operand (phase = sum(i >= edges) - 1);
+  the per-phase ``active`` mask parks downed threads by excluding them
+  from the ready-time argmin, and ``think_ns[phase]`` replaces the static
+  think cost. Per-seed results are bitwise-equal to the XLA path, which
+  the tier-1 equivalence tests assert.
 
 Clocks are int64 (callers hold ``enable_x64()``, as for the XLA path); on
 CPU the kernel runs in interpret mode where i64 vector state is free. The
@@ -49,14 +56,15 @@ I32 = jnp.int32
 I64 = jnp.int64
 
 
-def event_loop_kernel(glocal_ref, r2_ref, r3_ref, binit_ref, costs_ref,
+def event_loop_kernel(u1_ref, r2_ref, r3_ref, edges_ref, think_ref,
+                      locp_ref, actp_ref, binit_ref, costs_ref,
                       tn_ref, ln_ref,
                       done_ref, lat_ref, latn_ref, tend_ref, reacq_ref,
                       npass_ref,
                       s_t0, s_t1, s_vic, s_pc, s_bud, s_nxt, s_prev, s_tgt,
                       s_coh, s_ready, s_busy, s_opst,
-                      *, alg: str, T: int, N: int, K: int, n_events: int,
-                      ev_chunk: int):
+                      *, alg: str, T: int, N: int, K: int, P: int,
+                      n_events: int, ev_chunk: int):
     """One (replica_tile, event_chunk) grid step.
 
     s_t0/s_t1 are the two cohort tails for alock; for mcs/spinlock s_t0 is
@@ -79,9 +87,14 @@ def event_loop_kernel(glocal_ref, r2_ref, r3_ref, binit_ref, costs_ref,
         s_bud[...] = jnp.full((tile, T), -1, I32)
         lat_ref[...] = jnp.full((tile, LAT_SAMPLES), -1, I64)
 
-    glocal = glocal_ref[...].astype(I32)
+    u1s = u1_ref[...]                               # (tile, ev_chunk) f32
     r2s = r2_ref[...].astype(I32)
     r3s = r3_ref[...].astype(I32)
+    edges = edges_ref[...].astype(I32)              # (tile, P)
+    think = think_ref[...].astype(I32)              # (tile, P)
+    # per-phase payloads arrive flattened (tile, P*T); P and T are static
+    locp = locp_ref[...].reshape(tile, P, T)        # f32
+    actp = actp_ref[...].astype(I32).reshape(tile, P, T)
     binit = binit_ref[...].astype(I32)
     cst = costs_ref[...].astype(I32)
     tn = jnp.broadcast_to(tn_ref[...].astype(I32), (tile, T))
@@ -91,6 +104,8 @@ def event_loop_kernel(glocal_ref, r2_ref, r3_ref, binit_ref, costs_ref,
     tids = jnp.arange(T, dtype=I32)[None, :]
     kio = jnp.arange(K, dtype=I32)[None, :]
     nio = jnp.arange(N, dtype=I32)[None, :]
+    pio = jnp.arange(P, dtype=I32)[None, :]
+    never = jnp.iinfo(jnp.int64).max   # parked threads lose every argmin
 
     def gat_t(arr, idx):
         """(tile, T) gathered at per-row thread idx -> (tile,). The sum
@@ -113,7 +128,38 @@ def event_loop_kernel(glocal_ref, r2_ref, r3_ref, binit_ref, costs_ref,
         (t0, t1, vic, pc, bud, nxt, prv, tgt, coh, ready, busy, opst,
          done, lat, latn, reacq, npass) = st
 
-        tid = jnp.argmin(ready, axis=1).astype(I32)
+        # -- phase resolve (pure function of the global event index) -------
+        gi = j * ev_chunk + e
+        if P > 1:
+            ph = jnp.sum((gi >= edges).astype(I32), axis=1) - 1  # (tile,)
+            ohP = pio == ph[:, None]
+            act_row = jnp.sum(jnp.where(ohP[:, :, None], actp, 0), axis=1)
+            loc_row = jnp.sum(jnp.where(ohP[:, :, None], locp, 0.0),
+                              axis=1, dtype=jnp.float32)
+            think_e = jnp.sum(jnp.where(ohP, think, 0), axis=1, dtype=I32)
+
+            # phase boundary: rejoining threads resume from the cluster's
+            # current clock (mirror of the XLA loop's rejoin bump)
+            ohPp = pio == jnp.maximum(ph - 1, 0)[:, None]
+            was_act = jnp.sum(jnp.where(ohPp[:, :, None], actp, 0), axis=1)
+            rejoin = (jnp.any(gi == edges, axis=1)[:, None]
+                      & (act_row != 0) & (was_act == 0))
+            cont_min = jnp.min(jnp.where((act_row != 0) & (was_act != 0),
+                                         ready, never), axis=1)
+            now_min = jnp.where(
+                cont_min == never,
+                jnp.min(jnp.where(act_row != 0, ready, never), axis=1),
+                cont_min)
+            ready = jnp.where(rejoin, jnp.maximum(ready, now_min[:, None]),
+                              ready)
+            tid = jnp.argmin(jnp.where(act_row != 0, ready, never),
+                             axis=1).astype(I32)
+        else:
+            # single phase: the flat PR-2 hot path, no phase machinery
+            # (lowering guarantees P == 1 operands are all-active)
+            loc_row = locp[:, 0, :]
+            think_e = think[:, 0]
+            tid = jnp.argmin(ready, axis=1).astype(I32)
         ohT = tids == tid[:, None]
         now = jnp.sum(jnp.where(ohT, ready, 0), axis=1)
         me = tid + 1
@@ -127,11 +173,16 @@ def event_loop_kernel(glocal_ref, r2_ref, r3_ref, binit_ref, costs_ref,
         mynode = gat_t(tn, tid)
 
         # -- workload draw (precomputed stream; NCS branch consumes it) ----
-        ge = lax.dynamic_index_in_dim(glocal, e, 1, keepdims=False)
+        u1e = lax.dynamic_index_in_dim(u1s, e, 1, keepdims=False)
         r2e = lax.dynamic_index_in_dim(r2s, e, 1, keepdims=False)
         r3e = lax.dynamic_index_in_dim(r3s, e, 1, keepdims=False)
+        # thread-dependent half of the locality draw: same f32 compare as
+        # the XLA loop's uniform(k1) < locality[ph, tid]
+        loc_t = jnp.sum(jnp.where(ohT, loc_row, 0.0), axis=1,
+                        dtype=jnp.float32)
+        ge = u1e < loc_t
         other = (mynode + 1 + r2e) % N
-        node_w = jnp.where(ge != 0, mynode, other).astype(I32)
+        node_w = jnp.where(ge, mynode, other).astype(I32)
         new_t = node_w * kpn + r3e
         new_c = (node_w != mynode).astype(I32)
 
@@ -261,7 +312,7 @@ def event_loop_kernel(glocal_ref, r2_ref, r3_ref, binit_ref, costs_ref,
         dt_plain = jnp.select(
             [code == OP_LOCAL, code == OP_POLL, code == OP_CS,
              code == OP_THINK],
-            [cst[:, 0], cst[:, 1], cst[:, 2], cst[:, 3]], cst[:, 0])
+            [cst[:, 0], cst[:, 1], cst[:, 2], think_e], cst[:, 0])
         new_ready = jnp.where(is_rdma, fin + wire, now + dt_plain)
         ready = jnp.where(ohT, new_ready[:, None], ready)
 
@@ -280,7 +331,7 @@ def event_loop_kernel(glocal_ref, r2_ref, r3_ref, binit_ref, costs_ref,
         new_st = (t0, t1, vic, pc, bud, nxt, prv, tgt, coh, ready, busy,
                   opst, done, lat, latn, reacq, npass)
         # ragged final chunk: events past n_events are masked no-ops
-        valid = (j * ev_chunk + e) < n_events
+        valid = gi < n_events
         return tuple(jnp.where(valid, n, o) for n, o in zip(new_st, st))
 
     state = lax.fori_loop(0, ev_chunk, step, state)

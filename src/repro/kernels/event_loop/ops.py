@@ -1,18 +1,24 @@
 """Public entry points for the Pallas event-loop backend.
 
-``run_events`` mirrors ``sim._run_events``'s batched contract (leading
-replica axis B on every per-replica operand) and returns the same tuple
-(done, lat, lat_n, t_end, nreacq, npass). Replicas are padded to a tile
-multiple and tiled across the first grid axis; events are padded to a chunk
-multiple and streamed along the second (sequential) grid axis while the
-simulation state persists in VMEM scratch.
+``run_events`` mirrors ``sim._run_events``'s batched contract (a
+``WorkloadOperands`` struct whose leaves carry a leading replica axis B)
+and returns the same tuple (done, lat, lat_n, t_end, nreacq, npass).
+Replicas are padded to a tile multiple and tiled across the first grid
+axis; events are padded to a chunk multiple and streamed along the second
+(sequential) grid axis while the simulation state persists in VMEM
+scratch.
 
-The workload draw stream is precomputed here (``precompute_draws``) from
-the identical ``jax.random.fold_in`` counter scheme the XLA loop uses —
-draws depend only on (seed, event index), never on simulation state, so
-hoisting them preserves bitwise equality while keeping the kernel integer-
-only. The precompute itself is one vmapped pass fused into the surrounding
-jit, not a per-event dispatch.
+The state-independent half of the workload draw stream is precomputed here
+(``precompute_draws``) from the identical ``jax.random.fold_in`` counter
+scheme the XLA loop uses — the raw locality uniform, the remote-node
+offset and the phase-resolved Zipf offset depend only on (seed, event
+index), never on simulation state, so hoisting them preserves bitwise
+equality. The *thread-dependent* half (comparing the uniform against
+``locality[phase, tid]``) runs in-kernel, because ``tid`` is the argmin of
+the ready clocks and only exists at runtime; the kernel receives the
+per-phase per-thread locality / active-mask / think operands directly.
+The precompute itself is one vmapped pass fused into the surrounding jit,
+not a per-event dispatch.
 """
 from __future__ import annotations
 
@@ -35,40 +41,44 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def precompute_draws(seed, locality, zcdf, n_events: int, N: int, kpn: int):
-    """The per-event workload draw stream, replica-batched.
+def precompute_draws(seed, edges, zcdf, n_events: int, N: int, kpn: int):
+    """The state-independent per-event draw stream, replica-batched.
 
-    Returns int32 (B, n_events) arrays (go_local, remote_offset,
-    zipf_offset) — exactly the values ``sim._run_events`` draws at event i
-    from ``split(fold_in(key, i), 3)``, so consuming them in-kernel
+    Returns (B, n_events) arrays (loc_uniform f32, remote_offset i32,
+    zipf_offset i32) — exactly the values ``sim._run_events`` draws at
+    event i from ``split(fold_in(key, i), 3)``. The Zipf inverse-CDF is
+    resolved against the phase active at event i (phases are a pure
+    function of the event index), so consuming the stream in-kernel
     reproduces the XLA path bit for bit.
     """
-    def one(sd, loc, cdf):
+    def one(sd, ed, cdf):
         key = jax.random.key(sd)
 
         def ev(i):
             k1, k2, k3 = jax.random.split(jax.random.fold_in(key, i), 3)
-            go = jax.random.uniform(k1, dtype=jnp.float32) < loc
+            u1 = jax.random.uniform(k1, dtype=jnp.float32)
             r2 = jax.random.randint(k2, (), 0, max(N - 1, 1), dtype=I32)
             u3 = jax.random.uniform(k3, dtype=jnp.float32)
-            r3 = jnp.minimum(jnp.sum(u3 >= cdf).astype(I32), kpn - 1)
-            return go.astype(I32), r2, r3
+            ph = jnp.sum(i >= ed) - 1
+            r3 = jnp.minimum(jnp.sum(u3 >= cdf[ph]).astype(I32), kpn - 1)
+            return u1, r2, r3
 
         return jax.vmap(ev)(jnp.arange(n_events))
 
-    return jax.vmap(one)(seed, locality, zcdf)
+    return jax.vmap(one)(seed, edges, zcdf)
 
 
-def run_events(alg, T, N, K, n_events, locality, b_init, thread_node,
-               lock_node, costs, seed, zcdf, *, tile: int = DEFAULT_TILE,
-               ev_chunk: int = DEFAULT_EV_CHUNK, interpret=None):
+def run_events(alg, T, N, K, n_events, wl, thread_node, lock_node, costs, *,
+               tile: int = DEFAULT_TILE, ev_chunk: int = DEFAULT_EV_CHUNK,
+               interpret=None):
     """Batched Pallas event loop; must run under ``enable_x64()``.
 
-    locality (B,) f32, b_init (B,2) i32, costs (B,8) i32 (or a tuple of 8
-    (B,) arrays, as the XLA batch path passes them), seed (B,) i32,
-    zcdf (B, K//N) f32; thread_node (T,)/lock_node (K,) broadcast. Returns
-    (done (B,T) i32, lat (B,LAT_SAMPLES) i64, lat_n (B,) i32, t_end (B,)
-    i64, nreacq (B,) i32, npass (B,) i32).
+    ``wl`` is a ``WorkloadOperands`` with a leading replica axis B on
+    every leaf: locality (B,P,T) f32, zcdf (B,P,K//N) f32, edges (B,P)
+    i32, think_ns (B,P) i32, active (B,P,T) i32, b_init (B,2) i32, seed
+    (B,) i32. ``costs`` is (B,8) i32; thread_node (T,)/lock_node (K,)
+    broadcast. Returns (done (B,T) i32, lat (B,LAT_SAMPLES) i64, lat_n
+    (B,) i32, t_end (B,) i64, nreacq (B,) i32, npass (B,) i32).
 
     B need not divide the replica tile and n_events need not divide the
     event chunk: replicas are edge-padded (duplicates, sliced off) and the
@@ -76,9 +86,9 @@ def run_events(alg, T, N, K, n_events, locality, b_init, thread_node,
     """
     if interpret is None:
         interpret = default_interpret()
-    if isinstance(costs, (tuple, list)):
-        costs = jnp.stack(costs, axis=-1)
-    B = locality.shape[0]
+    costs = jnp.asarray(costs, I32)
+    B = wl.seed.shape[0]
+    P = wl.edges.shape[1]
     if n_events < 1:
         # degenerate run: match the XLA loop's 0-iteration outputs instead
         # of tracing a zero-size grid (which Pallas rejects obscurely)
@@ -86,7 +96,8 @@ def run_events(alg, T, N, K, n_events, locality, b_init, thread_node,
                 jnp.full((B, LAT_SAMPLES), -1, I64), jnp.zeros(B, I32),
                 jnp.zeros(B, I64), jnp.zeros(B, I32), jnp.zeros(B, I32))
     kpn = K // N
-    glocal, r2, r3 = precompute_draws(seed, locality, zcdf, n_events, N, kpn)
+    u1, r2, r3 = precompute_draws(wl.seed, wl.edges, wl.zcdf, n_events, N,
+                                  kpn)
 
     tile = max(1, min(tile, B))
     pad_b = -B % tile
@@ -98,9 +109,15 @@ def run_events(alg, T, N, K, n_events, locality, b_init, thread_node,
         return jnp.pad(a, ((0, pad_b),) + ((0, 0),) * (a.ndim - 1),
                        mode="edge") if pad_b else a
 
-    glocal, r2, r3 = (jnp.pad(prep(a), ((0, 0), (0, pad_e))) if pad_e
-                      else prep(a) for a in (glocal, r2, r3))
-    b_init, costs = prep(b_init), prep(costs)
+    u1, r2, r3 = (jnp.pad(prep(a), ((0, 0), (0, pad_e))) if pad_e
+                  else prep(a) for a in (u1, r2, r3))
+    # per-phase payloads ride flattened to 2D blocks (P*T lanes); the
+    # kernel reshapes them back — P is static via the operand shape
+    locp = prep(wl.locality.reshape(B, P * T))
+    actp = prep(wl.active.reshape(B, P * T))
+    edges, think, b_init = (prep(a) for a in (wl.edges, wl.think_ns,
+                                              wl.b_init))
+    costs = prep(costs)
     Bp = B + pad_b
     n_chunks = (n_events + pad_e) // ev_chunk
     grid = (Bp // tile, n_chunks)
@@ -109,13 +126,14 @@ def run_events(alg, T, N, K, n_events, locality, b_init, thread_node,
         return pl.BlockSpec((tile, w), lambda i, j: (i, 0))
 
     out = pl.pallas_call(
-        functools.partial(event_loop_kernel, alg=alg, T=T, N=N, K=K,
+        functools.partial(event_loop_kernel, alg=alg, T=T, N=N, K=K, P=P,
                           n_events=n_events, ev_chunk=ev_chunk),
         grid=grid,
         in_specs=[
             pl.BlockSpec((tile, ev_chunk), lambda i, j: (i, j)),
             pl.BlockSpec((tile, ev_chunk), lambda i, j: (i, j)),
             pl.BlockSpec((tile, ev_chunk), lambda i, j: (i, j)),
+            row(P), row(P), row(P * T), row(P * T),
             row(2), row(8),
             pl.BlockSpec((1, T), lambda i, j: (0, 0)),
             pl.BlockSpec((1, K), lambda i, j: (0, 0)),
@@ -144,8 +162,10 @@ def run_events(alg, T, N, K, n_events, locality, b_init, thread_node,
             pltpu.VMEM((tile, T), I64),   # op_start
         ],
         interpret=interpret,
-    )(glocal, r2, r3, b_init,
-      jnp.asarray(costs, I32),
+    )(u1, r2, r3,
+      jnp.asarray(edges, I32), jnp.asarray(think, I32),
+      jnp.asarray(locp, jnp.float32), jnp.asarray(actp, I32),
+      jnp.asarray(b_init, I32), costs,
       jnp.asarray(thread_node, I32)[None, :],
       jnp.asarray(lock_node, I32)[None, :])
     done, lat, lat_n, t_end, nreacq, npass = (o[:B] for o in out)

@@ -1,0 +1,22 @@
+"""Public workload API: declarative specs + lowering to traced operands.
+
+>>> from repro.workloads import Workload, Phase, mixed
+>>> w = Workload("alock", n_nodes=4, threads_per_node=8, n_locks=64,
+...              locality=mixed(local=0.9, frac=0.5), zipf_s=1.2,
+...              phases=(Phase(frac=0.5),
+...                      Phase(frac=0.5, zipf_s=3.0)))   # hot-key storm
+
+Run it with ``repro.experiments.Experiment`` (batched, labeled, with
+error bars) or directly with ``repro.core.sim.simulate(w)``.
+"""
+from repro.workloads.lower import (Lowered, WorkloadOperands, as_workload,
+                                   from_simconfig, lower, pad_phases,
+                                   resolve_locality, zipf_cdf)
+from repro.workloads.spec import (ALGS, Mixed, Phase, THINK_CLASSES,
+                                  Workload, mixed)
+
+__all__ = [
+    "ALGS", "Lowered", "Mixed", "Phase", "THINK_CLASSES", "Workload",
+    "WorkloadOperands", "as_workload", "from_simconfig", "lower", "mixed",
+    "pad_phases", "resolve_locality", "zipf_cdf",
+]

@@ -1,0 +1,218 @@
+"""Lowering: declarative :class:`Workload` specs -> traced operand structs.
+
+``lower()`` turns a spec into a :class:`WorkloadOperands` — plain arrays,
+*all of them traced operands* of the event-loop engines:
+
+  ======== ========== ====================================================
+  field    shape      meaning
+  ======== ========== ====================================================
+  locality (P, T) f32 per-phase per-thread P(target lock is local)
+  zcdf     (P, kpn)   per-phase inclusive Zipf CDF of the within-node draw
+  edges    (P,) i32   first event index of each phase (edges[0] == 0)
+  think_ns (P,) i32   per-phase think time between critical sections
+  active   (P, T) i32 1 = schedulable; 0 = thread's node is down
+  b_init   (2,) i32   (local, remote) ALock budgets
+  seed     () i32     replica PRNG seed
+  ======== ========== ====================================================
+
+Only ``(alg, T, N, K, n_events)`` — plus the phase-count P via the operand
+*shapes* — is static, so a sweep mixing scenarios (different localities,
+skews, phase programs) shares one compiled executable per shape bucket;
+``pad_phases`` extends any replica to a bucket's max P with unreachable
+phases (``edges = INT32_MAX``), which provably never alters the per-event
+phase selection.
+
+``from_simconfig`` adapts the legacy flat ``SimConfig`` to a single-phase
+``Workload`` bitwise-faithfully (same draws, costs, clocks).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import numpy as np
+
+from repro.core.cost_model import CostModel
+from repro.workloads.spec import Mixed, Phase, Workload, _check_think
+
+_I32_MAX = np.iinfo(np.int32).max
+
+
+class WorkloadOperands(NamedTuple):
+    """The lowered, fully-traced workload (see module docstring for the
+    per-field shapes). A jax pytree: ``batch.sweep`` stacks a leading
+    replica axis B onto every leaf and vmaps the engines over it."""
+    locality: Any   # (P, T) f32
+    zcdf: Any       # (P, kpn) f32
+    edges: Any      # (P,) i32
+    think_ns: Any   # (P,) i32
+    active: Any     # (P, T) i32
+    b_init: Any     # (2,) i32
+    seed: Any       # () i32
+
+    @property
+    def n_phases(self) -> int:
+        return self.edges.shape[-1]
+
+
+class Lowered(NamedTuple):
+    """A spec bound to a run length: static shape info + operand arrays."""
+    alg: str
+    n_nodes: int
+    threads_per_node: int
+    n_locks: int
+    n_events: int
+    operands: WorkloadOperands      # numpy, no batch axis
+
+    @property
+    def n_threads(self) -> int:
+        return self.n_nodes * self.threads_per_node
+
+    @property
+    def shape_key(self) -> tuple:
+        """The static-argument tuple that determines a compile bucket."""
+        return (self.alg, self.n_threads, self.n_nodes, self.n_locks,
+                self.n_events)
+
+
+def zipf_cdf(kpn: int, s: float) -> np.ndarray:
+    """Inclusive CDF of a Zipf(s) draw over the ``kpn`` locks of one node.
+
+    ``cdf[j] = P(lock_rank <= j)`` with ``P(rank j) ∝ (j+1)^-s``; ``s=0``
+    is exactly the uniform workload (``cdf[j] == (j+1)/kpn`` in float32)
+    and ``cdf[-1] == 1.0``. float32 so it can ride the traced batch axis
+    next to ``locality`` without recompiles.
+    """
+    if kpn < 1:
+        raise ValueError(f"need at least one lock per node, got kpn={kpn}")
+    s = float(s)
+    if not math.isfinite(s) or s < 0.0:
+        raise ValueError(f"zipf skew must be finite and >= 0, got {s}")
+    ranks = np.arange(1, kpn + 1, dtype=np.float64)
+    w = ranks ** (-s)
+    return np.cumsum(w / w.sum()).astype(np.float32)
+
+
+def resolve_locality(loc, n_nodes: int, tpn: int) -> np.ndarray:
+    """Scalar | (T,) tuple | Mixed -> the per-thread (T,) float32 vector."""
+    T = n_nodes * tpn
+    if isinstance(loc, Mixed):
+        n_hot = int(round(loc.frac * tpn))
+        row = np.full(tpn, np.float32(loc.rest))
+        row[:n_hot] = np.float32(loc.local)
+        return np.tile(row, n_nodes)
+    if isinstance(loc, tuple):
+        return np.asarray(loc, np.float32)
+    return np.full(T, np.float32(loc))
+
+
+def lower(w: Workload, n_events: int,
+          cm: CostModel = CostModel()) -> Lowered:
+    """Bind a spec to a run length and emit its traced operand struct."""
+    N, tpn, K = w.n_nodes, w.threads_per_node, w.n_locks
+    T = N * tpn
+    if K % N != 0:
+        raise ValueError(
+            f"locks must partition evenly across nodes: n_locks={K} is not "
+            f"a multiple of n_nodes={N} (got (n_locks, n_nodes)=({K}, {N}))")
+    kpn = K // N
+    phases = w.phases or (Phase(frac=1.0),)
+    P = len(phases)
+
+    locality = np.empty((P, T), np.float32)
+    zcdf = np.empty((P, kpn), np.float32)
+    edges = np.empty(P, np.int32)
+    think_ns = np.empty(P, np.int32)
+    active = np.ones((P, T), np.int32)
+    cum = 0.0
+    for p, ph in enumerate(phases):
+        edges[p] = int(round(cum * n_events))
+        cum += ph.frac
+        loc = w.locality if ph.locality is None else ph.locality
+        locality[p] = resolve_locality(loc, N, tpn)
+        zs = w.zipf_s if ph.zipf_s is None else ph.zipf_s
+        zcdf[p] = zipf_cdf(kpn, zs)
+        mult = _check_think(w.think if ph.think is None else ph.think)
+        # mult == 1.0 reproduces topology()'s c_think integer exactly —
+        # the SimConfig adapter's bitwise contract rests on this
+        think_ns[p] = int(round(mult * cm.think_ns))
+        for node in ph.down_nodes:
+            active[p, node * tpn:(node + 1) * tpn] = 0
+    edges[0] = 0
+    if P == 1 and (active == 0).any():
+        # the engines take a fast path (no phase/active machinery) for
+        # single-phase operands, which is only sound when every thread is
+        # schedulable — split a masked single phase into two identical
+        # halves so the invariant "P == 1 implies all-active" holds by
+        # construction (semantically identical: same mask both halves,
+        # the boundary rejoin is a no-op)
+        P = 2
+        locality = np.repeat(locality, 2, axis=0)
+        zcdf = np.repeat(zcdf, 2, axis=0)
+        think_ns = np.repeat(think_ns, 2, axis=0)
+        active = np.repeat(active, 2, axis=0)
+        edges = np.asarray([0, n_events // 2], np.int32)
+    if P > 1 and np.any(np.diff(edges) <= 0):
+        # a zero-event phase would silently vanish AND misdirect the
+        # rejoin bump at its boundary (was_act would read the dropped
+        # phase's mask) — reject instead
+        raise ValueError(
+            f"phase program collapses at n_events={n_events}: edges "
+            f"{edges.tolist()} are not strictly increasing (every phase "
+            f"needs at least one event — raise n_events or merge phases)")
+
+    ops = WorkloadOperands(
+        locality=locality, zcdf=zcdf, edges=edges, think_ns=think_ns,
+        active=active, b_init=np.asarray(w.b_init, np.int32),
+        seed=np.int32(w.seed))
+    return Lowered(w.alg, N, tpn, K, int(n_events), ops)
+
+
+def pad_phases(ops: WorkloadOperands, n_phases: int) -> WorkloadOperands:
+    """Extend a replica's operands to ``n_phases`` with unreachable phases.
+
+    Padded phases start at ``INT32_MAX`` (past any event index), so the
+    per-event selection ``phase = sum(i >= edges) - 1`` is bitwise
+    unchanged; their payload rows just duplicate the last real phase.
+    """
+    P = ops.n_phases
+    if P == n_phases:
+        return ops
+    if P > n_phases:
+        raise ValueError(f"cannot shrink {P} phases to {n_phases}")
+    extra = n_phases - P
+
+    def rep(a):
+        return np.concatenate([a, np.repeat(a[-1:], extra, axis=0)], axis=0)
+
+    return ops._replace(
+        locality=rep(ops.locality), zcdf=rep(ops.zcdf),
+        edges=np.concatenate([ops.edges,
+                              np.full(extra, _I32_MAX, np.int32)]),
+        think_ns=rep(ops.think_ns), active=rep(ops.active))
+
+
+def from_simconfig(cfg) -> Workload:
+    """Adapt a legacy flat ``SimConfig`` to a single-phase :class:`Workload`.
+
+    .. deprecated::
+        ``SimConfig`` is kept only as a compatibility front door;
+        new code should construct :class:`Workload` (and
+        ``repro.experiments.Experiment``) directly. Per-seed results
+        through this adapter are bitwise-equal to the pre-spec engine
+        on both backends (asserted in ``tests/test_workload_api.py``).
+    """
+    return Workload(
+        alg=cfg.alg, n_nodes=cfg.n_nodes,
+        threads_per_node=cfg.threads_per_node, n_locks=cfg.n_locks,
+        locality=float(cfg.locality), zipf_s=float(cfg.zipf_s),
+        b_init=tuple(cfg.b_init), seed=int(cfg.seed))
+
+
+def as_workload(obj) -> Workload:
+    """Coerce Workload | SimConfig-shaped NamedTuple -> Workload."""
+    if isinstance(obj, Workload):
+        return obj
+    if hasattr(obj, "_fields") and hasattr(obj, "locality"):
+        return from_simconfig(obj)
+    raise TypeError(f"expected Workload or SimConfig, got {type(obj)!r}")

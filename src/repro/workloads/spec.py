@@ -1,0 +1,203 @@
+"""Declarative workload specs for the lock-table simulator.
+
+A :class:`Workload` describes *what the threads do* — per-thread (not
+per-run) behavior — independently of how it is executed:
+
+  * **locality** — ``P(target lock is on own node)`` as a scalar, a
+    per-thread ``(T,)`` vector, or a named :func:`mixed` split (a fraction
+    of each node's threads runs mostly-local, the rest mostly-remote);
+  * **zipf_s** — Zipf skew of the within-node lock choice (hot keys);
+  * **think** — think-time class between critical sections, either a named
+    class from :data:`THINK_CLASSES` or a float multiplier of the cost
+    model's ``think_ns``;
+  * **phases** — piecewise regimes over the event axis (:class:`Phase`):
+    each phase covers a fraction of the run and may override locality /
+    skew / think and take whole nodes down (``down_nodes`` — node
+    join/leave churn). Threads of a downed node are simply never
+    scheduled while the phase lasts.
+
+Specs are frozen and hashable, so they key result dicts the way the old
+``SimConfig`` NamedTuple did. Execution knobs (events, seeds, backend,
+devices) intentionally live elsewhere: ``repro.experiments`` composes
+``Workload x seeds x ExecOptions`` into batched sweeps, and
+``repro.workloads.lower`` turns a spec into the traced operand struct the
+engines consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+
+ALGS = ("alock", "spinlock", "mcs")
+
+# Named think-time classes: multipliers of CostModel.think_ns. "default"
+# is exactly the cost model's value (1.0), which the SimConfig adapter
+# relies on for bitwise equality with the pre-spec front door.
+THINK_CLASSES = {
+    "none": 0.0,
+    "short": 0.25,
+    "default": 1.0,
+    "long": 4.0,
+}
+
+
+def _check_prob(p, what: str) -> float:
+    p = float(p)
+    if not math.isfinite(p) or not 0.0 <= p <= 1.0:
+        raise ValueError(f"{what} must be a probability in [0, 1], got {p}")
+    return p
+
+
+@dataclass(frozen=True)
+class Mixed:
+    """Per-node locality split: ``frac`` of each node's threads run at
+    ``P(local) = local``, the remainder at ``P(local) = rest``."""
+    local: float
+    frac: float
+    rest: float
+
+    def __post_init__(self):
+        _check_prob(self.local, "mixed(local=...)")
+        _check_prob(self.frac, "mixed(frac=...)")
+        _check_prob(self.rest, "mixed(rest=...)")
+
+
+def mixed(local: float = 0.9, frac: float = 0.5, rest: float = 0.0) -> Mixed:
+    """A named per-thread locality mix, e.g. ``mixed(local=0.9, frac=0.5)``:
+    half of each node's threads target their own node 90% of the time, the
+    other half is fully remote (``rest=0.0``)."""
+    return Mixed(float(local), float(frac), float(rest))
+
+
+def _freeze_locality(loc):
+    """Scalar | (T,) sequence | Mixed -> hashable canonical form."""
+    if isinstance(loc, Mixed):
+        return loc
+    if isinstance(loc, (tuple, list)):
+        return tuple(_check_prob(v, "locality[t]") for v in loc)
+    return _check_prob(loc, "locality")
+
+
+@dataclass(frozen=True)
+class Phase:
+    """One piecewise regime over the event axis.
+
+    ``frac`` is the fraction of the run's events this phase covers (phase
+    fractions must sum to 1). ``None`` overrides inherit the workload's
+    base value. ``down_nodes`` lists node ids whose threads are parked
+    (never scheduled) for the duration — node leave/join churn; at least
+    one node must stay up.
+    """
+    frac: float
+    locality: object = None          # scalar | (T,) tuple | Mixed | None
+    zipf_s: float | None = None
+    think: object = None             # THINK_CLASSES name | float | None
+    down_nodes: tuple = ()
+
+    def __post_init__(self):
+        f = float(self.frac)
+        if not math.isfinite(f) or f <= 0.0 or f > 1.0:
+            raise ValueError(f"Phase.frac must be in (0, 1], got {self.frac}")
+        object.__setattr__(self, "frac", f)
+        if self.locality is not None:
+            object.__setattr__(self, "locality",
+                               _freeze_locality(self.locality))
+        object.__setattr__(self, "down_nodes",
+                           tuple(int(n) for n in self.down_nodes))
+
+
+@dataclass(frozen=True)
+class Workload:
+    """Declarative simulator workload: topology + per-thread behavior.
+
+    The spec is purely descriptive. ``repro.workloads.lower.lower`` turns
+    it into the batched traced-operand struct (``WorkloadOperands``) that
+    ``core/sim.py``, ``core/batch.py`` and ``kernels/event_loop`` consume,
+    so sweeps mixing arbitrary localities / skews / phase programs share
+    one compiled executable per ``(alg, T, N, K, n_events)`` shape bucket.
+    """
+    alg: str
+    n_nodes: int
+    threads_per_node: int
+    n_locks: int
+    locality: object = 1.0           # scalar | (T,) tuple | Mixed
+    zipf_s: float = 0.0
+    think: object = "default"        # THINK_CLASSES name | float multiplier
+    b_init: tuple = (5, 20)          # (local, remote) budgets
+    seed: int = 0
+    phases: tuple = ()               # tuple[Phase, ...]
+
+    def __post_init__(self):
+        if self.alg not in ALGS:
+            raise ValueError(f"alg must be one of {ALGS}, got {self.alg!r}")
+        for name in ("n_nodes", "threads_per_node", "n_locks"):
+            v = int(getattr(self, name))
+            if v < 1:
+                raise ValueError(f"{name} must be >= 1, got {v}")
+            object.__setattr__(self, name, v)
+        object.__setattr__(self, "locality", _freeze_locality(self.locality))
+        zs = float(self.zipf_s)
+        if not math.isfinite(zs) or zs < 0.0:
+            raise ValueError(
+                f"zipf_s must be finite and >= 0, got {self.zipf_s}")
+        object.__setattr__(self, "zipf_s", zs)
+        _check_think(self.think)
+        bi = tuple(int(b) for b in self.b_init)
+        if len(bi) != 2:
+            raise ValueError(f"b_init must be (local, remote), got {bi}")
+        object.__setattr__(self, "b_init", bi)
+        object.__setattr__(self, "seed", int(self.seed))
+        phases = tuple(self.phases)
+        if phases:
+            if not all(isinstance(p, Phase) for p in phases):
+                raise ValueError("phases must be Phase instances")
+            tot = sum(p.frac for p in phases)
+            if abs(tot - 1.0) > 1e-6:
+                raise ValueError(
+                    f"phase fractions must sum to 1, got {tot:g}")
+            for p in phases:
+                bad = [n for n in p.down_nodes
+                       if not 0 <= n < self.n_nodes]
+                if bad:
+                    raise ValueError(f"down_nodes {bad} outside "
+                                     f"[0, {self.n_nodes})")
+                if len(set(p.down_nodes)) >= self.n_nodes:
+                    raise ValueError("a phase cannot take every node down")
+        object.__setattr__(self, "phases", phases)
+        if isinstance(self.locality, tuple) and \
+                len(self.locality) != self.n_threads:
+            raise ValueError(
+                f"per-thread locality needs {self.n_threads} entries, "
+                f"got {len(self.locality)}")
+        for p in phases:
+            if isinstance(p.locality, tuple) and \
+                    len(p.locality) != self.n_threads:
+                raise ValueError(
+                    f"phase per-thread locality needs {self.n_threads} "
+                    f"entries, got {len(p.locality)}")
+
+    @property
+    def n_threads(self) -> int:
+        return self.n_nodes * self.threads_per_node
+
+    @property
+    def n_phases(self) -> int:
+        return max(1, len(self.phases))
+
+    def replace(self, **kw) -> "Workload":
+        """A copy with fields replaced (phases/locality re-validated)."""
+        return dataclasses.replace(self, **kw)
+
+
+def _check_think(think) -> float:
+    """Resolve a think class/multiplier to its float multiplier."""
+    if isinstance(think, str):
+        if think not in THINK_CLASSES:
+            raise ValueError(f"unknown think class {think!r}; pick from "
+                             f"{sorted(THINK_CLASSES)} or pass a float")
+        return THINK_CLASSES[think]
+    m = float(think)
+    if not math.isfinite(m) or m < 0.0:
+        raise ValueError(f"think multiplier must be finite and >= 0, got {m}")
+    return m

@@ -42,21 +42,32 @@ def test_pallas_bitwise_with_zipf_and_multi_node():
 
 def test_kernel_ragged_tile_and_chunk_bitwise():
     """Replica count not a tile multiple + events not a chunk multiple must
-    pad internally and still match the vmapped XLA reference exactly."""
+    pad internally and still match the vmapped XLA reference exactly —
+    including per-thread locality, a mid-stream phase switch (crossing a
+    chunk boundary) and a downed node."""
     from repro.kernels.event_loop.ops import run_events
     from repro.kernels.event_loop.ref import run_events_ref
+    from repro.workloads import WorkloadOperands
     alg, N, tpn, K = "alock", 3, 4, 6
-    T, B, ev = N * tpn, 5, 1100
+    T, B, ev, P = N * tpn, 5, 1100, 2
     tn, ln, costs = topology(alg, N, tpn, K)
-    loc = jnp.asarray(np.float32([0.9, 1.0, 0.5, 0.85, 0.95]))
-    bi = jnp.asarray(np.tile(np.int32([2, 3]), (B, 1)))
+    rng = np.random.default_rng(0)
+    loc = rng.uniform(0.3, 1.0, (B, P, T)).astype(np.float32)
+    zc = np.stack([[zipf_cdf(K // N, s) for s in row]
+                   for row in rng.uniform(0.0, 2.0, (B, P))])
+    active = np.ones((B, P, T), np.int32)
+    active[:, 1, :tpn] = 0          # node 0 down in the second phase
+    wl = WorkloadOperands(
+        locality=jnp.asarray(loc), zcdf=jnp.asarray(np.float32(zc)),
+        edges=jnp.asarray(np.tile(np.int32([0, 600]), (B, 1))),
+        think_ns=jnp.asarray(np.tile(np.int32([500, 250]), (B, 1))),
+        active=jnp.asarray(active),
+        b_init=jnp.asarray(np.tile(np.int32([2, 3]), (B, 1))),
+        seed=jnp.arange(B, dtype=jnp.int32) + 11)
     cst = jnp.asarray(np.tile(np.int32(costs), (B, 1)))
-    sd = jnp.arange(B, dtype=np.int32) + 11
-    zc = jnp.asarray(np.stack([zipf_cdf(K // N, s)
-                               for s in (0.0, 1.2, 0.7, 0.0, 2.0)]))
     with enable_x64():
-        ref = run_events_ref(alg, T, N, K, ev, loc, bi, tn, ln, cst, sd, zc)
-        out = run_events(alg, T, N, K, ev, loc, bi, tn, ln, cst, sd, zc,
+        ref = run_events_ref(alg, T, N, K, ev, wl, tn, ln, cst)
+        out = run_events(alg, T, N, K, ev, wl, tn, ln, cst,
                          tile=2, ev_chunk=256, interpret=True)
     for a, b in zip(ref, out):
         assert a.dtype == b.dtype

@@ -1,0 +1,150 @@
+"""ExecOptions, Experiment builder, scenario registry, coord stress +
+deterministic (injected-clock) lease/membership behavior."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.coord.service import CoordService, LeaseManager, Membership
+from repro.coord.stress import ManualClock, run_coord_stress
+from repro.core import batch
+from repro.experiments import (ExecOptions, Experiment, get_scenario,
+                               run_scenario, scenario_names)
+from repro.workloads import Phase, Workload
+
+EV = 800
+
+
+# -- ExecOptions ------------------------------------------------------------
+
+
+def test_exec_options_validation_and_immutability():
+    with pytest.raises(ValueError, match="backend"):
+        ExecOptions(backend="cuda")
+    with pytest.raises(ValueError, match="devices"):
+        ExecOptions(devices=0)
+    with pytest.raises(ValueError, match="chunk"):
+        ExecOptions(chunk=-1)
+    o = ExecOptions(backend="xla", chunk=2)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        o.backend = "pallas"
+    kw = o.sweep_kwargs()
+    assert kw == {"backend": "xla", "devices": None, "chunk": 2}
+
+
+def test_exec_options_device_list_bounds():
+    with pytest.raises(ValueError, match="device"):
+        ExecOptions(devices=4096).device_list()
+    assert ExecOptions().device_list() is None
+
+
+def test_exec_options_from_env(monkeypatch):
+    monkeypatch.setenv("REPRO_BACKEND", "xla")
+    assert ExecOptions.from_env().backend == "xla"
+    assert ExecOptions.from_env(backend="pallas").backend == "pallas"
+    # an unset CLI flag arrives as backend=None: the env var must win
+    # (regression: setdefault on an existing None key ignored the env)
+    assert ExecOptions.from_env(backend=None, devices=None).backend == "xla"
+
+
+# -- Experiment -------------------------------------------------------------
+
+
+def test_experiment_grid_labels_dedupe_and_results():
+    base = Workload("alock", 2, 2, 8, locality=0.9)
+    exp = (Experiment("t", n_seeds=2, n_events=EV,
+                      options=ExecOptions(backend="xla"))
+           .add_grid(base, alg=("alock", "mcs"), locality=(0.85, 1.0))
+           .add(base, label="extra"))
+    assert len(exp) == 5
+    assert exp.labels if hasattr(exp, "labels") else True
+    with pytest.raises(ValueError, match="duplicate"):
+        exp.add(base, label="extra")
+    res = exp.run()
+    assert res.labels == ["alock.locality0.85", "alock.locality1",
+                          "mcs.locality0.85", "mcs.locality1", "extra"]
+    # result rows equal a direct sweep of the same specs
+    direct = batch.sweep([base.replace(alg="mcs", locality=1.0)],
+                         n_seeds=2, n_events=EV, backend="xla")[0]
+    np.testing.assert_array_equal(res["mcs.locality1"].ops, direct.ops)
+    np.testing.assert_array_equal(res["mcs.locality1"].lat_ns,
+                                  direct.lat_ns)
+    # addressable by spec too, and SimConfig keys ride the adapter
+    assert res[base] is res["extra"]
+
+
+# -- scenario registry ------------------------------------------------------
+
+
+def test_registry_names_and_unknown():
+    names = scenario_names()
+    for expected in ("uniform-grid", "hot-key-storm", "mixed-locality",
+                     "node-churn", "paper-fig5", "coord-stress"):
+        assert expected in names
+    with pytest.raises(ValueError, match="unknown scenario"):
+        get_scenario("nope")
+
+
+def test_run_scenario_rows_smoke():
+    rows = run_scenario("node-churn", n_seeds=1, n_events=600,
+                        options=ExecOptions(backend="xla"))
+    assert all({"name", "us_per_call", "derived"} <= set(r) for r in rows)
+    assert any("node3_op_share" in r["name"] for r in rows)
+
+
+# -- coord stress through the workload spec ---------------------------------
+
+
+def _churn_workload(seed=0):
+    return Workload("alock", 3, 4, 12, locality=0.9, seed=seed,
+                    phases=(Phase(frac=0.3),
+                            Phase(frac=0.4, down_nodes=(2,), zipf_s=2.0),
+                            Phase(frac=0.3)))
+
+
+def test_coord_stress_deterministic_and_churn_shaped():
+    r1 = run_coord_stress(_churn_workload(), ops_per_thread=30,
+                          clock=ManualClock())
+    r2 = run_coord_stress(_churn_workload(), ops_per_thread=30,
+                          clock=ManualClock())
+    assert r1.ops == r2.ops and r1.per_node_ops == r2.per_node_ops
+    assert r1.lease_grants == r2.lease_grants
+    assert r1.lease_steals == r2.lease_steals
+    # node 2 vanishes from phase-1 membership and does fewer lock ops
+    assert r1.phase_members == [[0, 1, 2], [0, 1], [0, 1, 2]]
+    assert r1.per_node_ops[2] < min(r1.per_node_ops[0],
+                                    r1.per_node_ops[1])
+    assert r1.lease_steals > 0        # expiry storms turn leases over
+
+
+# -- injected clocks (satellite: no sleeps, fully deterministic) ------------
+
+
+def test_lease_expiry_storm_with_manual_clock():
+    clock = ManualClock()
+    svc = CoordService(4)
+    lm = LeaseManager(svc, ttl_s=5.0, clock=clock)
+    l0 = lm.acquire(0, "ckpt")
+    assert l0 is not None and l0.epoch == 0
+    assert lm.acquire(1, "ckpt") is None          # exclusive while live
+    clock.advance(2.0)
+    assert lm.renew(l0)                           # deadline pushed out
+    clock.advance(4.0)
+    assert lm.acquire(1, "ckpt") is None          # renew kept it alive
+    clock.advance(5.1)                            # ...now it expires
+    l1 = lm.acquire(1, "ckpt")
+    assert l1 is not None and l1.epoch == l0.epoch + 1
+    assert not lm.renew(l0)                       # old epoch fenced off
+
+
+def test_membership_with_manual_clock():
+    clock = ManualClock()
+    svc = CoordService(4)
+    mem = Membership(svc, heartbeat_ttl=2.0, clock=clock)
+    for n in range(3):
+        mem.join(n)
+    assert mem.alive() == [0, 1, 2]
+    clock.advance(1.5)
+    mem.heartbeat(1)
+    clock.advance(1.0)                            # 0/2 stale, 1 fresh
+    assert mem.alive() == [1]

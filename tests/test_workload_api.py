@@ -1,0 +1,161 @@
+"""The tentpole contracts of the Workload redesign.
+
+1. SimConfig-adapter bitwise equality: every alg x locality x zipf point
+   from ``test_event_loop_kernel.py`` produces bit-identical results
+   whether expressed as a flat ``SimConfig`` or as an explicit ``Workload``
+   (scalar, per-thread vector, or single-phase form) — on both backends.
+2. Traced-operand bucketing: a sweep mixing >= 3 scenarios (flat,
+   per-thread mix, multi-phase program) runs as ONE dispatch + ONE compile
+   per shape bucket (``batch.exec_stats``), with the flat member still
+   bitwise-equal to its solo ``simulate`` run.
+3. Phase semantics: hot-key storms raise contention; a downed node loses
+   its share of completed ops (rejoin resumes from the cluster clock).
+"""
+import numpy as np
+import pytest
+
+from repro.core import batch
+from repro.core.sim import SimConfig, simulate
+from repro.workloads import Phase, Workload, from_simconfig, mixed
+
+EV = 1000
+
+POINTS = [("alock", 0.85, 0.0), ("alock", 1.0, 0.0),
+          ("spinlock", 0.85, 0.0), ("spinlock", 1.0, 0.0),
+          ("mcs", 0.85, 0.0), ("mcs", 1.0, 0.0)]
+
+
+def _cfg(alg, loc, zipf):
+    if zipf:
+        return SimConfig(alg, 3, 4, 6, loc, (5, 20), seed=3, zipf_s=zipf)
+    return SimConfig(alg, 2, 2, 8, loc, (2, 3), seed=7)
+
+
+def _assert_same(rx, rp):
+    assert rx.ops == rp.ops
+    assert rx.sim_ns == rp.sim_ns
+    assert rx.reacquires == rp.reacquires
+    assert rx.passes == rp.passes
+    np.testing.assert_array_equal(np.asarray(rx.lat_ns),
+                                  np.asarray(rp.lat_ns))
+    np.testing.assert_array_equal(np.asarray(rx.per_thread_ops),
+                                  np.asarray(rp.per_thread_ops))
+
+
+def _spec_variants(cfg):
+    w = from_simconfig(cfg)
+    T = w.n_threads
+    return (w,                                            # adapter
+            w.replace(locality=(float(cfg.locality),) * T),  # (T,) vector
+            w.replace(phases=(Phase(frac=1.0),)))         # explicit phase
+
+
+@pytest.mark.parametrize("alg,loc,zipf", POINTS + [("alock", 0.9, 1.2)])
+def test_adapter_and_spec_forms_bitwise_xla(alg, loc, zipf):
+    cfg = _cfg(alg, loc, zipf)
+    base = simulate(cfg, n_events=EV, backend="xla")
+    for w in _spec_variants(cfg):
+        _assert_same(base, simulate(w, n_events=EV, backend="xla"))
+
+
+@pytest.mark.parametrize("alg,loc,zipf",
+                         [("alock", 0.85, 0.0), ("spinlock", 1.0, 0.0),
+                          ("mcs", 0.85, 0.0), ("alock", 0.9, 1.2)])
+def test_adapter_and_spec_forms_bitwise_pallas(alg, loc, zipf):
+    """The SimConfig adapter path and the explicit spec forms also agree
+    through the Pallas kernel (interpret mode on CPU)."""
+    cfg = _cfg(alg, loc, zipf)
+    base = simulate(cfg, n_events=EV, backend="xla")
+    for w in _spec_variants(cfg):
+        _assert_same(base, simulate(w, n_events=EV, backend="pallas"))
+
+
+def test_sweep_mixing_scenarios_is_one_compile_one_dispatch():
+    """>= 3 scenarios of one topology — flat adapter config, per-thread
+    mix, phased hot-key storm, churn program — share a single executable
+    and a single dispatch; phase padding is provably inert for the flat
+    member."""
+    flat_cfg = SimConfig("alock", 2, 2, 8, 0.9, (2, 3), seed=7)
+    scenarios = [
+        flat_cfg,                                          # adapter
+        Workload("alock", 2, 2, 8,
+                 locality=mixed(local=0.95, frac=0.5, rest=0.2)),
+        Workload("alock", 2, 2, 8, locality=0.9,
+                 phases=(Phase(frac=0.5), Phase(frac=0.5, zipf_s=3.0))),
+        Workload("alock", 2, 2, 8, locality=0.9,
+                 phases=(Phase(frac=0.3),
+                         Phase(frac=0.4, down_nodes=(1,)),
+                         Phase(frac=0.3))),
+    ]
+    batch.reset_exec_stats()
+    res = batch.sweep(scenarios, n_seeds=2, n_events=EV, backend="xla")
+    st = batch.exec_stats()
+    assert st["dispatches"] == 1 and st["compiles"] <= 1
+    solo = simulate(flat_cfg, n_events=EV, backend="xla")
+    assert int(res[0].ops[0]) == solo.ops
+    assert int(res[0].sim_ns[0]) == solo.sim_ns
+    np.testing.assert_array_equal(res[0].lat_ns[0], np.asarray(solo.lat_ns))
+    # and the same mixed bucket through the pallas backend agrees
+    rp = batch.sweep(scenarios, n_seeds=2, n_events=EV, backend="pallas")
+    for a, b in zip(res, rp):
+        np.testing.assert_array_equal(a.ops, b.ops)
+        np.testing.assert_array_equal(a.lat_ns, b.lat_ns)
+
+
+def test_hot_key_storm_raises_contention():
+    base = Workload("alock", 2, 2, 8, locality=1.0)
+    storm = base.replace(phases=(Phase(frac=0.3),
+                                 Phase(frac=0.4, zipf_s=4.0),
+                                 Phase(frac=0.3)))
+    r0 = simulate(base, n_events=6_000)
+    r1 = simulate(storm, n_events=6_000)
+    assert r0.ops > 0 and r1.ops > 0
+    assert r1.ops < r0.ops            # serialized hot lock completes less
+    assert batch.shape_key(base, 6_000) == batch.shape_key(storm, 6_000)
+
+
+def test_downed_node_loses_op_share():
+    churn = Workload("alock", 4, 4, 16, locality=0.95, seed=5,
+                     phases=(Phase(frac=0.3),
+                             Phase(frac=0.4, down_nodes=(3,)),
+                             Phase(frac=0.3)))
+    r = simulate(churn, n_events=4_000)
+    pto = np.asarray(r.per_thread_ops)
+    node3 = float(pto[12:].sum())
+    assert node3 > 0                          # it was up 60% of the run
+    share = node3 / float(pto.sum())
+    assert share < 0.22                       # well under the fair 0.25
+
+
+def test_single_masked_phase_parks_threads_everywhere():
+    """A one-phase program with down_nodes must park those threads in
+    every execution layout (regression: the engines' single-phase fast
+    path used to drop the active mask, so results depended on which
+    workloads shared the sweep bucket)."""
+    w = Workload("alock", 2, 2, 4, locality=0.9, seed=3,
+                 phases=(Phase(frac=1.0, down_nodes=(1,)),))
+    r = simulate(w, n_events=EV, backend="xla")
+    pto = np.asarray(r.per_thread_ops)
+    assert pto[:2].sum() > 0 and pto[2:].sum() == 0
+    _assert_same(r, simulate(w, n_events=EV, backend="pallas"))
+    solo = batch.sweep([w], n_seeds=1, n_events=EV, backend="xla")[0]
+    mixed_bucket = batch.sweep(
+        [w, Workload("alock", 2, 2, 4, locality=0.9,
+                     phases=(Phase(frac=0.4), Phase(frac=0.3),
+                             Phase(frac=0.3)))],
+        n_seeds=1, n_events=EV, backend="xla")[0]
+    np.testing.assert_array_equal(solo.per_thread_ops,
+                                  mixed_bucket.per_thread_ops)
+    np.testing.assert_array_equal(solo.lat_ns, mixed_bucket.lat_ns)
+    np.testing.assert_array_equal(pto, solo.per_thread_ops[0])
+
+
+def test_per_thread_locality_shapes_traffic():
+    """Threads with locality 1.0 never take the remote-cohort path while
+    their 0.0-locality peers on the same node mostly do (alock cohorts)."""
+    w = Workload("alock", 2, 2, 4, locality=(1.0, 0.0, 1.0, 0.0), seed=2)
+    r = simulate(w, n_events=4_000)
+    pto = np.asarray(r.per_thread_ops)
+    assert pto.sum() == r.ops and (pto >= 0).all()
+    # local-only threads complete strictly more ops than remote-only ones
+    assert pto[0] + pto[2] > pto[1] + pto[3]

@@ -1,0 +1,136 @@
+"""Workload spec validation, lowering, zipf_cdf hardening, phase padding."""
+import numpy as np
+import pytest
+
+from repro.workloads import (Phase, Workload, from_simconfig, lower, mixed,
+                             pad_phases, resolve_locality, zipf_cdf)
+
+
+# -- spec validation --------------------------------------------------------
+
+
+def test_workload_validation():
+    with pytest.raises(ValueError, match="alg"):
+        Workload("qlock", 2, 2, 8)
+    with pytest.raises(ValueError, match="probability"):
+        Workload("alock", 2, 2, 8, locality=1.5)
+    with pytest.raises(ValueError, match="per-thread locality"):
+        Workload("alock", 2, 2, 8, locality=(0.5, 0.5, 0.5))  # needs T=4
+    with pytest.raises(ValueError, match="zipf_s"):
+        Workload("alock", 2, 2, 8, zipf_s=-1.0)
+    with pytest.raises(ValueError, match="think"):
+        Workload("alock", 2, 2, 8, think="warp")
+    with pytest.raises(ValueError, match="b_init"):
+        Workload("alock", 2, 2, 8, b_init=(1, 2, 3))
+    with pytest.raises(ValueError, match="sum to 1"):
+        Workload("alock", 2, 2, 8, phases=(Phase(frac=0.5),))
+    with pytest.raises(ValueError, match="every node down"):
+        Workload("alock", 2, 2, 8,
+                 phases=(Phase(frac=1.0, down_nodes=(0, 1)),))
+    with pytest.raises(ValueError, match="down_nodes"):
+        Workload("alock", 2, 2, 8, phases=(Phase(frac=1.0,
+                                                 down_nodes=(7,)),))
+    with pytest.raises(ValueError, match="Phase.frac"):
+        Phase(frac=0.0)
+
+
+def test_workload_hashable_dict_key():
+    w1 = Workload("alock", 2, 2, 8, locality=(0.5, 1.0, 0.8, 0.2),
+                  phases=(Phase(frac=0.5), Phase(frac=0.5, zipf_s=2.0)))
+    w2 = Workload("alock", 2, 2, 8, locality=(0.5, 1.0, 0.8, 0.2),
+                  phases=(Phase(frac=0.5), Phase(frac=0.5, zipf_s=2.0)))
+    assert w1 == w2 and hash(w1) == hash(w2)
+    assert {w1: 1}[w2] == 1
+    assert w1.replace(seed=3) != w1
+
+
+def test_mixed_locality_resolution():
+    row = resolve_locality(mixed(local=0.9, frac=0.5, rest=0.1),
+                           n_nodes=2, tpn=4)
+    np.testing.assert_allclose(
+        row, np.float32([0.9, 0.9, 0.1, 0.1] * 2))
+    full = resolve_locality(0.7, n_nodes=2, tpn=2)
+    np.testing.assert_allclose(full, np.float32([0.7] * 4))
+
+
+# -- lowering ---------------------------------------------------------------
+
+
+def test_lower_edges_and_overrides():
+    w = Workload("alock", 2, 2, 8, locality=0.9, zipf_s=0.5, think="short",
+                 phases=(Phase(frac=0.3),
+                         Phase(frac=0.4, zipf_s=2.0, think="long",
+                               down_nodes=(1,)),
+                         Phase(frac=0.3, locality=0.2)))
+    lw = lower(w, n_events=1000)
+    o = lw.operands
+    assert o.n_phases == 3
+    np.testing.assert_array_equal(o.edges, [0, 300, 700])
+    # inherit vs override
+    np.testing.assert_allclose(o.locality[0], np.float32([0.9] * 4))
+    np.testing.assert_allclose(o.locality[2], np.float32([0.2] * 4))
+    np.testing.assert_array_equal(o.zcdf[1], zipf_cdf(4, 2.0))
+    np.testing.assert_array_equal(o.zcdf[2], zipf_cdf(4, 0.5))
+    assert o.think_ns[1] == 16 * o.think_ns[0]   # long(4.0) vs short(0.25)
+    np.testing.assert_array_equal(o.active[1], [1, 1, 0, 0])
+    np.testing.assert_array_equal(o.active[0], [1, 1, 1, 1])
+    assert lw.shape_key == ("alock", 4, 2, 8, 1000)
+
+
+def test_lower_rejects_uneven_partition():
+    with pytest.raises(ValueError, match="partition"):
+        lower(Workload("alock", 3, 2, 8), n_events=10)
+
+
+def test_lower_rejects_collapsed_phase_program():
+    """A phase that rounds to zero events must be an error, not a silent
+    drop (the rejoin bump would read the dropped phase's active mask)."""
+    w = Workload("alock", 2, 2, 8,
+                 phases=(Phase(frac=0.3), Phase(frac=0.4, down_nodes=(1,)),
+                         Phase(frac=0.3)))
+    with pytest.raises(ValueError, match="strictly increasing"):
+        lower(w, n_events=2)
+    assert lower(w, n_events=10).operands.edges.tolist() == [0, 3, 7]
+
+
+def test_pad_phases_shapes_and_shrink_error():
+    o = lower(Workload("alock", 2, 2, 8), n_events=100).operands
+    p3 = pad_phases(o, 3)
+    assert p3.locality.shape == (3, 4) and p3.edges.shape == (3,)
+    assert (p3.edges[1:] == np.iinfo(np.int32).max).all()
+    np.testing.assert_array_equal(p3.locality[2], o.locality[0])
+    with pytest.raises(ValueError, match="shrink"):
+        pad_phases(p3, 1)
+
+
+def test_from_simconfig_roundtrip_fields():
+    from repro.core.sim import SimConfig
+    cfg = SimConfig("mcs", 3, 2, 6, 0.85, (2, 3), seed=9, zipf_s=1.2)
+    w = from_simconfig(cfg)
+    assert (w.alg, w.n_nodes, w.threads_per_node, w.n_locks) == \
+        ("mcs", 3, 2, 6)
+    assert w.locality == 0.85 and w.b_init == (2, 3)
+    assert w.seed == 9 and w.zipf_s == 1.2 and w.phases == ()
+
+
+# -- zipf_cdf hardening (satellite) -----------------------------------------
+
+
+def test_zipf_cdf_rejects_bad_skew():
+    for bad in (float("nan"), float("inf"), -float("inf"), -0.5):
+        with pytest.raises(ValueError, match="finite"):
+            zipf_cdf(8, bad)
+    with pytest.raises(ValueError, match="at least one lock"):
+        zipf_cdf(0, 1.0)
+
+
+def test_zipf_cdf_s0_exactly_uniform_float32():
+    for kpn in (3, 5, 8, 100):
+        np.testing.assert_array_equal(
+            zipf_cdf(kpn, 0.0),
+            (np.arange(1, kpn + 1) / kpn).astype(np.float32))
+    for kpn in (7, 8, 100, 1000):
+        for s in (0.0, 1.5, 4.0):
+            cdf = zipf_cdf(kpn, s)
+            assert cdf.dtype == np.float32
+            assert cdf[-1] == np.float32(1.0)
