@@ -3,7 +3,8 @@
 Usage: PYTHONPATH=src python -m benchmarks.run [section ...] [--seeds N]
            [--backend auto|xla|pallas] [--devices N] [--chunk R] [--zipf S]
            [--scenario NAME ... | --scenario all] [--list-scenarios]
-           [--scenario-out FILE]
+           [--scenario-out FILE] [--check-slo] [--slo-p99-ns NS]
+           [--slo-min-eps RATE]
 Prints ``name,us_per_call,derived`` CSV rows.
 
 Sections reproduce the paper's figures; ``--scenario NAME`` runs a named
@@ -20,15 +21,26 @@ scenario (no process-wide execution state). --zipf skews the within-node
 lock choice for sections that support it (fig5). Kernel/roofline sections
 ignore the simulator flags. ``benchmarks.perfcheck`` records events/sec
 per backend.
+
+--check-slo evaluates each run scenario's registered SLO
+(``repro.experiments.Slo``: simulated p99 latency ceiling + wall-clock
+events/sec floor) against its result rows and exits non-zero on any
+violation — the CI scenarios leg runs under this gate. --slo-p99-ns /
+--slo-min-eps override that bound for every checked scenario (merged
+onto the registered Slo — the other bound stays enforced — and implying
+--check-slo); that is how the exit-code tests deliberately violate an
+SLO.
 """
 import argparse
 import inspect
 import json
+import sys
 import time
 
 from benchmarks import (common, fig1_loopback, fig4_budget, fig5_throughput,
                         fig6_latency, microbench, roofline)
-from repro.experiments import ExecOptions, run_scenario, scenario_names
+from repro.experiments import (ExecOptions, Slo, check_slo, get_scenario,
+                               run_scenario, scenario_names)
 
 SECTIONS = {
     "fig1": fig1_loopback.main,
@@ -87,6 +99,16 @@ def main() -> None:
     ap.add_argument("--scenario-out", default=None, metavar="FILE",
                     help="write scenario rows as JSON (scenario name "
                          "recorded per row)")
+    ap.add_argument("--check-slo", action="store_true",
+                    help="evaluate each scenario's registered SLO and "
+                         "exit non-zero on violation")
+    ap.add_argument("--slo-p99-ns", type=float, default=None, metavar="NS",
+                    help="override the p99 latency ceiling (ns) for every "
+                         "checked scenario")
+    ap.add_argument("--slo-min-eps", type=float, default=None,
+                    metavar="RATE",
+                    help="override the wall-clock events/sec floor for "
+                         "every checked scenario")
     args = ap.parse_args()
     if args.list_scenarios:
         for name in scenario_names():
@@ -114,6 +136,18 @@ def main() -> None:
                  f"{list(SECTIONS)}")
     if args.scenario_out and not scen:
         ap.error("--scenario-out requires --scenario")
+    slo_override = (args.slo_p99_ns is not None
+                    or args.slo_min_eps is not None)
+    if slo_override:
+        args.check_slo = True        # an override implies the gate
+        try:
+            # fail fast on bad bounds, before any scenario runs
+            Slo(p99_ns=args.slo_p99_ns,
+                min_events_per_sec=args.slo_min_eps)
+        except ValueError as e:
+            ap.error(str(e))
+    if args.check_slo and not scen:
+        ap.error("--check-slo / --slo-* require --scenario")
 
     print("name,us_per_call,derived")
     all_rows = []
@@ -123,6 +157,35 @@ def main() -> None:
         with open(args.scenario_out, "w") as f:
             json.dump(all_rows, f, indent=2, sort_keys=True, default=str)
         print(f"# wrote {args.scenario_out}", flush=True)
+
+    if args.check_slo:
+        failed = False
+        for name in scen:
+            slo = get_scenario(name).slo
+            if slo_override:
+                # merge onto the registered bounds: an overridden field
+                # wins, the other keeps its registered value (overriding
+                # one bound must not silently disable the other)
+                slo = Slo(
+                    p99_ns=(args.slo_p99_ns if args.slo_p99_ns is not None
+                            else slo.p99_ns if slo else None),
+                    min_events_per_sec=(
+                        args.slo_min_eps if args.slo_min_eps is not None
+                        else slo.min_events_per_sec if slo else None))
+            if slo is None:
+                print(f"# slo {name}: none registered, skipped",
+                      flush=True)
+                continue
+            rep = check_slo(slo,
+                            [r for r in all_rows if r["scenario"] == name])
+            verdict = "PASS" if rep.ok else "FAIL"
+            print(f"# slo {name}: {verdict} ({rep.checked} row(s) checked)",
+                  flush=True)
+            for v in rep.violations:
+                print(f"# slo {name}: VIOLATION {v}", flush=True)
+            failed = failed or not rep.ok
+        if failed:
+            sys.exit(1)
 
     which = args.sections or ([] if scen else list(SECTIONS))
     for name in which:

@@ -1,0 +1,144 @@
+#!/usr/bin/env python
+"""Docs-as-tests: doctest the public-API examples + check doc references.
+
+Two gates, both wired into the CI ``docs`` leg:
+
+  1. **Doctests** — every ``>>>`` example in the public-API module/function
+     docstrings (the module list below) runs for real, ``python -m
+     doctest`` style. An example that drifts from the code fails the
+     build, so the docstrings stay runnable documentation.
+  2. **Reference check** — every markdown link target and every
+     backtick-quoted file path in ``docs/*.md`` and ``README.md`` must
+     exist in the tree, and dotted ``repro.*`` / ``benchmarks.*`` module
+     references must resolve to source files. Renaming a module without
+     updating the docs fails the build.
+
+Usage: PYTHONPATH=src python scripts/check_docs.py [--skip-doctests]
+Exit code: 0 clean, 1 on any failure (failures are listed).
+"""
+from __future__ import annotations
+
+import argparse
+import doctest
+import importlib
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# The public API surface whose examples must stay runnable. Order is
+# cheap-to-expensive so failures surface fast.
+DOCTEST_MODULES = [
+    "repro.core.cost_model",
+    "repro.workloads.spec",
+    "repro.workloads.lower",
+    "repro.workloads",
+    "repro.experiments.slo",
+    "repro.core.batch",
+    "repro.experiments",
+    "repro.kernels.event_loop.ops",
+]
+
+# docs sources scanned by the reference checker
+DOC_FILES = ["README.md", *sorted(
+    str(p.relative_to(REPO)) for p in (REPO / "docs").glob("*.md"))]
+
+_MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_CODE_REF = re.compile(r"`([^`\n]+)`")
+_PATHY = re.compile(r"^[\w./-]+\.(py|md|yml|yaml|json|txt|toml|cfg)$")
+_DOTTED = re.compile(r"^(repro|benchmarks)(\.[A-Za-z_]\w*)+$")
+
+
+def run_doctests(names: list[str]) -> list[str]:
+    failures = []
+    for name in names:
+        try:
+            mod = importlib.import_module(name)
+        except Exception as e:       # an unimportable public module IS stale
+            failures.append(f"doctest {name}: import failed: {e!r}")
+            continue
+        res = doctest.testmod(mod, verbose=False,
+                              optionflags=doctest.ELLIPSIS)
+        print(f"doctest {name}: {res.attempted} example(s), "
+              f"{res.failed} failed", flush=True)
+        if res.failed:
+            failures.append(f"doctest {name}: {res.failed} of "
+                            f"{res.attempted} example(s) failed")
+    return failures
+
+
+def _module_resolves(dotted: str) -> bool:
+    """``repro.workloads.lower`` and ``repro.workloads.Workload`` both
+    count: trailing segments may be attributes, so any prefix of at least
+    two segments that maps to a source file under src/ (or benchmarks/)
+    passes; ``repro.nonexistent`` does not."""
+    parts = dotted.split(".")
+    roots = {"repro": REPO / "src" / "repro",
+             "benchmarks": REPO / "benchmarks"}
+    base = roots[parts[0]]
+    for depth in range(len(parts), 1, -1):
+        sub = base.joinpath(*parts[1:depth])
+        # a bare directory counts: repro.coord is a namespace package
+        if sub.with_suffix(".py").exists() or sub.is_dir():
+            return True
+    return False
+
+
+def check_doc_references(doc_files: list[str]) -> list[str]:
+    failures = []
+    for rel in doc_files:
+        path = REPO / rel
+        if not path.exists():
+            failures.append(f"{rel}: listed doc file does not exist")
+            continue
+        text = path.read_text()
+        refs: list[tuple[str, str]] = []
+        for m in _MD_LINK.finditer(text):
+            target = m.group(1).split("#")[0]
+            if not target or target.startswith(("http://", "https://",
+                                                "mailto:")):
+                continue
+            refs.append(("link", target))
+        for m in _CODE_REF.finditer(text):
+            tok = m.group(1).strip().split("#")[0].strip()
+            tok = tok.split(":")[0]          # `src/x.py:123` line anchors
+            if _PATHY.match(tok) and ("/" in tok or tok.endswith(".md")):
+                refs.append(("path", tok))
+            elif _DOTTED.match(tok):
+                if not _module_resolves(tok):
+                    failures.append(f"{rel}: stale module reference "
+                                    f"`{tok}`")
+        n_checked = 0
+        for kind, target in refs:
+            cand = (path.parent / target, REPO / target)
+            if not any(c.exists() for c in cand):
+                failures.append(f"{rel}: {kind} target {target!r} not "
+                                f"found (checked relative to the doc and "
+                                f"the repo root)")
+            n_checked += 1
+        print(f"refcheck {rel}: {n_checked} file ref(s) checked", flush=True)
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--skip-doctests", action="store_true",
+                    help="only run the markdown reference checker")
+    args = ap.parse_args()
+
+    failures = check_doc_references(DOC_FILES)
+    if not args.skip_doctests:
+        failures += run_doctests(DOCTEST_MODULES)
+
+    if failures:
+        print("\nDOCS CHECK FAILED:", flush=True)
+        for f in failures:
+            print(f"  - {f}", flush=True)
+        return 1
+    print("\ndocs check: all clean", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,10 +13,12 @@ batches instead:
     to its traced ``WorkloadOperands`` struct, and buckets by the static
     shape key ``(alg, T, N, K, n_events)`` — everything workload-shaped
     (per-thread locality, Zipf CDFs, phase programs, think times, active
-    masks, budgets, seeds, cost scalars) rides along as *batched traced
-    operands*. Replicas with fewer phases than their bucket's max are
-    padded with unreachable phases (``pad_phases`` — provably inert), so a
-    sweep mixing scenarios still compiles exactly once per bucket;
+    masks, per-phase ALock budgets, per-phase cost-model rows, seeds)
+    rides along as *batched traced operands*. Replicas with fewer phases
+    than their bucket's max are padded with unreachable phases
+    (``pad_phases`` — provably inert, including the cost/budget rows), so
+    a sweep mixing scenarios — even ones under different cost profiles or
+    budget programs — still compiles exactly once per bucket;
   * ``BatchResult`` keeps the per-seed samples bitwise-identical to
     individual ``simulate()`` calls (tested) and derives mean/ci95/p50/p99
     aggregates from them.
@@ -55,14 +57,12 @@ import numpy as np
 from jax.experimental import enable_x64
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.cost_model import CostModel
+from repro.core.cost_model import CostModel, N_COST_ROWS
 from repro.core.sim import (LAT_SAMPLES, SimConfig, SimResult, _run_events,
                             resolve_backend, topology)
 from repro.parallel.sharding import shard_map
 from repro.workloads import (Workload, WorkloadOperands, as_workload, lower,
                              pad_phases)
-
-_N_COSTS = 8
 
 # -- execution statistics ----------------------------------------------------
 # A "dispatch" is one host->device call of a compiled bucket runner (covering
@@ -98,17 +98,16 @@ def shape_key(cfg, n_events: int):
 
 @functools.partial(jax.jit,
                    static_argnames=("alg", "T", "N", "K", "n_events"))
-def _run_events_batch(alg, T, N, K, n_events, wl, thread_node, lock_node,
-                      costs):
-    """One shape bucket: every ``wl`` leaf and ``costs`` has leading axis
-    B = C * S. thread_node/lock_node are functions of the shape key alone
-    and stay unbatched (broadcast)."""
-    def point(w, cst):
+def _run_events_batch(alg, T, N, K, n_events, wl, thread_node, lock_node):
+    """One shape bucket: every ``wl`` leaf has leading axis B = C * S
+    (cost rows and budgets included — per-phase, per-replica operands).
+    thread_node/lock_node are functions of the shape key alone and stay
+    unbatched (broadcast)."""
+    def point(w):
         return _run_events(alg, T, N, K, n_events, w, thread_node,
-                           lock_node,
-                           tuple(cst[j] for j in range(_N_COSTS)))
+                           lock_node)
 
-    return jax.vmap(point)(wl, costs)
+    return jax.vmap(point)(wl)
 
 
 # -- sharded bucket runners --------------------------------------------------
@@ -130,12 +129,12 @@ def _bucket_runner(key, n_phases: int, backend: str, mesh: Mesh):
         return _RUNNER_CACHE[ck], ck
 
     def local_block(loc, zc, ed, th, ac, bi, sd, cst, tn, ln):
-        wl = WorkloadOperands(loc, zc, ed, th, ac, bi, sd)
+        wl = WorkloadOperands(loc, zc, ed, th, ac, bi, sd, cst)
         if backend == "pallas":
             from repro.kernels.event_loop.ops import run_events
-            return run_events(alg, T, N, K, n_events, wl, tn, ln, cst)
+            return run_events(alg, T, N, K, n_events, wl, tn, ln)
         from repro.kernels.event_loop.ref import run_events_ref
-        return run_events_ref(alg, T, N, K, n_events, wl, tn, ln, cst)
+        return run_events_ref(alg, T, N, K, n_events, wl, tn, ln)
 
     fn = jax.jit(shard_map(
         local_block, mesh,
@@ -234,15 +233,15 @@ class BatchResult(NamedTuple):
 
 
 def _exec_bucket(key, thread_node, lock_node, wl: WorkloadOperands,
-                 cost_rows, backend: str, devices, chunk):
+                 backend: str, devices, chunk):
     """Run one flattened bucket (B rows) and return the 6 output arrays.
 
-    ``wl`` leaves and ``cost_rows`` carry the flattened (workload x seed)
-    axis B. Unsharded (devices/chunk both None): one dispatch for the whole
-    bucket — the XLA leg is the original ``_run_events_batch`` oracle.
-    Sharded: the row axis is split over the device mesh in fixed chunks of
-    ``chunk`` rows per device, one dispatch per chunk, executables shared
-    across chunks.
+    ``wl`` leaves carry the flattened (workload x seed) axis B — the
+    per-phase cost rows and budgets included. Unsharded (devices/chunk
+    both None): one dispatch for the whole bucket — the XLA leg is the
+    original ``_run_events_batch`` oracle. Sharded: the row axis is split
+    over the device mesh in fixed chunks of ``chunk`` rows per device, one
+    dispatch per chunk, executables shared across chunks.
     """
     alg, T, N, K, n_events = key
     B = wl.seed.shape[0]
@@ -253,12 +252,10 @@ def _exec_bucket(key, thread_node, lock_node, wl: WorkloadOperands,
             if backend == "pallas":
                 from repro.kernels.event_loop.ops import run_events_jit
                 out = run_events_jit(alg, T, N, K, n_events, wj,
-                                     thread_node, lock_node,
-                                     jnp.asarray(cost_rows))
+                                     thread_node, lock_node)
             else:
                 out = _run_events_batch(alg, T, N, K, n_events, wj,
-                                        thread_node, lock_node,
-                                        jnp.asarray(cost_rows))
+                                        thread_node, lock_node)
         _note_call((key, n_phases, backend, "bucket", B))
         return tuple(np.asarray(o) for o in out)
 
@@ -272,7 +269,6 @@ def _exec_bucket(key, thread_node, lock_node, wl: WorkloadOperands,
     n_chunks = math.ceil(B / step)
     pad = n_chunks * step - B
     leaves = [_pad_rows(np.asarray(a), pad) for a in wl]
-    cost_rows = _pad_rows(cost_rows, pad)
     tn = np.asarray(thread_node)
     ln = np.asarray(lock_node)
     runner, ck = _bucket_runner(key, n_phases, backend, mesh)
@@ -280,8 +276,7 @@ def _exec_bucket(key, thread_node, lock_node, wl: WorkloadOperands,
     with enable_x64():
         for c in range(n_chunks):
             sl = slice(c * step, (c + 1) * step)
-            outs.append(runner(*(a[sl] for a in leaves), cost_rows[sl],
-                               tn, ln))
+            outs.append(runner(*(a[sl] for a in leaves), tn, ln))
             _note_call((ck, step))
     return tuple(np.concatenate([np.asarray(o[j]) for o in outs])[:B]
                  for j in range(6))
@@ -308,7 +303,18 @@ def sweep(configs: Sequence[SimConfig | Workload], n_seeds: int = 1,
 
     Returns BatchResults parallel to ``configs`` (duplicates are simulated
     twice — dedupe upstream if the grid overlaps; ``experiments.Experiment``
-    does).
+    does). ``cm`` is the base cost model every ``cost=None`` workload
+    inherits (per-workload/per-phase ``cost`` fields override it row-wise
+    without adding compiles).
+
+    >>> from repro.core.batch import sweep
+    >>> from repro.workloads import Workload
+    >>> rs = sweep([Workload("alock", 2, 2, 8, locality=0.9, seed=1)],
+    ...            n_seeds=2, n_events=1500, backend="xla")
+    >>> rs[0].ops.shape                  # per-seed samples
+    (2,)
+    >>> rs[0].mean_mops > 0 and rs[0].p99_lat_ns > 0
+    True
     """
     if n_seeds < 1:
         raise ValueError(f"n_seeds must be >= 1, got {n_seeds}")
@@ -323,7 +329,7 @@ def sweep(configs: Sequence[SimConfig | Workload], n_seeds: int = 1,
     for key, idxs in buckets.items():
         alg, T, N, K, _ = key
         kpn = K // N
-        thread_node, lock_node, costs = topology(alg, N, T // N, K, cm)
+        thread_node, lock_node, _ = topology(alg, N, T // N, K, cm)
         C, S = len(idxs), n_seeds
         # scenarios with fewer phases pad up to the bucket max with
         # unreachable phases, so mixed phase programs share one executable
@@ -333,26 +339,23 @@ def sweep(configs: Sequence[SimConfig | Workload], n_seeds: int = 1,
         ed = np.empty((C, S, Pmax), np.int32)
         th = np.empty((C, S, Pmax), np.int32)
         ac = np.empty((C, S, Pmax, T), np.int32)
-        bi = np.empty((C, S, 2), np.int32)
+        bi = np.empty((C, S, Pmax, 2), np.int32)
+        cr = np.empty((C, S, Pmax, N_COST_ROWS), np.int32)
         sd = np.empty((C, S), np.int32)
-        # constant within a bucket today, but kept a batched operand so a
-        # later PR can vary the cost model per config without recompiling
-        cost_rows = np.broadcast_to(
-            np.asarray(costs, np.int32), (C, S, _N_COSTS)).copy()
         for row, i in enumerate(idxs):
             o = pad_phases(lowered[i].operands, Pmax)
             loc[row], zc[row], ed[row] = o.locality, o.zcdf, o.edges
             th[row], ac[row], bi[row] = o.think_ns, o.active, o.b_init
+            cr[row] = o.cost_rows
             sd[row] = int(o.seed) + np.arange(S, dtype=np.int32)
 
         def flat(a):
             return a.reshape((C * S,) + a.shape[2:])
 
         wl = WorkloadOperands(flat(loc), flat(zc), flat(ed), flat(th),
-                              flat(ac), flat(bi), flat(sd))
+                              flat(ac), flat(bi), flat(sd), flat(cr))
         done, lat, _lat_n, t_end, nreacq, npass = _exec_bucket(
-            key, thread_node, lock_node, wl, flat(cost_rows), backend,
-            devices, chunk)
+            key, thread_node, lock_node, wl, backend, devices, chunk)
         done = done.reshape(C, S, T)
         lat = lat.reshape(C, S, LAT_SAMPLES)
         t_end = t_end.reshape(C, S)

@@ -36,18 +36,22 @@ The engines consume ``repro.workloads.WorkloadOperands``: the lowered form
 of a declarative ``repro.workloads.Workload`` spec. *Everything* workload-
 shaped is a traced operand — per-phase **per-thread** locality ``(P, T)``,
 per-phase Zipf CDFs ``(P, kpn)``, phase boundaries over the event axis
-(``edges``), per-phase think times, and a per-phase active-thread mask
-(node join/leave churn). At event ``i`` thread ``tid`` first resolves its
-phase (``sum(i >= edges) - 1``), then draws a node (own node with
-probability ``locality[phase, tid]``, else uniform remote) and a lock
-within that node by inverse-CDF from ``zcdf[phase]``. Threads whose node
-is down in the current phase are never scheduled (masked out of the
-ready-time argmin).
+(``edges``), per-phase think times, a per-phase active-thread mask
+(node join/leave churn), per-phase **cost rows** (the 8 integer-ns cost
+scalars, so a phase can swap the whole RDMA cost table — congested vs
+idle NIC) and per-phase **ALock budgets** ``b_init``. At event ``i``
+thread ``tid`` first resolves its phase (``sum(i >= edges) - 1``), then
+draws a node (own node with probability ``locality[phase, tid]``, else
+uniform remote) and a lock within that node by inverse-CDF from
+``zcdf[phase]``; the step's cost and any budget it arms come from
+``cost_rows[phase]`` / ``b_init[phase]``. Threads whose node is down in
+the current phase are never scheduled (masked out of the ready-time
+argmin).
 
 Because only ``(alg, T, N, K, n_events)`` — plus the phase count via
 operand *shapes* — is static, a ``batch.sweep`` mixing arbitrary
-scenarios (locality mixes, hot-key storms, churn programs) compiles once
-per shape bucket.
+scenarios (locality mixes, hot-key storms, churn programs, cost-profile
+bursts, budget ramps) compiles once per shape bucket.
 
 ``simulate`` accepts a ``Workload`` directly, or a legacy flat
 ``SimConfig`` through the bitwise-faithful ``from_simconfig`` adapter.
@@ -355,7 +359,7 @@ LAT_SAMPLES = 1 << 15
 
 
 def _run_events(alg, T, N, K, n_events, wl: WorkloadOperands, thread_node,
-                lock_node, costs):
+                lock_node):
     """Serial next-event loop for one (workload, seed) point — XLA backend.
 
     Plain (unjitted) so callers can compose it: ``simulate`` jits it directly
@@ -363,14 +367,14 @@ def _run_events(alg, T, N, K, n_events, wl: WorkloadOperands, thread_node,
     (config x seed) axis. Must run under ``enable_x64()`` so the clock
     arrays below really are int64. ``wl`` is the lowered
     ``WorkloadOperands`` struct (see ``repro.workloads.lower``) — every
-    leaf is a traced operand and may vary per replica in the batched path.
+    leaf is a traced operand and may vary per replica in the batched path,
+    including the per-phase cost rows ``wl.cost_rows (P, 8)`` and the
+    per-phase ALock budgets ``wl.b_init (P, 2)``.
 
     The Pallas backend (``repro.kernels.event_loop``) reproduces this loop
     bitwise; any semantic change here must be mirrored there (the
     equivalence tests will catch a divergence).
     """
-    (c_local, c_poll, c_cs, _c_think, c_svc_r, c_svc_l, c_wire_r,
-     c_wire_l) = costs
     sem = init_sem(T, K)
     ready = jnp.zeros(T, I64)
     busy = jnp.zeros(N, I64)
@@ -414,6 +418,13 @@ def _run_events(alg, T, N, K, n_events, wl: WorkloadOperands, thread_node,
         else:
             ph = 0
             tid = jnp.argmin(ready).astype(I32)
+        # phase-indexed cost rows + ALock budgets (constant rows for a
+        # single-phase spec — identical arithmetic to the flat engine)
+        cst = wl.cost_rows[ph]
+        c_local, c_poll, c_cs = cst[0], cst[1], cst[2]
+        c_svc_r, c_svc_l, c_wire_r, c_wire_l = (cst[4], cst[5], cst[6],
+                                                cst[7])
+        b_init = wl.b_init[ph]
         now = ready[tid]
         k1, k2, k3 = jax.random.split(jax.random.fold_in(key, i), 3)
         # workload draw (used only when this step is the NCS re-arm);
@@ -434,7 +445,7 @@ def _run_events(alg, T, N, K, n_events, wl: WorkloadOperands, thread_node,
         was_ncs_bound = (sem.pc[tid] == mc.REL_CAS) | (sem.pc[tid] == mc.PASS) \
             | (sem.pc[tid] == mc.SL_REL)
         pre_pc = sem.pc[tid]
-        sem2, code, tnode = sem_step(alg, sem, tid, wl.b_init, thread_node,
+        sem2, code, tnode = sem_step(alg, sem, tid, b_init, thread_node,
                                      lock_node, new_t, new_c)
         finished = was_ncs_bound & (sem2.pc[tid] == mc.NCS)
         reacq = (pre_pc == mc.SPIN_BUDGET) & (sem2.pc[tid] == mc.SET_VICTIM_R)
@@ -487,8 +498,12 @@ def topology(alg: str, n_nodes: int, threads_per_node: int, n_locks: int,
              cm: CostModel = CostModel()):
     """Static per-shape operands: (thread_node, lock_node, cost scalars).
 
-    Everything here is fully determined by (alg, N, tpn, K) + the cost
-    model, i.e. constant within a ``batch.sweep`` shape bucket.
+    thread_node/lock_node are fully determined by (alg, N, tpn, K) and
+    stay unbatched broadcast operands of every engine. The cost scalars
+    are ``cm.cost_rows(...)`` — the *default* rows; the engines actually
+    consume the per-phase ``WorkloadOperands.cost_rows`` the lowering
+    emits (which equals this tuple for every default-cost phase, keeping
+    the pre-profile arithmetic bitwise-frozen).
     """
     T, N, K = n_nodes * threads_per_node, n_nodes, n_locks
     if N < 1 or K < 1:
@@ -502,14 +517,7 @@ def topology(alg: str, n_nodes: int, threads_per_node: int, n_locks: int,
             f"a multiple of n_nodes={N} (got (n_locks, n_nodes)=({K}, {N}))")
     thread_node = jnp.asarray([t // threads_per_node for t in range(T)], I32)
     lock_node = jnp.asarray([k // (K // N) for k in range(K)], I32)
-    uses_loopback = alg != "alock"
-    costs = tuple(int(round(v)) for v in (
-        cm.local_ns, cm.spin_poll_ns, cm.cs_ns, cm.think_ns,
-        cm.svc_ns(N, threads_per_node, uses_loopback, False),
-        cm.svc_ns(N, threads_per_node, uses_loopback, True),
-        cm.remote_wire_ns, cm.loopback_wire_ns,
-    ))
-    return thread_node, lock_node, costs
+    return thread_node, lock_node, cm.cost_rows(alg, N, threads_per_node)
 
 
 def simulate(cfg: SimConfig | Workload, n_events: int = 400_000,
@@ -519,7 +527,7 @@ def simulate(cfg: SimConfig | Workload, n_events: int = 400_000,
     w = as_workload(cfg)
     lw = lower(w, n_events, cm)
     T, N, K = lw.n_threads, w.n_nodes, w.n_locks
-    thread_node, lock_node, costs = topology(
+    thread_node, lock_node, _ = topology(
         w.alg, N, w.threads_per_node, K, cm)
     backend = resolve_backend(backend)
     with enable_x64():
@@ -528,14 +536,12 @@ def simulate(cfg: SimConfig | Workload, n_events: int = 400_000,
             batched = WorkloadOperands(
                 *(jnp.asarray(a)[None] for a in lw.operands))
             out = run_events_jit(
-                w.alg, T, N, K, n_events, batched, thread_node, lock_node,
-                jnp.asarray(costs, I32)[None])
+                w.alg, T, N, K, n_events, batched, thread_node, lock_node)
             done, lat, lat_n, t_end, nreacq, npass = (o[0] for o in out)
         else:
             wl = WorkloadOperands(*(jnp.asarray(a) for a in lw.operands))
             done, lat, lat_n, t_end, nreacq, npass = _run_events_jit(
-                w.alg, T, N, K, n_events, wl, thread_node, lock_node,
-                tuple(jnp.int32(c) for c in costs))
+                w.alg, T, N, K, n_events, wl, thread_node, lock_node)
     ops = int(done.sum())
     sim_ns = max(int(t_end), 1)
     return SimResult(ops, sim_ns, ops / sim_ns * 1e3, lat, done,

@@ -1,0 +1,113 @@
+"""Latency/throughput SLOs for scenario programs.
+
+An :class:`Slo` is a small declarative contract a registered scenario can
+carry (``@scenario(..., slo=Slo(...))``): simulated p99 acquire->release
+latency must stay under ``p99_ns``, and the harness must sustain at least
+``min_events_per_sec`` simulated events per wall-clock second.
+:func:`check_slo` evaluates a contract against the scenario's result rows
+and returns an :class:`SloReport`; ``benchmarks.run --check-slo`` turns
+the report into a process exit code, which is what gates the CI scenarios
+leg.
+
+The two bounds deliberately live on different clocks:
+
+  * ``p99_ns`` reads the *simulated* latency pool (deterministic for a
+    fixed spec + seed set — a tightened bound fails reproducibly, which
+    the exit-code tests rely on);
+  * ``min_events_per_sec`` reads the harness's *wall-clock* event rate
+    (the perf trajectory perfcheck records) — registered scenarios keep
+    this floor loose enough for CI smoke runs and let perfcheck carry the
+    fine-grained trajectory.
+
+>>> from repro.experiments.slo import Slo, check_slo
+>>> slo = Slo(p99_ns=5e6, min_events_per_sec=1.0)
+>>> rows = [{"name": "a", "p99_lat_ns": 4e6},
+...         {"name": "w", "events_per_sec": 20.0}]
+>>> check_slo(slo, rows).ok
+True
+>>> rep = check_slo(Slo(p99_ns=1.0), rows)
+>>> rep.ok, len(rep.violations)
+(False, 1)
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Slo:
+    """A scenario-level service objective (either bound may be None).
+
+    p99_ns: ceiling on simulated p99 acquire->release latency, in ns,
+      checked against every result row carrying a ``p99_lat_ns`` key.
+    min_events_per_sec: floor on the harness's wall-clock simulated-event
+      rate, checked against every row carrying an ``events_per_sec`` key
+      (the per-scenario summary row ``benchmarks.run`` appends).
+    """
+    p99_ns: float | None = None
+    min_events_per_sec: float | None = None
+
+    def __post_init__(self):
+        for name in ("p99_ns", "min_events_per_sec"):
+            v = getattr(self, name)
+            if v is None:
+                continue
+            v = float(v)
+            if not math.isfinite(v) or v <= 0.0:
+                raise ValueError(
+                    f"Slo.{name} must be finite and > 0, got {v}")
+            object.__setattr__(self, name, v)
+        if self.p99_ns is None and self.min_events_per_sec is None:
+            raise ValueError("an Slo needs at least one bound")
+
+
+@dataclass(frozen=True)
+class SloReport:
+    """The outcome of one :func:`check_slo` evaluation."""
+    slo: Slo
+    checked: int                    # rows any bound applied to
+    violations: tuple = ()          # human-readable, one per failing row
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+
+def check_slo(slo: Slo, rows) -> SloReport:
+    """Evaluate ``slo`` against scenario result rows.
+
+    Rows are the dicts a registry scenario returns (plus the summary row
+    the benchmark runner appends). A row participates in a bound iff it
+    carries that bound's key — rows without latency/rate keys (ratio
+    rows, coord-plane rows) pass through unexamined. A bound that
+    matched *no* row at all is itself a violation: an SLO that silently
+    checks nothing would gate nothing.
+    """
+    violations = []
+    checked = 0
+    matched = {"p99_ns": False, "min_events_per_sec": False}
+    for r in rows:
+        name = r.get("name", "?")
+        if slo.p99_ns is not None and "p99_lat_ns" in r:
+            matched["p99_ns"] = True
+            checked += 1
+            p99 = float(r["p99_lat_ns"])
+            if not (p99 <= slo.p99_ns):        # NaN (no samples) fails too
+                violations.append(
+                    f"{name}: p99 latency {p99:.0f}ns exceeds SLO "
+                    f"{slo.p99_ns:.0f}ns")
+        if slo.min_events_per_sec is not None and "events_per_sec" in r:
+            matched["min_events_per_sec"] = True
+            checked += 1
+            eps = float(r["events_per_sec"])
+            if not (eps >= slo.min_events_per_sec):
+                violations.append(
+                    f"{name}: {eps:.1f} events/sec under SLO floor "
+                    f"{slo.min_events_per_sec:.1f}")
+    for bound, hit in matched.items():
+        if getattr(slo, bound) is not None and not hit:
+            violations.append(
+                f"slo bound {bound} matched no result row — nothing was "
+                f"checked")
+    return SloReport(slo=slo, checked=checked, violations=tuple(violations))

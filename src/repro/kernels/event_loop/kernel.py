@@ -33,9 +33,12 @@ Randomness + workload operands
   ``tid`` is the runtime argmin of the ready clocks. Phases are resolved
   per event from the ``edges`` operand (phase = sum(i >= edges) - 1);
   the per-phase ``active`` mask parks downed threads by excluding them
-  from the ready-time argmin, and ``think_ns[phase]`` replaces the static
-  think cost. Per-seed results are bitwise-equal to the XLA path, which
-  the tier-1 equivalence tests assert.
+  from the ready-time argmin, ``think_ns[phase]`` replaces the static
+  think cost, and the event's cost scalars / ALock budgets are one-hot
+  phase selections from the ``cost_rows (P, 8)`` / ``b_init (P, 2)``
+  operands (single-phase specs keep the flat row-0 fast path). Per-seed
+  results are bitwise-equal to the XLA path, which the tier-1
+  equivalence tests assert.
 
 Clocks are int64 (callers hold ``enable_x64()``, as for the XLA path); on
 CPU the kernel runs in interpret mode where i64 vector state is free. The
@@ -49,6 +52,7 @@ from jax import lax
 from jax.experimental import pallas as pl
 
 from repro.core import machine as mc
+from repro.core.cost_model import N_COST_ROWS
 from repro.core.sim import (LAT_SAMPLES, OP_CS, OP_LOCAL, OP_LOOP, OP_POLL,
                             OP_RDMA, OP_THINK)
 
@@ -92,11 +96,11 @@ def event_loop_kernel(u1_ref, r2_ref, r3_ref, edges_ref, think_ref,
     r3s = r3_ref[...].astype(I32)
     edges = edges_ref[...].astype(I32)              # (tile, P)
     think = think_ref[...].astype(I32)              # (tile, P)
-    # per-phase payloads arrive flattened (tile, P*T); P and T are static
+    # per-phase payloads arrive flattened (tile, P*…); P and T are static
     locp = locp_ref[...].reshape(tile, P, T)        # f32
     actp = actp_ref[...].astype(I32).reshape(tile, P, T)
-    binit = binit_ref[...].astype(I32)
-    cst = costs_ref[...].astype(I32)
+    binitp = binit_ref[...].astype(I32).reshape(tile, P, 2)
+    cstp = costs_ref[...].astype(I32).reshape(tile, P, N_COST_ROWS)
     tn = jnp.broadcast_to(tn_ref[...].astype(I32), (tile, T))
     ln = jnp.broadcast_to(ln_ref[...].astype(I32), (tile, K))
 
@@ -137,6 +141,12 @@ def event_loop_kernel(u1_ref, r2_ref, r3_ref, edges_ref, think_ref,
             loc_row = jnp.sum(jnp.where(ohP[:, :, None], locp, 0.0),
                               axis=1, dtype=jnp.float32)
             think_e = jnp.sum(jnp.where(ohP, think, 0), axis=1, dtype=I32)
+            # phase-indexed cost rows + ALock budgets (sum dtypes pinned,
+            # same x64 caveat as gat_t)
+            binit = jnp.sum(jnp.where(ohP[:, :, None], binitp, 0), axis=1,
+                            dtype=I32)               # (tile, 2)
+            cst = jnp.sum(jnp.where(ohP[:, :, None], cstp, 0), axis=1,
+                          dtype=I32)                 # (tile, 8)
 
             # phase boundary: rejoining threads resume from the cluster's
             # current clock (mirror of the XLA loop's rejoin bump)
@@ -159,6 +169,8 @@ def event_loop_kernel(u1_ref, r2_ref, r3_ref, edges_ref, think_ref,
             # (lowering guarantees P == 1 operands are all-active)
             loc_row = locp[:, 0, :]
             think_e = think[:, 0]
+            binit = binitp[:, 0]
+            cst = cstp[:, 0]
             tid = jnp.argmin(ready, axis=1).astype(I32)
         ohT = tids == tid[:, None]
         now = jnp.sum(jnp.where(ohT, ready, 0), axis=1)

@@ -16,9 +16,30 @@ index), never on simulation state, so hoisting them preserves bitwise
 equality. The *thread-dependent* half (comparing the uniform against
 ``locality[phase, tid]``) runs in-kernel, because ``tid`` is the argmin of
 the ready clocks and only exists at runtime; the kernel receives the
-per-phase per-thread locality / active-mask / think operands directly.
-The precompute itself is one vmapped pass fused into the surrounding jit,
-not a per-event dispatch.
+per-phase per-thread locality / active-mask / think operands — and the
+per-phase cost rows + ALock budgets — directly. The precompute itself is
+one vmapped pass fused into the surrounding jit, not a per-event dispatch.
+
+>>> import jax.numpy as jnp
+>>> from repro.workloads import Workload, lower
+>>> from repro.kernels.event_loop.ops import precompute_draws
+>>> o = lower(Workload("alock", 2, 2, 8, locality=0.9), n_events=64).operands
+>>> u1, r2, r3 = precompute_draws(jnp.asarray(o.seed)[None],
+...                               jnp.asarray(o.edges)[None],
+...                               jnp.asarray(o.zcdf)[None],
+...                               n_events=64, N=2, kpn=4)
+>>> u1.shape, str(r2.dtype), r3.shape
+((1, 64), 'int32', (1, 64))
+
+End-to-end, the kernel is selected with ``backend="pallas"`` (interpret
+mode off-TPU) and must agree with the XLA loop bit for bit:
+
+>>> from repro.core.sim import simulate
+>>> w = Workload("alock", 2, 2, 8, locality=0.9, seed=1)
+>>> rx = simulate(w, n_events=300, backend="xla")
+>>> rp = simulate(w, n_events=300, backend="pallas")
+>>> (rx.ops, rx.sim_ns) == (rp.ops, rp.sim_ns)
+True
 """
 from __future__ import annotations
 
@@ -29,6 +50,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.cost_model import N_COST_ROWS
 from repro.core.sim import I32, I64, LAT_SAMPLES
 from repro.kernels.event_loop.kernel import event_loop_kernel
 
@@ -68,15 +90,15 @@ def precompute_draws(seed, edges, zcdf, n_events: int, N: int, kpn: int):
     return jax.vmap(one)(seed, edges, zcdf)
 
 
-def run_events(alg, T, N, K, n_events, wl, thread_node, lock_node, costs, *,
+def run_events(alg, T, N, K, n_events, wl, thread_node, lock_node, *,
                tile: int = DEFAULT_TILE, ev_chunk: int = DEFAULT_EV_CHUNK,
                interpret=None):
     """Batched Pallas event loop; must run under ``enable_x64()``.
 
     ``wl`` is a ``WorkloadOperands`` with a leading replica axis B on
     every leaf: locality (B,P,T) f32, zcdf (B,P,K//N) f32, edges (B,P)
-    i32, think_ns (B,P) i32, active (B,P,T) i32, b_init (B,2) i32, seed
-    (B,) i32. ``costs`` is (B,8) i32; thread_node (T,)/lock_node (K,)
+    i32, think_ns (B,P) i32, active (B,P,T) i32, b_init (B,P,2) i32,
+    cost_rows (B,P,8) i32, seed (B,) i32; thread_node (T,)/lock_node (K,)
     broadcast. Returns (done (B,T) i32, lat (B,LAT_SAMPLES) i64, lat_n
     (B,) i32, t_end (B,) i64, nreacq (B,) i32, npass (B,) i32).
 
@@ -86,7 +108,6 @@ def run_events(alg, T, N, K, n_events, wl, thread_node, lock_node, costs, *,
     """
     if interpret is None:
         interpret = default_interpret()
-    costs = jnp.asarray(costs, I32)
     B = wl.seed.shape[0]
     P = wl.edges.shape[1]
     if n_events < 1:
@@ -111,13 +132,13 @@ def run_events(alg, T, N, K, n_events, wl, thread_node, lock_node, costs, *,
 
     u1, r2, r3 = (jnp.pad(prep(a), ((0, 0), (0, pad_e))) if pad_e
                   else prep(a) for a in (u1, r2, r3))
-    # per-phase payloads ride flattened to 2D blocks (P*T lanes); the
-    # kernel reshapes them back — P is static via the operand shape
+    # per-phase payloads ride flattened to 2D blocks (P*T / P*2 / P*8
+    # lanes); the kernel reshapes them back — P is static via the shape
     locp = prep(wl.locality.reshape(B, P * T))
     actp = prep(wl.active.reshape(B, P * T))
-    edges, think, b_init = (prep(a) for a in (wl.edges, wl.think_ns,
-                                              wl.b_init))
-    costs = prep(costs)
+    binit = prep(jnp.asarray(wl.b_init).reshape(B, P * 2))
+    costp = prep(jnp.asarray(wl.cost_rows, I32).reshape(B, P * N_COST_ROWS))
+    edges, think = (prep(a) for a in (wl.edges, wl.think_ns))
     Bp = B + pad_b
     n_chunks = (n_events + pad_e) // ev_chunk
     grid = (Bp // tile, n_chunks)
@@ -134,7 +155,7 @@ def run_events(alg, T, N, K, n_events, wl, thread_node, lock_node, costs, *,
             pl.BlockSpec((tile, ev_chunk), lambda i, j: (i, j)),
             pl.BlockSpec((tile, ev_chunk), lambda i, j: (i, j)),
             row(P), row(P), row(P * T), row(P * T),
-            row(2), row(8),
+            row(P * 2), row(P * N_COST_ROWS),
             pl.BlockSpec((1, T), lambda i, j: (0, 0)),
             pl.BlockSpec((1, K), lambda i, j: (0, 0)),
         ],
@@ -165,7 +186,7 @@ def run_events(alg, T, N, K, n_events, wl, thread_node, lock_node, costs, *,
     )(u1, r2, r3,
       jnp.asarray(edges, I32), jnp.asarray(think, I32),
       jnp.asarray(locp, jnp.float32), jnp.asarray(actp, I32),
-      jnp.asarray(b_init, I32), costs,
+      jnp.asarray(binit, I32), jnp.asarray(costp, I32),
       jnp.asarray(thread_node, I32)[None, :],
       jnp.asarray(lock_node, I32)[None, :])
     done, lat, lat_n, t_end, nreacq, npass = (o[:B] for o in out)

@@ -18,19 +18,17 @@ import jax
 from repro.core.sim import _run_events
 
 
-def run_events_ref(alg, T, N, K, n_events, wl, thread_node, lock_node,
-                   costs):
+def run_events_ref(alg, T, N, K, n_events, wl, thread_node, lock_node):
     """Batched XLA reference. ``wl`` is a ``WorkloadOperands`` whose leaves
     all carry a leading replica axis B (locality (B,P,T), zcdf (B,P,kpn),
-    edges/think_ns (B,P), active (B,P,T), b_init (B,2), seed (B,));
-    ``costs`` is (B, 8); thread_node (T,) and lock_node (K,) broadcast.
+    edges/think_ns (B,P), active (B,P,T), b_init (B,P,2), cost_rows
+    (B,P,8), seed (B,)); thread_node (T,) and lock_node (K,) broadcast.
     Returns (done (B,T), lat (B,LAT), lat_n (B,), t_end (B,), nreacq (B,),
     npass (B,)) — must run under ``enable_x64()``.
     """
     point = functools.partial(_run_events, alg, T, N, K, n_events)
 
-    def one(w, cst):
-        return point(w, thread_node, lock_node,
-                     tuple(cst[j] for j in range(cst.shape[0])))
+    def one(w):
+        return point(w, thread_node, lock_node)
 
-    return jax.vmap(one)(wl, costs)
+    return jax.vmap(one)(wl)

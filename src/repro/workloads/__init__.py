@@ -1,22 +1,41 @@
 """Public workload API: declarative specs + lowering to traced operands.
 
+A :class:`Workload` says *what the threads do*; phases make every knob —
+locality, Zipf skew, think class, the node set, the RDMA **cost profile**
+and the ALock **budget pair** — a piecewise program over the run:
+
 >>> from repro.workloads import Workload, Phase, mixed
 >>> w = Workload("alock", n_nodes=4, threads_per_node=8, n_locks=64,
 ...              locality=mixed(local=0.9, frac=0.5), zipf_s=1.2,
 ...              phases=(Phase(frac=0.5),
 ...                      Phase(frac=0.5, zipf_s=3.0)))   # hot-key storm
+>>> burst = Workload("alock", n_nodes=2, threads_per_node=2, n_locks=8,
+...                  phases=(Phase(frac=0.5),
+...                          Phase(frac=0.5, cost="congested-nic",
+...                                b_init=(2, 40))))
+>>> lw = lower(burst, n_events=1000)      # -> traced operand struct
+>>> lw.operands.cost_rows.shape, lw.operands.b_init.shape
+((2, 8), (2, 2))
+>>> lw.shape_key                          # the compile bucket
+('alock', 4, 2, 8, 1000)
 
-Run it with ``repro.experiments.Experiment`` (batched, labeled, with
-error bars) or directly with ``repro.core.sim.simulate(w)``.
+Run a spec with ``repro.experiments.Experiment`` (batched, labeled, with
+error bars) or directly with ``repro.core.sim.simulate(w)``. Everything
+workload-shaped lowers to *traced operands* (``WorkloadOperands``), so
+sweeps mixing arbitrary specs of one shape bucket share one compiled
+executable.
 """
-from repro.workloads.lower import (Lowered, WorkloadOperands, as_workload,
-                                   from_simconfig, lower, pad_phases,
-                                   resolve_locality, zipf_cdf)
+from repro.core.cost_model import (COST_PROFILES, CostModel, CostProfile,
+                                   resolve_cost)
+from repro.workloads.lower import (Lowered, N_COST_ROWS, WorkloadOperands,
+                                   as_workload, from_simconfig, lower,
+                                   pad_phases, resolve_locality, zipf_cdf)
 from repro.workloads.spec import (ALGS, Mixed, Phase, THINK_CLASSES,
                                   Workload, mixed)
 
 __all__ = [
-    "ALGS", "Lowered", "Mixed", "Phase", "THINK_CLASSES", "Workload",
+    "ALGS", "COST_PROFILES", "CostModel", "CostProfile", "Lowered",
+    "Mixed", "N_COST_ROWS", "Phase", "THINK_CLASSES", "Workload",
     "WorkloadOperands", "as_workload", "from_simconfig", "lower", "mixed",
-    "pad_phases", "resolve_locality", "zipf_cdf",
+    "pad_phases", "resolve_cost", "resolve_locality", "zipf_cdf",
 ]

@@ -3,27 +3,50 @@
 ``lower()`` turns a spec into a :class:`WorkloadOperands` — plain arrays,
 *all of them traced operands* of the event-loop engines:
 
-  ======== ========== ====================================================
-  field    shape      meaning
-  ======== ========== ====================================================
-  locality (P, T) f32 per-phase per-thread P(target lock is local)
-  zcdf     (P, kpn)   per-phase inclusive Zipf CDF of the within-node draw
-  edges    (P,) i32   first event index of each phase (edges[0] == 0)
-  think_ns (P,) i32   per-phase think time between critical sections
-  active   (P, T) i32 1 = schedulable; 0 = thread's node is down
-  b_init   (2,) i32   (local, remote) ALock budgets
-  seed     () i32     replica PRNG seed
-  ======== ========== ====================================================
+  ========= ========== ===================================================
+  field     shape      meaning
+  ========= ========== ===================================================
+  locality  (P, T) f32 per-phase per-thread P(target lock is local)
+  zcdf      (P, kpn)   per-phase inclusive Zipf CDF of the within-node draw
+  edges     (P,) i32   first event index of each phase (edges[0] == 0)
+  think_ns  (P,) i32   per-phase think time between critical sections
+  active    (P, T) i32 1 = schedulable; 0 = thread's node is down
+  b_init    (P, 2) i32 per-phase (local, remote) ALock budgets
+  cost_rows (P, 8) i32 per-phase cost-model rows (CostModel.cost_rows)
+  seed      () i32     replica PRNG seed
+  ========= ========== ===================================================
 
 Only ``(alg, T, N, K, n_events)`` — plus the phase-count P via the operand
 *shapes* — is static, so a sweep mixing scenarios (different localities,
-skews, phase programs) shares one compiled executable per shape bucket;
-``pad_phases`` extends any replica to a bucket's max P with unreachable
-phases (``edges = INT32_MAX``), which provably never alters the per-event
-phase selection.
+skews, phase programs, cost profiles, budget programs) shares one compiled
+executable per shape bucket; ``pad_phases`` extends any replica to a
+bucket's max P with unreachable phases (``edges = INT32_MAX``), which
+provably never alters the per-event phase selection.
+
+Cost and budget *programs*: every phase row carries its own 8-entry cost
+table (resolved through :func:`~repro.core.cost_model.resolve_cost` from
+the workload's / phase's ``cost`` field, defaulting to the sweep's
+``CostModel``) and its own ``(local, remote)`` ALock budget pair (the
+phase's ``b_init`` override, else the workload's). The engines index both
+by the phase active at the event — a single-phase spec with default cost
+lowers to exactly the rows ``sim.topology`` computed before profiles
+existed, keeping that path bitwise-frozen.
 
 ``from_simconfig`` adapts the legacy flat ``SimConfig`` to a single-phase
 ``Workload`` bitwise-faithfully (same draws, costs, clocks).
+
+>>> from repro.workloads import Workload, Phase, lower
+>>> w = Workload("alock", n_nodes=2, threads_per_node=2, n_locks=8,
+...              phases=(Phase(frac=0.5),
+...                      Phase(frac=0.5, cost="congested-nic",
+...                            b_init=(2, 40))))
+>>> lw = lower(w, n_events=1000)
+>>> lw.operands.cost_rows.shape, lw.operands.b_init.shape
+((2, 8), (2, 2))
+>>> lw.operands.b_init.tolist()          # phase 0 inherits the workload
+[[5, 20], [2, 40]]
+>>> bool((lw.operands.cost_rows[1] >= lw.operands.cost_rows[0]).all())
+True
 """
 from __future__ import annotations
 
@@ -32,7 +55,7 @@ from typing import Any, NamedTuple
 
 import numpy as np
 
-from repro.core.cost_model import CostModel
+from repro.core.cost_model import CostModel, N_COST_ROWS, resolve_cost
 from repro.workloads.spec import Mixed, Phase, Workload, _check_think
 
 _I32_MAX = np.iinfo(np.int32).max
@@ -47,8 +70,9 @@ class WorkloadOperands(NamedTuple):
     edges: Any      # (P,) i32
     think_ns: Any   # (P,) i32
     active: Any     # (P, T) i32
-    b_init: Any     # (2,) i32
+    b_init: Any     # (P, 2) i32
     seed: Any       # () i32
+    cost_rows: Any  # (P, 8) i32
 
     @property
     def n_phases(self) -> int:
@@ -78,10 +102,23 @@ class Lowered(NamedTuple):
 def zipf_cdf(kpn: int, s: float) -> np.ndarray:
     """Inclusive CDF of a Zipf(s) draw over the ``kpn`` locks of one node.
 
-    ``cdf[j] = P(lock_rank <= j)`` with ``P(rank j) ∝ (j+1)^-s``; ``s=0``
-    is exactly the uniform workload (``cdf[j] == (j+1)/kpn`` in float32)
-    and ``cdf[-1] == 1.0``. float32 so it can ride the traced batch axis
-    next to ``locality`` without recompiles.
+    ``cdf[j] = P(lock_rank <= j)`` with ``P(rank j) ∝ (j+1)^-s``. Behavior
+    notes the engines rely on:
+
+      * ``s = 0`` is *exactly* the uniform workload in float32 —
+        ``cdf[j] == float32((j+1)/kpn)`` bit for bit, so a zero-skew spec
+        and the pre-Zipf engine draw identical locks;
+      * the weights are normalized in float64 and only the cumulative sum
+        is cast to float32, so ``cdf[-1] == 1.0`` exactly and the
+        inverse-CDF draw can never walk past the last rank (the engines
+        additionally clamp against the final-ulp case);
+      * float32 so it can ride the traced batch axis next to ``locality``
+        without recompiles.
+
+    >>> zipf_cdf(4, 0.0).tolist()
+    [0.25, 0.5, 0.75, 1.0]
+    >>> float(zipf_cdf(8, 1.5)[-1])
+    1.0
     """
     if kpn < 1:
         raise ValueError(f"need at least one lock per node, got kpn={kpn}")
@@ -108,7 +145,12 @@ def resolve_locality(loc, n_nodes: int, tpn: int) -> np.ndarray:
 
 def lower(w: Workload, n_events: int,
           cm: CostModel = CostModel()) -> Lowered:
-    """Bind a spec to a run length and emit its traced operand struct."""
+    """Bind a spec to a run length and emit its traced operand struct.
+
+    ``cm`` is the *sweep-level* cost model: the base every ``cost=None``
+    workload/phase inherits. A workload-level ``cost`` replaces it for the
+    whole run; a phase-level ``cost`` replaces it for that phase only.
+    """
     N, tpn, K = w.n_nodes, w.threads_per_node, w.n_locks
     T = N * tpn
     if K % N != 0:
@@ -118,12 +160,15 @@ def lower(w: Workload, n_events: int,
     kpn = K // N
     phases = w.phases or (Phase(frac=1.0),)
     P = len(phases)
+    base_cm = resolve_cost(w.cost, cm)
 
     locality = np.empty((P, T), np.float32)
     zcdf = np.empty((P, kpn), np.float32)
     edges = np.empty(P, np.int32)
     think_ns = np.empty(P, np.int32)
     active = np.ones((P, T), np.int32)
+    b_init = np.empty((P, 2), np.int32)
+    cost_rows = np.empty((P, N_COST_ROWS), np.int32)
     cum = 0.0
     for p, ph in enumerate(phases):
         edges[p] = int(round(cum * n_events))
@@ -132,10 +177,13 @@ def lower(w: Workload, n_events: int,
         locality[p] = resolve_locality(loc, N, tpn)
         zs = w.zipf_s if ph.zipf_s is None else ph.zipf_s
         zcdf[p] = zipf_cdf(kpn, zs)
+        cm_p = resolve_cost(ph.cost, base_cm)
+        cost_rows[p] = cm_p.cost_rows(w.alg, N, tpn)
+        b_init[p] = w.b_init if ph.b_init is None else ph.b_init
         mult = _check_think(w.think if ph.think is None else ph.think)
         # mult == 1.0 reproduces topology()'s c_think integer exactly —
         # the SimConfig adapter's bitwise contract rests on this
-        think_ns[p] = int(round(mult * cm.think_ns))
+        think_ns[p] = int(round(mult * cm_p.think_ns))
         for node in ph.down_nodes:
             active[p, node * tpn:(node + 1) * tpn] = 0
     edges[0] = 0
@@ -151,6 +199,8 @@ def lower(w: Workload, n_events: int,
         zcdf = np.repeat(zcdf, 2, axis=0)
         think_ns = np.repeat(think_ns, 2, axis=0)
         active = np.repeat(active, 2, axis=0)
+        b_init = np.repeat(b_init, 2, axis=0)
+        cost_rows = np.repeat(cost_rows, 2, axis=0)
         edges = np.asarray([0, n_events // 2], np.int32)
     if P > 1 and np.any(np.diff(edges) <= 0):
         # a zero-event phase would silently vanish AND misdirect the
@@ -163,8 +213,8 @@ def lower(w: Workload, n_events: int,
 
     ops = WorkloadOperands(
         locality=locality, zcdf=zcdf, edges=edges, think_ns=think_ns,
-        active=active, b_init=np.asarray(w.b_init, np.int32),
-        seed=np.int32(w.seed))
+        active=active, b_init=b_init, seed=np.int32(w.seed),
+        cost_rows=cost_rows)
     return Lowered(w.alg, N, tpn, K, int(n_events), ops)
 
 
@@ -173,7 +223,10 @@ def pad_phases(ops: WorkloadOperands, n_phases: int) -> WorkloadOperands:
 
     Padded phases start at ``INT32_MAX`` (past any event index), so the
     per-event selection ``phase = sum(i >= edges) - 1`` is bitwise
-    unchanged; their payload rows just duplicate the last real phase.
+    unchanged; their payload rows — locality, CDFs, think, active mask,
+    budgets, cost rows — just duplicate the last real phase. Inertness of
+    the cost/budget rows is load-bearing for one-compile-per-bucket
+    sweeps and is asserted engine-level in the tests.
     """
     P = ops.n_phases
     if P == n_phases:
@@ -189,7 +242,8 @@ def pad_phases(ops: WorkloadOperands, n_phases: int) -> WorkloadOperands:
         locality=rep(ops.locality), zcdf=rep(ops.zcdf),
         edges=np.concatenate([ops.edges,
                               np.full(extra, _I32_MAX, np.int32)]),
-        think_ns=rep(ops.think_ns), active=rep(ops.active))
+        think_ns=rep(ops.think_ns), active=rep(ops.active),
+        b_init=rep(ops.b_init), cost_rows=rep(ops.cost_rows))
 
 
 def from_simconfig(cfg) -> Workload:

@@ -10,11 +10,20 @@ per-run) behavior — independently of how it is executed:
   * **think** — think-time class between critical sections, either a named
     class from :data:`THINK_CLASSES` or a float multiplier of the cost
     model's ``think_ns``;
+  * **cost** — the RDMA cost model the run executes under: ``None`` for
+    the sweep default, a named :data:`~repro.core.cost_model.COST_PROFILES`
+    entry (``"congested-nic"``, ``"idle-nic"``), an explicit
+    :class:`~repro.core.cost_model.CostModel`, or a field-override mapping
+    (``{"rnic_svc_ns": 900.0}``). Lowered to per-phase traced cost rows —
+    swapping profiles never adds a compile;
+  * **b_init** — the ALock ``(local, remote)`` lease budgets;
   * **phases** — piecewise regimes over the event axis (:class:`Phase`):
     each phase covers a fraction of the run and may override locality /
-    skew / think and take whole nodes down (``down_nodes`` — node
-    join/leave churn). Threads of a downed node are simply never
-    scheduled while the phase lasts.
+    skew / think / **cost** / **b_init** and take whole nodes down
+    (``down_nodes`` — node join/leave churn). Threads of a downed node
+    are simply never scheduled while the phase lasts. Per-phase ``cost``
+    and ``b_init`` make the cost table and the budget *programs* over the
+    run — e.g. a mid-run NIC-congestion burst, or a budget ramp.
 
 Specs are frozen and hashable, so they key result dicts the way the old
 ``SimConfig`` NamedTuple did. Execution knobs (events, seeds, backend,
@@ -22,12 +31,26 @@ devices) intentionally live elsewhere: ``repro.experiments`` composes
 ``Workload x seeds x ExecOptions`` into batched sweeps, and
 ``repro.workloads.lower`` turns a spec into the traced operand struct the
 engines consume.
+
+>>> w = Workload("alock", n_nodes=2, threads_per_node=2, n_locks=8,
+...              b_init=(5, 20),
+...              phases=(Phase(frac=0.5),
+...                      Phase(frac=0.5, cost="congested-nic",
+...                            b_init=(1, 1))))
+>>> w.n_threads, w.n_phases
+(4, 2)
+>>> w == w.replace() and w != w.replace(seed=1)
+True
+>>> Workload("alock", 2, 2, 8, cost={"rnic_svc_ns": 900.0}).cost
+(('rnic_svc_ns', 900.0),)
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 from dataclasses import dataclass
+
+from repro.core.cost_model import freeze_cost
 
 ALGS = ("alock", "spinlock", "mcs")
 
@@ -87,13 +110,22 @@ class Phase:
     fractions must sum to 1). ``None`` overrides inherit the workload's
     base value. ``down_nodes`` lists node ids whose threads are parked
     (never scheduled) for the duration — node leave/join churn; at least
-    one node must stay up.
+    one node must stay up. ``cost`` swaps the RDMA cost table for the
+    phase (profile name / CostModel / field overrides — see
+    :func:`~repro.core.cost_model.resolve_cost`); ``b_init`` re-programs
+    the ALock ``(local, remote)`` budgets: acquisitions arming while the
+    phase is live use the phase's budgets (the handoff is per-arm, not
+    retroactive — a budget granted in phase *p* is spent down even after
+    the boundary, until its holder re-arms).
     """
     frac: float
     locality: object = None          # scalar | (T,) tuple | Mixed | None
     zipf_s: float | None = None
     think: object = None             # THINK_CLASSES name | float | None
     down_nodes: tuple = ()
+    cost: object = None              # COST_PROFILES name | CostModel |
+    #                                  override mapping | None (inherit)
+    b_init: tuple | None = None      # (local, remote) | None (inherit)
 
     def __post_init__(self):
         f = float(self.frac)
@@ -105,6 +137,9 @@ class Phase:
                                _freeze_locality(self.locality))
         object.__setattr__(self, "down_nodes",
                            tuple(int(n) for n in self.down_nodes))
+        object.__setattr__(self, "cost", freeze_cost(self.cost))
+        if self.b_init is not None:
+            object.__setattr__(self, "b_init", _check_b_init(self.b_init))
 
 
 @dataclass(frozen=True)
@@ -127,6 +162,8 @@ class Workload:
     b_init: tuple = (5, 20)          # (local, remote) budgets
     seed: int = 0
     phases: tuple = ()               # tuple[Phase, ...]
+    cost: object = None              # COST_PROFILES name | CostModel |
+    #                                  override mapping | None (sweep default)
 
     def __post_init__(self):
         if self.alg not in ALGS:
@@ -143,10 +180,8 @@ class Workload:
                 f"zipf_s must be finite and >= 0, got {self.zipf_s}")
         object.__setattr__(self, "zipf_s", zs)
         _check_think(self.think)
-        bi = tuple(int(b) for b in self.b_init)
-        if len(bi) != 2:
-            raise ValueError(f"b_init must be (local, remote), got {bi}")
-        object.__setattr__(self, "b_init", bi)
+        object.__setattr__(self, "b_init", _check_b_init(self.b_init))
+        object.__setattr__(self, "cost", freeze_cost(self.cost))
         object.__setattr__(self, "seed", int(self.seed))
         phases = tuple(self.phases)
         if phases:
@@ -188,6 +223,16 @@ class Workload:
     def replace(self, **kw) -> "Workload":
         """A copy with fields replaced (phases/locality re-validated)."""
         return dataclasses.replace(self, **kw)
+
+
+def _check_b_init(b) -> tuple:
+    """Validate a (local, remote) ALock budget pair."""
+    bi = tuple(int(v) for v in b)
+    if len(bi) != 2:
+        raise ValueError(f"b_init must be (local, remote), got {bi}")
+    if any(v < 0 for v in bi):
+        raise ValueError(f"b_init budgets must be >= 0, got {bi}")
+    return bi
 
 
 def _check_think(think) -> float:

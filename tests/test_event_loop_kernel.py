@@ -57,17 +57,21 @@ def test_kernel_ragged_tile_and_chunk_bitwise():
                    for row in rng.uniform(0.0, 2.0, (B, P))])
     active = np.ones((B, P, T), np.int32)
     active[:, 1, :tpn] = 0          # node 0 down in the second phase
+    # per-phase budgets and cost rows: the second phase re-programs the
+    # budget and doubles the RNIC service cost per replica
+    cst = np.tile(np.int32(costs), (B, P, 1))
+    cst[:, 1, 4:6] *= 2
     wl = WorkloadOperands(
         locality=jnp.asarray(loc), zcdf=jnp.asarray(np.float32(zc)),
         edges=jnp.asarray(np.tile(np.int32([0, 600]), (B, 1))),
         think_ns=jnp.asarray(np.tile(np.int32([500, 250]), (B, 1))),
         active=jnp.asarray(active),
-        b_init=jnp.asarray(np.tile(np.int32([2, 3]), (B, 1))),
-        seed=jnp.arange(B, dtype=jnp.int32) + 11)
-    cst = jnp.asarray(np.tile(np.int32(costs), (B, 1)))
+        b_init=jnp.asarray(np.tile(np.int32([[2, 3], [1, 5]]), (B, 1, 1))),
+        seed=jnp.arange(B, dtype=jnp.int32) + 11,
+        cost_rows=jnp.asarray(cst))
     with enable_x64():
-        ref = run_events_ref(alg, T, N, K, ev, wl, tn, ln, cst)
-        out = run_events(alg, T, N, K, ev, wl, tn, ln, cst,
+        ref = run_events_ref(alg, T, N, K, ev, wl, tn, ln)
+        out = run_events(alg, T, N, K, ev, wl, tn, ln,
                          tile=2, ev_chunk=256, interpret=True)
     for a, b in zip(ref, out):
         assert a.dtype == b.dtype

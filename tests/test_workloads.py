@@ -97,8 +97,11 @@ def test_pad_phases_shapes_and_shrink_error():
     o = lower(Workload("alock", 2, 2, 8), n_events=100).operands
     p3 = pad_phases(o, 3)
     assert p3.locality.shape == (3, 4) and p3.edges.shape == (3,)
+    assert p3.b_init.shape == (3, 2) and p3.cost_rows.shape == (3, 8)
     assert (p3.edges[1:] == np.iinfo(np.int32).max).all()
     np.testing.assert_array_equal(p3.locality[2], o.locality[0])
+    np.testing.assert_array_equal(p3.b_init[2], o.b_init[0])
+    np.testing.assert_array_equal(p3.cost_rows[2], o.cost_rows[0])
     with pytest.raises(ValueError, match="shrink"):
         pad_phases(p3, 1)
 
