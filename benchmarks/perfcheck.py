@@ -14,7 +14,12 @@ Measured quantities:
     must show one dispatch per chunk per mesh (vs one per bucket) while
     reusing a single compile per shape key, which is the CPU-visible half
     of the scaling story (on TPU the pallas backend's events/sec carries
-    it).
+    it);
+  * the event-loop kernel's VMEM plan (``repro.kernels.event_loop.vmem``,
+    via ``exec_stats()["vmem_plan"]``) for the pallas backend — replica
+    tile chosen vs requested, total VMEM bytes, clock representation — so
+    every PR records whether the kernel still fits the budget and whether
+    the planner had to shrink the tile.
 
 Smoke mode: REPRO_BENCH_EVENTS=2000 (same knob as the other benchmarks).
 """
@@ -86,6 +91,7 @@ def main() -> None:
         report["backends"][backend] = {
             "wall_s": round(wall, 4), "events_per_sec": round(eps, 1),
             "dispatches": st["dispatches"], "compiles": st["compiles"],
+            "vmem_plan": st.get("vmem_plan"),
         }
         print(f"perfcheck.{backend},{wall*1e6/len(cfgs):.1f},"
               f"{eps/1e6:.3f}Mevents/s", flush=True)

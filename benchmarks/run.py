@@ -39,6 +39,7 @@ import time
 
 from benchmarks import (common, fig1_loopback, fig4_budget, fig5_throughput,
                         fig6_latency, microbench, roofline)
+from repro.core import batch
 from repro.experiments import (ExecOptions, Slo, check_slo, get_scenario,
                                run_scenario, scenario_names)
 
@@ -53,6 +54,7 @@ SECTIONS = {
 
 
 def _emit_scenario(name: str, n_seeds: int, options: ExecOptions) -> list:
+    batch.reset_exec_stats()
     t0 = time.time()
     rows = run_scenario(name, n_seeds=n_seeds, n_events=common.EVENTS,
                         options=options)
@@ -72,6 +74,15 @@ def _emit_scenario(name: str, n_seeds: int, options: ExecOptions) -> list:
         total_events = common.EVENTS * n_seeds * n_sim
         summary["total_events"] = total_events
         summary["events_per_sec"] = round(total_events / max(wall, 1e-9), 1)
+    # pallas runs leave the event-loop kernel's VMEM plan behind (tile
+    # chosen vs requested, bytes, clock representation) — record it so the
+    # JSON artifact shows whether the planner had to shrink the tile
+    vp = batch.exec_stats().get("vmem_plan")
+    if vp is not None:
+        summary["vmem_plan"] = vp
+        print(f"# scenario {name} vmem plan: tile {vp['requested_tile']}"
+              f"->{vp['tile']}, {vp['total_bytes']:,}B "
+              f"({vp['representation']})", flush=True)
     return rows + [summary]
 
 

@@ -35,6 +35,8 @@ DOCTEST_MODULES = [
     "repro.workloads.lower",
     "repro.workloads",
     "repro.experiments.slo",
+    "repro.kernels.event_loop.i32pair",
+    "repro.kernels.event_loop.vmem",
     "repro.core.batch",
     "repro.experiments",
     "repro.kernels.event_loop.ops",

@@ -67,19 +67,28 @@ from repro.workloads import (Workload, WorkloadOperands, as_workload, lower,
 # -- execution statistics ----------------------------------------------------
 # A "dispatch" is one host->device call of a compiled bucket runner (covering
 # every device in its mesh); a "compile" is one new (runner, input shape)
-# pair. perfcheck.py records these next to events/sec.
+# pair. perfcheck.py records these next to events/sec. "vmem_plan" is the
+# most recent event-loop kernel VMEM plan (repro.kernels.event_loop.vmem) —
+# tile auto-shrinks and byte totals ride into the benchmark reports with it.
 _STATS = {"dispatches": 0, "compiles": 0}
 _COMPILED: set = set()
 
 
 def exec_stats() -> dict:
-    """Snapshot of {dispatches, compiles} since the last reset."""
-    return dict(_STATS)
+    """Snapshot of {dispatches, compiles, vmem_plan} since the last reset
+    (``vmem_plan`` is None unless the Pallas backend planned a kernel)."""
+    from repro.kernels.event_loop import vmem
+    st = dict(_STATS)
+    plan = vmem.last_plan()
+    st["vmem_plan"] = plan.as_dict() if plan is not None else None
+    return st
 
 
 def reset_exec_stats() -> None:
+    from repro.kernels.event_loop import vmem
     _STATS["dispatches"] = 0
     _STATS["compiles"] = 0
+    vmem.clear_plan()
 
 
 def _note_call(key) -> None:
@@ -124,7 +133,16 @@ def _bucket_runner(key, n_phases: int, backend: str, mesh: Mesh):
     once per chunk shape and is reused across chunks and buckets.
     """
     alg, T, N, K, n_events = key
-    ck = (key, n_phases, backend, tuple(d.id for d in mesh.devices.flat))
+    rep = None
+    if backend == "pallas":
+        # the clock representation is env-overridable (REPRO_EVENT_CLOCKS)
+        # and must key the cached runner, or a mid-process flip would
+        # silently reuse a trace of the other representation
+        from repro.kernels.event_loop.ops import (default_interpret,
+                                                  resolve_representation)
+        rep = resolve_representation("auto", default_interpret())
+    ck = (key, n_phases, backend, rep,
+          tuple(d.id for d in mesh.devices.flat))
     if ck in _RUNNER_CACHE:
         return _RUNNER_CACHE[ck], ck
 
@@ -250,7 +268,12 @@ def _exec_bucket(key, thread_node, lock_node, wl: WorkloadOperands,
         with enable_x64():
             wj = WorkloadOperands(*(jnp.asarray(a) for a in wl))
             if backend == "pallas":
-                from repro.kernels.event_loop.ops import run_events_jit
+                from repro.kernels.event_loop.ops import (plan_for_run,
+                                                          run_events_jit)
+                # re-record the VMEM plan per dispatch: planning inside
+                # run_events is trace-time only, so a cached executable
+                # would otherwise leave exec_stats()["vmem_plan"] stale
+                plan_for_run(B, n_phases, n_events, T, N, K)
                 out = run_events_jit(alg, T, N, K, n_events, wj,
                                      thread_node, lock_node)
             else:
@@ -272,6 +295,11 @@ def _exec_bucket(key, thread_node, lock_node, wl: WorkloadOperands,
     tn = np.asarray(thread_node)
     ln = np.asarray(lock_node)
     runner, ck = _bucket_runner(key, n_phases, backend, mesh)
+    if backend == "pallas":
+        # each shard's kernel sees `rows` replicas (same trace-time-only
+        # caveat as the unsharded branch above)
+        from repro.kernels.event_loop.ops import plan_for_run
+        plan_for_run(rows, n_phases, n_events, T, N, K)
     outs = []
     with enable_x64():
         for c in range(n_chunks):

@@ -359,7 +359,7 @@ LAT_SAMPLES = 1 << 15
 
 
 def _run_events(alg, T, N, K, n_events, wl: WorkloadOperands, thread_node,
-                lock_node):
+                lock_node, lat_samples: int = LAT_SAMPLES):
     """Serial next-event loop for one (workload, seed) point — XLA backend.
 
     Plain (unjitted) so callers can compose it: ``simulate`` jits it directly
@@ -369,7 +369,9 @@ def _run_events(alg, T, N, K, n_events, wl: WorkloadOperands, thread_node,
     ``WorkloadOperands`` struct (see ``repro.workloads.lower``) — every
     leaf is a traced operand and may vary per replica in the batched path,
     including the per-phase cost rows ``wl.cost_rows (P, 8)`` and the
-    per-phase ALock budgets ``wl.b_init (P, 2)``.
+    per-phase ALock budgets ``wl.b_init (P, 2)``. ``lat_samples`` sizes
+    the latency ring (static; default ``LAT_SAMPLES`` — the ring-overflow
+    tests shrink it to exercise wraparound cheaply).
 
     The Pallas backend (``repro.kernels.event_loop``) reproduces this loop
     bitwise; any semantic change here must be mirrored there (the
@@ -380,7 +382,7 @@ def _run_events(alg, T, N, K, n_events, wl: WorkloadOperands, thread_node,
     busy = jnp.zeros(N, I64)
     op_start = jnp.zeros(T, I64)
     done = jnp.zeros(T, I32)
-    lat = jnp.full(LAT_SAMPLES, -1, I64)
+    lat = jnp.full(lat_samples, -1, I64)
     lat_n = jnp.int32(0)
     key = jax.random.key(wl.seed)
     kpn = K // N
@@ -456,7 +458,7 @@ def _run_events(alg, T, N, K, n_events, wl: WorkloadOperands, thread_node,
         lat_val = now - op_start[tid]
         lat = lax.cond(
             finished,
-            lambda l: l.at[lat_n % LAT_SAMPLES].set(lat_val),
+            lambda l: l.at[lat_n % lat_samples].set(lat_val),
             lambda l: l, lat)
         lat_n = lat_n + finished.astype(I32)
         done = done.at[tid].add(finished.astype(I32))
@@ -491,7 +493,8 @@ def _run_events(alg, T, N, K, n_events, wl: WorkloadOperands, thread_node,
 
 
 _run_events_jit = functools.partial(
-    jax.jit, static_argnames=("alg", "T", "N", "K", "n_events"))(_run_events)
+    jax.jit, static_argnames=("alg", "T", "N", "K", "n_events",
+                              "lat_samples"))(_run_events)
 
 
 def topology(alg: str, n_nodes: int, threads_per_node: int, n_locks: int,

@@ -31,11 +31,12 @@ from repro.experiments.experiment import Experiment, ExperimentResult
 from repro.experiments.options import ExecOptions
 from repro.experiments.registry import (Scenario, fig5_workloads,
                                         get_scenario, run_scenario,
-                                        scenario, scenario_names)
+                                        scenario, scenario_names,
+                                        scenario_workloads)
 from repro.experiments.slo import Slo, SloReport, check_slo
 
 __all__ = [
     "ExecOptions", "Experiment", "ExperimentResult", "Scenario", "Slo",
     "SloReport", "check_slo", "fig5_workloads", "get_scenario",
-    "run_scenario", "scenario", "scenario_names",
+    "run_scenario", "scenario", "scenario_names", "scenario_workloads",
 ]

@@ -37,17 +37,33 @@ class Scenario:
     summary: str
     fn: Callable
     slo: Slo | None = None
+    #: for simulator scenarios: a zero-arg callable returning the exact
+    #: ``Workload`` specs the scenario sweeps — the differential test
+    #: harness (``tests/test_event_loop_native_repr.py``) replays every
+    #: one through the native-representation kernel and diffs it bitwise
+    #: against the XLA engine. None for non-simulator scenarios
+    #: (coord-stress drives the threaded coordination plane instead).
+    workloads: Callable | None = None
 
 
-def scenario(name: str, summary: str, slo: Slo | None = None):
+def scenario(name: str, summary: str, slo: Slo | None = None,
+             workloads: Callable | None = None):
     """Register ``fn(n_seeds, n_events, options) -> list[dict]``, with an
-    optional :class:`Slo` the ``--check-slo`` gate enforces."""
+    optional :class:`Slo` the ``--check-slo`` gate enforces and an
+    optional ``workloads()`` builder exposing the swept specs."""
     def deco(fn):
         if name in _SCENARIOS:
             raise ValueError(f"scenario {name!r} already registered")
-        _SCENARIOS[name] = Scenario(name, summary, fn, slo)
+        _SCENARIOS[name] = Scenario(name, summary, fn, slo, workloads)
         return fn
     return deco
+
+
+def scenario_workloads(name: str):
+    """The ``Workload`` specs a simulator scenario sweeps (None when the
+    scenario does not drive the event simulator)."""
+    sc = get_scenario(name)
+    return None if sc.workloads is None else list(sc.workloads())
 
 
 def scenario_names() -> list[str]:
@@ -89,26 +105,75 @@ def _rows(result) -> list[dict]:
     return out
 
 
+# spec-building constants shared by each scenario fn and its registered
+# ``workloads`` builder, so the differential harness replays the *exact*
+# specs the scenario sweeps (no drift between the two)
+_UNIFORM_AXES = dict(alg=("alock", "spinlock", "mcs"),
+                     locality=(0.85, 0.95, 1.0))
+_STORM = (Phase(frac=0.4), Phase(frac=0.2, zipf_s=3.0), Phase(frac=0.4))
+_MIX_FRACS = (0.25, 0.5, 0.75)
+_CHURN = (Phase(frac=0.3), Phase(frac=0.4, down_nodes=(3,)),
+          Phase(frac=0.3))
+_NIC_BURST = (Phase(frac=0.3), Phase(frac=0.4, cost="congested-nic"),
+              Phase(frac=0.3))
+_RAMP = (Phase(frac=0.34, b_init=(1, 1)), Phase(frac=0.33),
+         Phase(frac=0.33, b_init=(20, 80)))
+_RAMP_BASE = _BASE.replace(locality=0.9)
+
+
+def _uniform_grid_workloads():
+    import itertools
+    return [_BASE.replace(alg=a, locality=l)
+            for a, l in itertools.product(*_UNIFORM_AXES.values())]
+
+
+def _hot_key_storm_workloads():
+    return [w for alg in ("alock", "mcs")
+            for w in (_BASE.replace(alg=alg),
+                      _BASE.replace(alg=alg, phases=_STORM))]
+
+
+def _mixed_locality_workloads():
+    return [_BASE] + [_BASE.replace(locality=mixed(local=0.95, frac=f,
+                                                   rest=0.5))
+                      for f in _MIX_FRACS]
+
+
+def _node_churn_workloads():
+    return [_BASE, _BASE.replace(phases=_CHURN)]
+
+
+def _congested_nic_workloads():
+    return [w for alg in ("alock", "mcs")
+            for w in (_BASE.replace(alg=alg),
+                      _BASE.replace(alg=alg, phases=_NIC_BURST),
+                      _BASE.replace(alg=alg, cost="congested-nic"))]
+
+
+def _budget_ramp_workloads():
+    return [_RAMP_BASE, _RAMP_BASE.replace(b_init=(1, 1)),
+            _RAMP_BASE.replace(phases=_RAMP)]
+
+
 @scenario("uniform-grid",
-          "alg x locality grid on the shared 4-node topology")
+          "alg x locality grid on the shared 4-node topology",
+          workloads=_uniform_grid_workloads)
 def _uniform_grid(n_seeds, n_events, options):
     exp = Experiment("uniform-grid", n_seeds=n_seeds, n_events=n_events,
                      options=options)
-    exp.add_grid(_BASE, alg=("alock", "spinlock", "mcs"),
-                 locality=(0.85, 0.95, 1.0))
+    exp.add_grid(_BASE, **_UNIFORM_AXES)
     return _rows(exp.run())
 
 
 @scenario("hot-key-storm",
-          "mid-run Zipf(3) burst vs steady uniform traffic (phased)")
+          "mid-run Zipf(3) burst vs steady uniform traffic (phased)",
+          workloads=_hot_key_storm_workloads)
 def _hot_key_storm(n_seeds, n_events, options):
-    storm = (Phase(frac=0.4), Phase(frac=0.2, zipf_s=3.0),
-             Phase(frac=0.4))
     exp = Experiment("hot-key-storm", n_seeds=n_seeds, n_events=n_events,
                      options=options)
     for alg in ("alock", "mcs"):
         exp.add(_BASE.replace(alg=alg), label=f"{alg}.steady")
-        exp.add(_BASE.replace(alg=alg, phases=storm), label=f"{alg}.storm")
+        exp.add(_BASE.replace(alg=alg, phases=_STORM), label=f"{alg}.storm")
     res = exp.run()
     rows = _rows(res)
     for alg in ("alock", "mcs"):
@@ -121,27 +186,26 @@ def _hot_key_storm(n_seeds, n_events, options):
 
 
 @scenario("mixed-locality",
-          "per-thread locality splits (mixed(local, frac, rest)) vs flat")
+          "per-thread locality splits (mixed(local, frac, rest)) vs flat",
+          workloads=_mixed_locality_workloads)
 def _mixed_locality(n_seeds, n_events, options):
     exp = Experiment("mixed-locality", n_seeds=n_seeds, n_events=n_events,
                      options=options)
-    exp.add(_BASE, label="flat95")
-    for frac in (0.25, 0.5, 0.75):
-        exp.add(_BASE.replace(locality=mixed(local=0.95, frac=frac,
-                                             rest=0.5)),
-                label=f"mix{int(frac * 100)}")
+    flat, *mixes = _mixed_locality_workloads()
+    exp.add(flat, label="flat95")
+    for frac, w in zip(_MIX_FRACS, mixes):
+        exp.add(w, label=f"mix{int(frac * 100)}")
     return _rows(exp.run())
 
 
 @scenario("node-churn",
-          "a node leaves mid-run and rejoins (phased active mask)")
+          "a node leaves mid-run and rejoins (phased active mask)",
+          workloads=_node_churn_workloads)
 def _node_churn(n_seeds, n_events, options):
-    churn = (Phase(frac=0.3), Phase(frac=0.4, down_nodes=(3,)),
-             Phase(frac=0.3))
     exp = Experiment("node-churn", n_seeds=n_seeds, n_events=n_events,
                      options=options)
     exp.add(_BASE, label="steady")
-    exp.add(_BASE.replace(phases=churn), label="churn")
+    exp.add(_BASE.replace(phases=_CHURN), label="churn")
     res = exp.run()
     rows = _rows(res)
     pto = res["churn"].per_thread_ops.sum(axis=0)   # (T,) over seeds
@@ -155,7 +219,8 @@ def _node_churn(n_seeds, n_events, options):
 
 @scenario("congested-nic",
           "mid-run NIC-congestion burst (phased cost profile); SLO-gated",
-          slo=Slo(p99_ns=2_000_000, min_events_per_sec=10.0))
+          slo=Slo(p99_ns=2_000_000, min_events_per_sec=10.0),
+          workloads=_congested_nic_workloads)
 def _congested_nic(n_seeds, n_events, options):
     """The phase-dependent cost model in anger: the middle 40% of the run
     executes under the ``congested-nic`` profile (card past its
@@ -164,13 +229,11 @@ def _congested_nic(n_seeds, n_events, options):
     burst off while loopback designs (mcs) pay full freight — the same
     asymmetry behind the paper's 29x headline, but driven as a transient.
     """
-    burst = (Phase(frac=0.3), Phase(frac=0.4, cost="congested-nic"),
-             Phase(frac=0.3))
     exp = Experiment("congested-nic", n_seeds=n_seeds, n_events=n_events,
                      options=options)
     for alg in ("alock", "mcs"):
         exp.add(_BASE.replace(alg=alg), label=f"{alg}.steady")
-        exp.add(_BASE.replace(alg=alg, phases=burst),
+        exp.add(_BASE.replace(alg=alg, phases=_NIC_BURST),
                 label=f"{alg}.congested")
         exp.add(_BASE.replace(alg=alg, cost="congested-nic"),
                 label=f"{alg}.always-congested")
@@ -187,7 +250,8 @@ def _congested_nic(n_seeds, n_events, options):
 
 @scenario("budget-ramp",
           "ALock lease-budget program: tight -> paper -> generous phases",
-          slo=Slo(p99_ns=2_000_000, min_events_per_sec=10.0))
+          slo=Slo(p99_ns=2_000_000, min_events_per_sec=10.0),
+          workloads=_budget_ramp_workloads)
 def _budget_ramp(n_seeds, n_events, options):
     """The per-phase ``b_init`` program: a run that starts with
     pathologically tight budgets (every handoff re-arms at 1 — constant
@@ -196,14 +260,11 @@ def _budget_ramp(n_seeds, n_events, options):
     along the ramp while the constant-tight control keeps paying; the
     reacquire counters expose the mechanism.
     """
-    ramp = (Phase(frac=0.34, b_init=(1, 1)), Phase(frac=0.33),
-            Phase(frac=0.33, b_init=(20, 80)))
     exp = Experiment("budget-ramp", n_seeds=n_seeds, n_events=n_events,
                      options=options)
-    base = _BASE.replace(locality=0.9)
-    exp.add(base, label="paper-budget")
-    exp.add(base.replace(b_init=(1, 1)), label="tight-budget")
-    exp.add(base.replace(phases=ramp), label="ramp")
+    exp.add(_RAMP_BASE, label="paper-budget")
+    exp.add(_RAMP_BASE.replace(b_init=(1, 1)), label="tight-budget")
+    exp.add(_RAMP_BASE.replace(phases=_RAMP), label="ramp")
     res = exp.run()
     rows = _rows(res)
     for lbl in ("paper-budget", "tight-budget", "ramp"):
@@ -222,7 +283,8 @@ def fig5_workloads() -> list[Workload]:
 
 
 @scenario("paper-fig5",
-          "the paper's Fig.5 throughput grid (perfcheck's measuring stick)")
+          "the paper's Fig.5 throughput grid (perfcheck's measuring stick)",
+          workloads=fig5_workloads)
 def _paper_fig5(n_seeds, n_events, options):
     exp = Experiment("paper-fig5", n_seeds=n_seeds, n_events=n_events,
                      options=options)

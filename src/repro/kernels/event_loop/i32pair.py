@@ -1,0 +1,223 @@
+"""Carry-correct hi/lo int32 arithmetic for the kernel's 64-bit clocks.
+
+Mosaic — the Pallas TPU compiler — has no 64-bit vector registers, so the
+event-loop kernel's int64 clock state (``ready``/``busy``/``op_start``,
+latency stamps, the parked-thread ``never`` sentinel) fails native
+lowering. This module is the replacement representation: every 64-bit
+quantity is a **pair** ``(hi, lo)`` of equal-shaped int32 arrays encoding
+
+    value = hi * 2**32 + u32(lo)
+
+where ``lo`` is the *unsigned* low word reinterpreted as int32. Ordering
+is lexicographic on ``(hi signed, lo unsigned)``, which coincides with
+int64 ordering for every value (the sign lives in ``hi``), so compares,
+min/max and argmin reproduce the int64 engine **bit for bit** — the
+differential suite (``tests/test_event_loop_native_repr.py``) asserts it
+end-to-end and ``tests/test_i32pair.py`` property-tests every helper
+across carry boundaries.
+
+All helpers are pure ``jnp`` over int32: they trace identically with and
+without x64 enabled and inside Pallas kernels (interpret or native).
+``pack``/``unpack`` convert to/from real int64 arrays (x64 required);
+``pack_np``/``unpack_np`` are the numpy equivalents for tests and hosts
+where x64 stays off.
+
+>>> import numpy as np
+>>> hi, lo = unpack_np(np.int64([2**32 + 5, -1, 2**31]))
+>>> (hi.tolist(), lo.tolist())
+([1, -1, 0], [5, -1, -2147483648])
+>>> pack_np(hi, lo).tolist()
+[4294967301, -1, 2147483648]
+>>> carry = padd_i32(unpack_np(np.int64([2**32 - 1])), np.int32(1))
+>>> pack_np(*carry).tolist()               # lo wraps, carry into hi
+[4294967296]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+I32 = jnp.int32
+_INT32_MIN = np.int32(-2**31)
+_INT32_MAX = np.int32(2**31 - 1)
+_U32_MASK = 0xFFFFFFFF
+
+#: int64 max as a pair — the "parked thread" sentinel that loses every
+#: argmin. hi carries INT32_MAX, lo carries the all-ones low word (-1).
+NEVER = (_INT32_MAX, np.int32(-1))
+
+
+def _u(lo):
+    """Bias the low word so *signed* comparison orders it *unsigned*."""
+    return lo ^ _INT32_MIN
+
+
+# -- construction -----------------------------------------------------------
+
+
+def pfull(shape, value: int):
+    """Pair filled with a python-int constant (any int64 value).
+
+    >>> import numpy as np
+    >>> h, l = pfull((2,), -1)
+    >>> (np.asarray(h).tolist(), np.asarray(l).tolist())
+    ([-1, -1], [-1, -1])
+    """
+    hi = value >> 32
+    lo = value & _U32_MASK
+    if lo >= 1 << 31:
+        lo -= 1 << 32
+    return (jnp.full(shape, np.int32(hi), I32),
+            jnp.full(shape, np.int32(lo), I32))
+
+
+def pzeros(shape):
+    return pfull(shape, 0)
+
+
+def from_i32(x):
+    """Sign-extend an int32 array into a pair (exact for any int32)."""
+    x = jnp.asarray(x, I32)
+    return (jnp.where(x < 0, np.int32(-1), np.int32(0)).astype(I32), x)
+
+
+# -- arithmetic -------------------------------------------------------------
+
+
+def padd(a, b):
+    """Pair + pair with carry (wraps mod 2**64, like int64)."""
+    lo = a[1] + b[1]
+    carry = (_u(lo) < _u(a[1])).astype(I32)
+    return (a[0] + b[0] + carry, lo)
+
+
+def padd_i32(a, d):
+    """Pair + int32 delta (either sign), carry-correct."""
+    return padd(a, from_i32(d))
+
+
+def psub(a, b):
+    """Pair - pair with borrow (wraps mod 2**64, like int64)."""
+    lo = a[1] - b[1]
+    borrow = (_u(a[1]) < _u(b[1])).astype(I32)
+    return (a[0] - b[0] - borrow, lo)
+
+
+# -- comparison / selection -------------------------------------------------
+
+
+def plt(a, b):
+    return (a[0] < b[0]) | ((a[0] == b[0]) & (_u(a[1]) < _u(b[1])))
+
+
+def ple(a, b):
+    return (a[0] < b[0]) | ((a[0] == b[0]) & (_u(a[1]) <= _u(b[1])))
+
+
+def peq(a, b):
+    return (a[0] == b[0]) & (a[1] == b[1])
+
+
+def pwhere(c, a, b):
+    """Elementwise select between pairs (``c`` broadcasts per component)."""
+    return (jnp.where(c, a[0], b[0]), jnp.where(c, a[1], b[1]))
+
+
+def pmin2(a, b):
+    return pwhere(plt(a, b), a, b)
+
+
+def pmax2(a, b):
+    return pwhere(plt(a, b), b, a)
+
+
+# -- gathers / reductions (axis-1 over 2D, the kernel's layout) -------------
+
+
+def pgather(oh, p, axis=1):
+    """One-hot gather: ``oh`` has exactly one True per reduced row. Sum
+    dtypes are pinned to int32 so enabling x64 cannot widen them."""
+    return (jnp.sum(jnp.where(oh, p[0], 0), axis=axis, dtype=I32),
+            jnp.sum(jnp.where(oh, p[1], 0), axis=axis, dtype=I32))
+
+
+def reduce_min_masked(p, mask, axis=1):
+    """min over ``axis`` with masked-out entries read as ``NEVER`` —
+    the pair form of ``jnp.min(jnp.where(mask, v, never), axis)``."""
+    fh = jnp.where(mask, p[0], NEVER[0])
+    fl = jnp.where(mask, p[1], NEVER[1])
+    mh = jnp.min(fh, axis=axis)
+    cand = fh == jnp.expand_dims(mh, axis)
+    ml = jnp.min(jnp.where(cand, _u(fl), _INT32_MAX), axis=axis)
+    return (mh, ml ^ _INT32_MIN)
+
+
+def reduce_max(p, axis=1):
+    mh = jnp.max(p[0], axis=axis)
+    cand = p[0] == jnp.expand_dims(mh, axis)
+    ml = jnp.max(jnp.where(cand, _u(p[1]), _INT32_MIN), axis=axis)
+    return (mh, ml ^ _INT32_MIN)
+
+
+def argmin_masked(p, mask=None, axis=1):
+    """First index of the pair-lexicographic minimum — bitwise the int64
+    ``argmin(where(mask, v, never))`` (ties resolve to the lowest index,
+    all-masked rows resolve to index 0, exactly like the int64 path)."""
+    if mask is None:
+        fh, fl = p
+    else:
+        fh = jnp.where(mask, p[0], NEVER[0])
+        fl = jnp.where(mask, p[1], NEVER[1])
+    mh = jnp.min(fh, axis=axis, keepdims=True)
+    cand = fh == mh
+    ml = jnp.min(jnp.where(cand, _u(fl), _INT32_MAX), axis=axis,
+                 keepdims=True)
+    win = cand & (_u(fl) == ml)
+    return jnp.argmax(win, axis=axis).astype(I32)
+
+
+def mod_pow2(p, m: int):
+    """``value % m`` as int32, for a power-of-two ``m`` and value >= 0.
+    Exact because 2**32 ≡ 0 (mod m): only the low word contributes.
+
+    >>> import numpy as np
+    >>> int(np.asarray(mod_pow2(unpack_np(np.int64([2**33 + 70])), 64))[0])
+    6
+    """
+    if m < 1 or (m & (m - 1)) != 0:
+        raise ValueError(f"m must be a positive power of two, got {m}")
+    return p[1] & np.int32(m - 1)
+
+
+# -- int64 conversion -------------------------------------------------------
+
+
+def pack(p):
+    """Pair -> int64 jnp array. Requires x64 to be enabled."""
+    hi = p[0].astype(jnp.int64)
+    lo = p[1].astype(jnp.int64) & np.int64(_U32_MASK)
+    return (hi << 32) | lo
+
+
+def unpack(x):
+    """int64 jnp array -> pair (requires x64 for the input to be i64)."""
+    x = jnp.asarray(x)
+    hi = (x >> 32).astype(I32)
+    lo = jax.lax.bitcast_convert_type(
+        (x & np.int64(_U32_MASK)).astype(jnp.uint32), I32)
+    return (hi, lo)
+
+
+def pack_np(hi, lo) -> np.ndarray:
+    """Numpy pair -> int64 (host-side; works with x64 off)."""
+    return ((np.asarray(hi, np.int64) << 32)
+            | (np.asarray(lo, np.int64) & _U32_MASK))
+
+
+def unpack_np(x):
+    """Numpy int64 -> pair of int32 arrays (host-side)."""
+    x = np.asarray(x, np.int64)
+    hi = (x >> 32).astype(np.int32)
+    lo = (x & _U32_MASK).astype(np.uint32).view(np.int32)
+    return (hi, lo)

@@ -22,6 +22,29 @@ Branch dispatch
   one selected by its thread's PC. Scatters at per-row indices (lock k,
   thread tid/pred/succ, node) are one-hot masked writes.
 
+Clock representation
+  Every 64-bit quantity — the ``ready``/``busy``/``op_start`` clocks, the
+  latency ring and the parked-thread ``never`` sentinel — goes through one
+  of two interchangeable representations selected by the static ``repr32``
+  flag (``ops.py`` resolves it):
+
+  * ``_I64Clocks`` — plain int64 arrays. The fast path for interpret mode
+    and XLA-adjacent hosts; callers hold ``enable_x64()``.
+  * ``_PairClocks`` — hi/lo int32 pairs with carry-correct add/sub and
+    lexicographic compare/argmin (``i32pair.py``). Mosaic has no 64-bit
+    vector registers, so this is the *native-TPU* representation; it also
+    runs with x64 entirely off. Bitwise-equal to the i64 path (the
+    ``tests/test_event_loop_native_repr.py`` differential suite).
+
+  Under the pair representation the latency ring is written as a masked
+  one-hot accumulate over the ``lat_samples`` axis (2D
+  ``broadcasted_iota`` == slot, then select) — bitwise-identical to the
+  per-row scatter but expressible in Mosaic, which rejects per-row
+  dynamic scatters against VMEM state. The i64 fast path keeps the
+  O(1)-per-event scatter (the one-hot form costs O(lat_samples) lane-ops
+  per event, which would tax the interpret-mode CI/perfcheck runs for no
+  benefit). The ring-overflow tests hold the two forms identical.
+
 Randomness + workload operands
   The XLA loop draws from ``jax.random.fold_in(key, i)`` per event. The
   raw draws depend only on (seed, i) — never on simulation state — so
@@ -38,11 +61,7 @@ Randomness + workload operands
   phase selections from the ``cost_rows (P, 8)`` / ``b_init (P, 2)``
   operands (single-phase specs keep the flat row-0 fast path). Per-seed
   results are bitwise-equal to the XLA path, which the tier-1
-  equivalence tests assert.
-
-Clocks are int64 (callers hold ``enable_x64()``, as for the XLA path); on
-CPU the kernel runs in interpret mode where i64 vector state is free. The
-semantic state stays int32.
+  equivalence tests assert. The semantic state stays int32 everywhere.
 """
 from __future__ import annotations
 
@@ -55,25 +74,151 @@ from repro.core import machine as mc
 from repro.core.cost_model import N_COST_ROWS
 from repro.core.sim import (LAT_SAMPLES, OP_CS, OP_LOCAL, OP_LOOP, OP_POLL,
                             OP_RDMA, OP_THINK)
+from repro.kernels.event_loop import i32pair as p32
 
 I32 = jnp.int32
 I64 = jnp.int64
 
 
-def event_loop_kernel(u1_ref, r2_ref, r3_ref, edges_ref, think_ref,
-                      locp_ref, actp_ref, binit_ref, costs_ref,
-                      tn_ref, ln_ref,
-                      done_ref, lat_ref, latn_ref, tend_ref, reacq_ref,
-                      npass_ref,
-                      s_t0, s_t1, s_vic, s_pc, s_bud, s_nxt, s_prev, s_tgt,
-                      s_coh, s_ready, s_busy, s_opst,
-                      *, alg: str, T: int, N: int, K: int, P: int,
-                      n_events: int, ev_chunk: int):
+def _iota(shape, dim):
+    """2D index grid — Mosaic rejects 1D iota, so every index vector in
+    the kernel is built broadcasted."""
+    return lax.broadcasted_iota(I32, shape, dim)
+
+
+class _I64Clocks:
+    """Clock values are plain int64 arrays (interpret / XLA fast path)."""
+    nrefs = 1
+
+    @staticmethod
+    def read(refs):
+        return refs[0][...]
+
+    @staticmethod
+    def write(refs, v):
+        refs[0][...] = v
+
+    @staticmethod
+    def zeros(shape):
+        return jnp.zeros(shape, I64)
+
+    @staticmethod
+    def full_m1(shape):
+        return jnp.full(shape, -1, I64)
+
+    @staticmethod
+    def where(c, a, b):
+        return jnp.where(c, a, b)
+
+    @staticmethod
+    def col(v):
+        return v[:, None]
+
+    @staticmethod
+    def gather(oh, v):
+        """One-hot gather along axis 1; the sum dtype is pinned (under x64
+        ``jnp.sum`` would otherwise widen and poison carry dtypes)."""
+        return jnp.sum(jnp.where(oh, v, 0), axis=1, dtype=v.dtype)
+
+    @staticmethod
+    def add_i32(v, d):
+        return v + d
+
+    @staticmethod
+    def sub(a, b):
+        return a - b
+
+    @staticmethod
+    def max2(a, b):
+        return jnp.maximum(a, b)
+
+    @staticmethod
+    def reduce_min_masked(v, mask):
+        return jnp.min(jnp.where(mask, v, jnp.iinfo(jnp.int64).max), axis=1)
+
+    @staticmethod
+    def reduce_max(v):
+        return jnp.max(v, axis=1)
+
+    @staticmethod
+    def argmin_masked(v, mask=None):
+        if mask is not None:
+            v = jnp.where(mask, v, jnp.iinfo(jnp.int64).max)
+        return jnp.argmin(v, axis=1).astype(I32)
+
+    @staticmethod
+    def is_never(v):
+        return v == jnp.iinfo(jnp.int64).max
+
+
+class _PairClocks:
+    """Clock values are (hi, lo) int32 pairs — the Mosaic-lowerable
+    representation (see ``i32pair.py``); needs no x64 anywhere."""
+    nrefs = 2
+
+    @staticmethod
+    def read(refs):
+        return (refs[0][...], refs[1][...])
+
+    @staticmethod
+    def write(refs, v):
+        refs[0][...] = v[0]
+        refs[1][...] = v[1]
+
+    zeros = staticmethod(p32.pzeros)
+
+    @staticmethod
+    def full_m1(shape):
+        return p32.pfull(shape, -1)
+
+    where = staticmethod(p32.pwhere)
+
+    @staticmethod
+    def col(v):
+        return (v[0][:, None], v[1][:, None])
+
+    gather = staticmethod(p32.pgather)
+    add_i32 = staticmethod(p32.padd_i32)
+    sub = staticmethod(p32.psub)
+    max2 = staticmethod(p32.pmax2)
+    reduce_min_masked = staticmethod(p32.reduce_min_masked)
+    reduce_max = staticmethod(p32.reduce_max)
+    argmin_masked = staticmethod(p32.argmin_masked)
+
+    @staticmethod
+    def is_never(v):
+        return p32.peq(v, p32.NEVER)
+
+
+def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
+                      n_events: int, ev_chunk: int,
+                      lat_samples: int = LAT_SAMPLES, repr32: bool = False):
     """One (replica_tile, event_chunk) grid step.
+
+    ``refs`` arrive flat from ``pl.pallas_call`` — 11 inputs, then the
+    outputs and scratch whose *count* depends on the clock representation
+    (one ref per clock buffer for i64, an (hi, lo) pair for i32) — and are
+    regrouped here from the static ``repr32`` flag.
 
     s_t0/s_t1 are the two cohort tails for alock; for mcs/spinlock s_t0 is
     the lock word and s_t1/s_vic stay zero (those PCs are unreachable).
     """
+    C = _PairClocks if repr32 else _I64Clocks
+    nc = C.nrefs
+    (u1_ref, r2_ref, r3_ref, edges_ref, think_ref, locp_ref, actp_ref,
+     binit_ref, costs_ref, tn_ref, ln_ref) = refs[:11]
+    rest = refs[11:]
+    done_ref = rest[0]
+    lat_refs = rest[1:1 + nc]
+    latn_ref = rest[1 + nc]
+    tend_refs = rest[2 + nc:2 + 2 * nc]
+    reacq_ref, npass_ref = rest[2 + 2 * nc:4 + 2 * nc]
+    scr = rest[4 + 2 * nc:]
+    (s_t0, s_t1, s_vic, s_pc, s_bud, s_nxt, s_prev, s_tgt, s_coh) = scr[:9]
+    ready_refs = scr[9:9 + nc]
+    busy_refs = scr[9 + nc:9 + 2 * nc]
+    opst_refs = scr[9 + 2 * nc:9 + 3 * nc]
+
     is_alock = alg == "alock"
     is_spin = alg == "spinlock"
     j = pl.program_id(1)
@@ -84,12 +229,14 @@ def event_loop_kernel(u1_ref, r2_ref, r3_ref, edges_ref, think_ref,
     def _init():
         # fresh replicas == sim.init_sem + zeroed clocks/accounting
         for ref in (s_t0, s_t1, s_vic, s_nxt, s_prev, s_tgt, s_coh,
-                    s_ready, s_busy, s_opst, done_ref, latn_ref, tend_ref,
-                    reacq_ref, npass_ref):
+                    done_ref, latn_ref, reacq_ref, npass_ref):
             ref[...] = jnp.zeros(ref.shape, ref.dtype)
         s_pc[...] = jnp.full((tile, T), mc.NCS, I32)
         s_bud[...] = jnp.full((tile, T), -1, I32)
-        lat_ref[...] = jnp.full((tile, LAT_SAMPLES), -1, I64)
+        for crefs, shape in ((ready_refs, (tile, T)), (busy_refs, (tile, N)),
+                             (opst_refs, (tile, T))):
+            C.write(crefs, C.zeros(shape))
+        C.write(lat_refs, C.full_m1((tile, lat_samples)))
 
     u1s = u1_ref[...]                               # (tile, ev_chunk) f32
     r2s = r2_ref[...].astype(I32)
@@ -104,12 +251,14 @@ def event_loop_kernel(u1_ref, r2_ref, r3_ref, edges_ref, think_ref,
     tn = jnp.broadcast_to(tn_ref[...].astype(I32), (tile, T))
     ln = jnp.broadcast_to(ln_ref[...].astype(I32), (tile, K))
 
-    rows = jnp.arange(tile)
-    tids = jnp.arange(T, dtype=I32)[None, :]
-    kio = jnp.arange(K, dtype=I32)[None, :]
-    nio = jnp.arange(N, dtype=I32)[None, :]
-    pio = jnp.arange(P, dtype=I32)[None, :]
-    never = jnp.iinfo(jnp.int64).max   # parked threads lose every argmin
+    tids = _iota((tile, T), 1)
+    kio = _iota((tile, K), 1)
+    nio = _iota((tile, N), 1)
+    pio = _iota((tile, P), 1)
+    if repr32:
+        sio = _iota((tile, lat_samples), 1)   # ring one-hot (Mosaic path)
+    else:
+        rows = jnp.arange(tile)               # ring scatter (fast path)
 
     def gat_t(arr, idx):
         """(tile, T) gathered at per-row thread idx -> (tile,). The sum
@@ -124,8 +273,8 @@ def event_loop_kernel(u1_ref, r2_ref, r3_ref, edges_ref, think_ref,
 
     state = (s_t0[...], s_t1[...], s_vic[...], s_pc[...], s_bud[...],
              s_nxt[...], s_prev[...], s_tgt[...], s_coh[...],
-             s_ready[...], s_busy[...], s_opst[...],
-             done_ref[...], lat_ref[...], latn_ref[...][:, 0],
+             C.read(ready_refs), C.read(busy_refs), C.read(opst_refs),
+             done_ref[...], C.read(lat_refs), latn_ref[...][:, 0],
              reacq_ref[...][:, 0], npass_ref[...][:, 0])
 
     def step(e, st):
@@ -154,16 +303,13 @@ def event_loop_kernel(u1_ref, r2_ref, r3_ref, edges_ref, think_ref,
             was_act = jnp.sum(jnp.where(ohPp[:, :, None], actp, 0), axis=1)
             rejoin = (jnp.any(gi == edges, axis=1)[:, None]
                       & (act_row != 0) & (was_act == 0))
-            cont_min = jnp.min(jnp.where((act_row != 0) & (was_act != 0),
-                                         ready, never), axis=1)
-            now_min = jnp.where(
-                cont_min == never,
-                jnp.min(jnp.where(act_row != 0, ready, never), axis=1),
-                cont_min)
-            ready = jnp.where(rejoin, jnp.maximum(ready, now_min[:, None]),
-                              ready)
-            tid = jnp.argmin(jnp.where(act_row != 0, ready, never),
-                             axis=1).astype(I32)
+            cont_min = C.reduce_min_masked(ready,
+                                           (act_row != 0) & (was_act != 0))
+            now_min = C.where(C.is_never(cont_min),
+                              C.reduce_min_masked(ready, act_row != 0),
+                              cont_min)
+            ready = C.where(rejoin, C.max2(ready, C.col(now_min)), ready)
+            tid = C.argmin_masked(ready, act_row != 0)
         else:
             # single phase: the flat PR-2 hot path, no phase machinery
             # (lowering guarantees P == 1 operands are all-active)
@@ -171,9 +317,9 @@ def event_loop_kernel(u1_ref, r2_ref, r3_ref, edges_ref, think_ref,
             think_e = think[:, 0]
             binit = binitp[:, 0]
             cst = cstp[:, 0]
-            tid = jnp.argmin(ready, axis=1).astype(I32)
+            tid = C.argmin_masked(ready)
         ohT = tids == tid[:, None]
-        now = jnp.sum(jnp.where(ohT, ready, 0), axis=1)
+        now = C.gather(ohT, ready)
         me = tid + 1
         p = gat_t(pc, tid)
         tg = gat_t(tgt, tid)
@@ -317,26 +463,36 @@ def event_loop_kernel(u1_ref, r2_ref, r3_ref, edges_ref, think_ref,
         svc = jnp.where(code == OP_LOOP, cst[:, 5], cst[:, 4])
         wire = jnp.where(code == OP_LOOP, cst[:, 7], cst[:, 6])
         ohN = nio == tnode[:, None]
-        busy_t = jnp.sum(jnp.where(ohN, busy, 0), axis=1)
-        start = jnp.maximum(now, busy_t)
-        fin = start + svc
-        busy = jnp.where(is_rdma[:, None] & ohN, fin[:, None], busy)
+        busy_t = C.gather(ohN, busy)
+        start = C.max2(now, busy_t)
+        fin = C.add_i32(start, svc)
+        busy = C.where(is_rdma[:, None] & ohN, C.col(fin), busy)
         dt_plain = jnp.select(
             [code == OP_LOCAL, code == OP_POLL, code == OP_CS,
              code == OP_THINK],
             [cst[:, 0], cst[:, 1], cst[:, 2], think_e], cst[:, 0])
-        new_ready = jnp.where(is_rdma, fin + wire, now + dt_plain)
-        ready = jnp.where(ohT, new_ready[:, None], ready)
+        new_ready = C.where(is_rdma, C.add_i32(fin, wire),
+                            C.add_i32(now, dt_plain))
+        ready = C.where(ohT, C.col(new_ready), ready)
 
         # -- completion accounting (latency ring, counters) ----------------
         finished = (is_rc | is_ps | is_slr) & (new_pc == mc.NCS)
-        lat_val = now - jnp.sum(jnp.where(ohT, opst, 0), axis=1)
-        slot = latn % LAT_SAMPLES
-        lat = lat.at[rows, slot].set(
-            jnp.where(finished, lat_val, lat[rows, slot]))
+        lat_val = C.sub(now, C.gather(ohT, opst))
+        slot = latn % lat_samples
+        if repr32:
+            # masked one-hot accumulate over the sample axis — bitwise
+            # the scatter below, but expressible in Mosaic (which rejects
+            # per-row dynamic scatters against VMEM state)
+            ohS = (sio == slot[:, None]) & finished[:, None]
+            lat = C.where(ohS, C.col(lat_val), lat)
+        else:
+            # interpret/XLA fast path: the O(1)-per-event scatter (the
+            # one-hot form costs O(lat_samples) lane-ops per event)
+            lat = lat.at[rows, slot].set(
+                jnp.where(finished, lat_val, lat[rows, slot]))
         latn = latn + finished.astype(I32)
         done = done + jnp.where(ohT & finished[:, None], 1, 0).astype(I32)
-        opst = jnp.where(is_ncs[:, None] & ohT, new_ready[:, None], opst)
+        opst = C.where(is_ncs[:, None] & ohT, C.col(new_ready), opst)
         reacq = reacq + (is_sb & (new_pc == mc.SET_VICTIM_R)).astype(I32)
         npass = npass + is_ps.astype(I32)
 
@@ -344,7 +500,8 @@ def event_loop_kernel(u1_ref, r2_ref, r3_ref, edges_ref, think_ref,
                   opst, done, lat, latn, reacq, npass)
         # ragged final chunk: events past n_events are masked no-ops
         valid = gi < n_events
-        return tuple(jnp.where(valid, n, o) for n, o in zip(new_st, st))
+        return jax.tree_util.tree_map(
+            lambda n, o: jnp.where(valid, n, o), new_st, st)
 
     state = lax.fori_loop(0, ev_chunk, step, state)
     (t0, t1, vic, pc, bud, nxt, prv, tgt, coh, ready, busy, opst,
@@ -352,12 +509,14 @@ def event_loop_kernel(u1_ref, r2_ref, r3_ref, edges_ref, think_ref,
 
     for ref, val in ((s_t0, t0), (s_t1, t1), (s_vic, vic), (s_pc, pc),
                      (s_bud, bud), (s_nxt, nxt), (s_prev, prv), (s_tgt, tgt),
-                     (s_coh, coh), (s_ready, ready), (s_busy, busy),
-                     (s_opst, opst)):
+                     (s_coh, coh)):
         ref[...] = val
+    for crefs, val in ((ready_refs, ready), (busy_refs, busy),
+                       (opst_refs, opst)):
+        C.write(crefs, val)
     done_ref[...] = done
-    lat_ref[...] = lat
+    C.write(lat_refs, lat)
     latn_ref[...] = latn[:, None]
-    tend_ref[...] = jnp.max(ready, axis=1)[:, None]
+    C.write(tend_refs, C.col(C.reduce_max(ready)))
     reacq_ref[...] = reacq[:, None]
     npass_ref[...] = npass[:, None]

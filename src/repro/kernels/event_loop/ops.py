@@ -8,6 +8,29 @@ axis; events are padded to a chunk multiple and streamed along the second
 (sequential) grid axis while the simulation state persists in VMEM
 scratch.
 
+Clock representation
+  ``representation="auto" | "i64" | "i32pair"`` picks how the kernel holds
+  its 64-bit clock state (see ``kernel.py``): plain int64 (the interpret /
+  XLA-adjacent fast path, callers hold ``enable_x64()``) or carry-correct
+  hi/lo int32 pairs (``i32pair.py`` — what Mosaic can actually lower on
+  TPU, and the only mode that works with x64 entirely off). ``"auto"``
+  resolves to ``i32pair`` for native lowering and ``i64`` under interpret;
+  the ``REPRO_EVENT_CLOCKS`` environment variable overrides either way.
+  Both representations are bitwise-equal to the XLA engine
+  (``tests/test_event_loop_native_repr.py``). ``run_events`` packs the
+  pair outputs back into int64; ``run_events_pairs`` returns the raw
+  (hi, lo) arrays and never touches an int64 — that is the entry point
+  the x64-off CI leg exercises.
+
+VMEM budget
+  Before tracing, the ``vmem.py`` planner prices every VMEM buffer of one
+  grid step and deterministically shrinks the replica tile to fit
+  ``vmem_budget`` bytes (default: ``vmem.DEFAULT_VMEM_BUDGET`` for native
+  lowering, unconstrained under interpret). An impossible budget raises an
+  actionable ``ValueError`` instead of a Mosaic OOM; the chosen plan is
+  recorded and surfaced through ``repro.core.batch.exec_stats()`` and the
+  benchmark reports.
+
 The state-independent half of the workload draw stream is precomputed here
 (``precompute_draws``) from the identical ``jax.random.fold_in`` counter
 scheme the XLA loop uses — the raw locality uniform, the remote-node
@@ -44,6 +67,7 @@ True
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -52,15 +76,37 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.cost_model import N_COST_ROWS
 from repro.core.sim import I32, I64, LAT_SAMPLES
+from repro.kernels.event_loop import i32pair as p32
+from repro.kernels.event_loop import vmem
 from repro.kernels.event_loop.kernel import event_loop_kernel
 
 DEFAULT_TILE = 8
 DEFAULT_EV_CHUNK = 4096
 
+_REPRESENTATIONS = ("auto", "i64", "i32pair")
+
 
 def default_interpret() -> bool:
     """Native Mosaic lowering on TPU; interpreter everywhere else."""
     return jax.default_backend() != "tpu"
+
+
+def resolve_representation(representation: str, interpret: bool) -> str:
+    """'auto' -> hi/lo i32 pairs for native TPU lowering (Mosaic has no
+    64-bit vectors), plain i64 under interpret. ``REPRO_EVENT_CLOCKS``
+    overrides the auto choice either way."""
+    if representation not in _REPRESENTATIONS:
+        raise ValueError(f"representation must be one of "
+                         f"{_REPRESENTATIONS}, got {representation!r}")
+    if representation == "auto":
+        env = os.environ.get("REPRO_EVENT_CLOCKS", "")
+        if env:
+            if env not in ("i64", "i32pair"):
+                raise ValueError(f"REPRO_EVENT_CLOCKS must be 'i64' or "
+                                 f"'i32pair', got {env!r}")
+            return env
+        return "i64" if interpret else "i32pair"
+    return representation
 
 
 def precompute_draws(seed, edges, zcdf, n_events: int, N: int, kpn: int):
@@ -90,39 +136,53 @@ def precompute_draws(seed, edges, zcdf, n_events: int, N: int, kpn: int):
     return jax.vmap(one)(seed, edges, zcdf)
 
 
-def run_events(alg, T, N, K, n_events, wl, thread_node, lock_node, *,
-               tile: int = DEFAULT_TILE, ev_chunk: int = DEFAULT_EV_CHUNK,
-               interpret=None):
-    """Batched Pallas event loop; must run under ``enable_x64()``.
+def plan_for_run(B, P, n_events, T, N, K, *, tile: int = DEFAULT_TILE,
+                 ev_chunk: int = DEFAULT_EV_CHUNK, interpret=None,
+                 representation: str = "auto",
+                 lat_samples: int = LAT_SAMPLES,
+                 vmem_budget: int | None = None) -> vmem.VmemPlan:
+    """Resolve representation/budget, clamp (tile, ev_chunk) exactly like
+    ``run_events`` will, and record the resulting VMEM plan.
 
-    ``wl`` is a ``WorkloadOperands`` with a leading replica axis B on
-    every leaf: locality (B,P,T) f32, zcdf (B,P,K//N) f32, edges (B,P)
-    i32, think_ns (B,P) i32, active (B,P,T) i32, b_init (B,P,2) i32,
-    cost_rows (B,P,8) i32, seed (B,) i32; thread_node (T,)/lock_node (K,)
-    broadcast. Returns (done (B,T) i32, lat (B,LAT_SAMPLES) i64, lat_n
-    (B,) i32, t_end (B,) i64, nreacq (B,) i32, npass (B,) i32).
-
-    B need not divide the replica tile and n_events need not divide the
-    event chunk: replicas are edge-padded (duplicates, sliced off) and the
-    final chunk masks events past n_events inside the kernel.
+    This is the *single* clamping+planning code path — ``run_events`` goes
+    through it at trace time, and ``batch._exec_bucket`` calls it per
+    dispatch so ``exec_stats()["vmem_plan"]`` stays populated even when
+    the jitted kernel call is a cache hit (planning is python-level and
+    does not re-run inside a cached executable).
     """
     if interpret is None:
         interpret = default_interpret()
+    repr32 = resolve_representation(representation, interpret) == "i32pair"
+    if vmem_budget is None and not interpret:
+        vmem_budget = vmem.DEFAULT_VMEM_BUDGET
+    tile = max(1, min(tile, B))
+    ev_chunk = max(1, min(ev_chunk, max(n_events, 1)))
+    # price the VMEM footprint up front: shrink the replica tile to fit
+    # the budget (or raise actionably) instead of dying inside Mosaic
+    plan = vmem.plan_vmem(tile=tile, ev_chunk=ev_chunk, T=T, N=N, K=K, P=P,
+                          lat_samples=lat_samples, repr32=repr32,
+                          budget=vmem_budget)
+    vmem.note_plan(plan)
+    return plan
+
+
+def _pallas_events(alg, T, N, K, n_events, wl, thread_node, lock_node, *,
+                   tile, ev_chunk, interpret, repr32, lat_samples,
+                   vmem_budget):
+    """Shared pallas_call builder: returns the raw kernel outputs
+    (clock outputs as (hi, lo) pairs when ``repr32``)."""
     B = wl.seed.shape[0]
     P = wl.edges.shape[1]
-    if n_events < 1:
-        # degenerate run: match the XLA loop's 0-iteration outputs instead
-        # of tracing a zero-size grid (which Pallas rejects obscurely)
-        return (jnp.zeros((B, T), I32),
-                jnp.full((B, LAT_SAMPLES), -1, I64), jnp.zeros(B, I32),
-                jnp.zeros(B, I64), jnp.zeros(B, I32), jnp.zeros(B, I32))
     kpn = K // N
     u1, r2, r3 = precompute_draws(wl.seed, wl.edges, wl.zcdf, n_events, N,
                                   kpn)
 
-    tile = max(1, min(tile, B))
+    plan = plan_for_run(B, P, n_events, T, N, K, tile=tile,
+                        ev_chunk=ev_chunk, interpret=interpret,
+                        representation="i32pair" if repr32 else "i64",
+                        lat_samples=lat_samples, vmem_budget=vmem_budget)
+    tile, ev_chunk = plan.tile, plan.ev_chunk
     pad_b = -B % tile
-    ev_chunk = max(1, min(ev_chunk, n_events))
     pad_e = -n_events % ev_chunk
 
     def prep(a):
@@ -146,9 +206,45 @@ def run_events(alg, T, N, K, n_events, wl, thread_node, lock_node, *,
     def row(w):
         return pl.BlockSpec((tile, w), lambda i, j: (i, 0))
 
+    def clock_out(w):
+        """One (Bp, w) i64 output, or an (hi, lo) pair of i32 outputs."""
+        if repr32:
+            return ([row(w), row(w)],
+                    [jax.ShapeDtypeStruct((Bp, w), I32)] * 2)
+        return [row(w)], [jax.ShapeDtypeStruct((Bp, w), I64)]
+
+    def clock_scratch(w):
+        if repr32:
+            return [pltpu.VMEM((tile, w), I32)] * 2
+        return [pltpu.VMEM((tile, w), I64)]
+
+    lat_specs, lat_shapes = clock_out(lat_samples)
+    tend_specs, tend_shapes = clock_out(1)
+    out_specs = ([row(T)] + lat_specs + [row(1)] + tend_specs
+                 + [row(1), row(1)])
+    out_shape = ([jax.ShapeDtypeStruct((Bp, T), I32)] + lat_shapes
+                 + [jax.ShapeDtypeStruct((Bp, 1), I32)] + tend_shapes
+                 + [jax.ShapeDtypeStruct((Bp, 1), I32),
+                    jax.ShapeDtypeStruct((Bp, 1), I32)])
+    scratch_shapes = [
+        pltpu.VMEM((tile, K), I32),   # tail0 / lock word
+        pltpu.VMEM((tile, K), I32),   # tail1
+        pltpu.VMEM((tile, K), I32),   # victim
+        pltpu.VMEM((tile, T), I32),   # pc
+        pltpu.VMEM((tile, T), I32),   # budget
+        pltpu.VMEM((tile, T), I32),   # nxt
+        pltpu.VMEM((tile, T), I32),   # prev
+        pltpu.VMEM((tile, T), I32),   # target
+        pltpu.VMEM((tile, T), I32),   # cohort
+        *clock_scratch(T),            # ready
+        *clock_scratch(N),            # busy
+        *clock_scratch(T),            # op_start
+    ]
+
     out = pl.pallas_call(
         functools.partial(event_loop_kernel, alg=alg, T=T, N=N, K=K, P=P,
-                          n_events=n_events, ev_chunk=ev_chunk),
+                          n_events=n_events, ev_chunk=ev_chunk,
+                          lat_samples=lat_samples, repr32=repr32),
         grid=grid,
         in_specs=[
             pl.BlockSpec((tile, ev_chunk), lambda i, j: (i, j)),
@@ -159,29 +255,9 @@ def run_events(alg, T, N, K, n_events, wl, thread_node, lock_node, *,
             pl.BlockSpec((1, T), lambda i, j: (0, 0)),
             pl.BlockSpec((1, K), lambda i, j: (0, 0)),
         ],
-        out_specs=[row(T), row(LAT_SAMPLES), row(1), row(1), row(1), row(1)],
-        out_shape=[
-            jax.ShapeDtypeStruct((Bp, T), I32),
-            jax.ShapeDtypeStruct((Bp, LAT_SAMPLES), I64),
-            jax.ShapeDtypeStruct((Bp, 1), I32),
-            jax.ShapeDtypeStruct((Bp, 1), I64),
-            jax.ShapeDtypeStruct((Bp, 1), I32),
-            jax.ShapeDtypeStruct((Bp, 1), I32),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((tile, K), I32),   # tail0 / lock word
-            pltpu.VMEM((tile, K), I32),   # tail1
-            pltpu.VMEM((tile, K), I32),   # victim
-            pltpu.VMEM((tile, T), I32),   # pc
-            pltpu.VMEM((tile, T), I32),   # budget
-            pltpu.VMEM((tile, T), I32),   # nxt
-            pltpu.VMEM((tile, T), I32),   # prev
-            pltpu.VMEM((tile, T), I32),   # target
-            pltpu.VMEM((tile, T), I32),   # cohort
-            pltpu.VMEM((tile, T), I64),   # ready
-            pltpu.VMEM((tile, N), I64),   # busy
-            pltpu.VMEM((tile, T), I64),   # op_start
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch_shapes,
         interpret=interpret,
     )(u1, r2, r3,
       jnp.asarray(edges, I32), jnp.asarray(think, I32),
@@ -189,11 +265,110 @@ def run_events(alg, T, N, K, n_events, wl, thread_node, lock_node, *,
       jnp.asarray(binit, I32), jnp.asarray(costp, I32),
       jnp.asarray(thread_node, I32)[None, :],
       jnp.asarray(lock_node, I32)[None, :])
-    done, lat, lat_n, t_end, nreacq, npass = (o[:B] for o in out)
+
+    out = [o[:B] for o in out]
+    if repr32:
+        done, lat_hi, lat_lo, lat_n, te_hi, te_lo, nreacq, npass = out
+        return (done, (lat_hi, lat_lo), lat_n[:, 0],
+                (te_hi[:, 0], te_lo[:, 0]), nreacq[:, 0], npass[:, 0])
+    done, lat, lat_n, t_end, nreacq, npass = out
     return (done, lat, lat_n[:, 0], t_end[:, 0], nreacq[:, 0],
             npass[:, 0])
 
 
-run_events_jit = functools.partial(
+def run_events(alg, T, N, K, n_events, wl, thread_node, lock_node, *,
+               tile: int = DEFAULT_TILE, ev_chunk: int = DEFAULT_EV_CHUNK,
+               interpret=None, representation: str = "auto",
+               lat_samples: int = LAT_SAMPLES,
+               vmem_budget: int | None = None):
+    """Batched Pallas event loop; must run under ``enable_x64()`` (the
+    int64 output contract — use :func:`run_events_pairs` to stay in pure
+    int32 with x64 off).
+
+    ``wl`` is a ``WorkloadOperands`` with a leading replica axis B on
+    every leaf: locality (B,P,T) f32, zcdf (B,P,K//N) f32, edges (B,P)
+    i32, think_ns (B,P) i32, active (B,P,T) i32, b_init (B,P,2) i32,
+    cost_rows (B,P,8) i32, seed (B,) i32; thread_node (T,)/lock_node (K,)
+    broadcast. Returns (done (B,T) i32, lat (B,lat_samples) i64, lat_n
+    (B,) i32, t_end (B,) i64, nreacq (B,) i32, npass (B,) i32).
+
+    B need not divide the replica tile and n_events need not divide the
+    event chunk: replicas are edge-padded (duplicates, sliced off) and the
+    final chunk masks events past n_events inside the kernel. The tile may
+    additionally be shrunk by the VMEM planner (see module docstring);
+    ``vmem_budget=None`` means the default budget for native lowering and
+    unconstrained under interpret.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    repr32 = resolve_representation(representation, interpret) == "i32pair"
+    B = wl.seed.shape[0]
+    if n_events < 1:
+        # degenerate run: match the XLA loop's 0-iteration outputs instead
+        # of tracing a zero-size grid (which Pallas rejects obscurely)
+        return (jnp.zeros((B, T), I32),
+                jnp.full((B, lat_samples), -1, I64), jnp.zeros(B, I32),
+                jnp.zeros(B, I64), jnp.zeros(B, I32), jnp.zeros(B, I32))
+    out = _pallas_events(alg, T, N, K, n_events, wl, thread_node,
+                         lock_node, tile=tile, ev_chunk=ev_chunk,
+                         interpret=interpret, repr32=repr32,
+                         lat_samples=lat_samples, vmem_budget=vmem_budget)
+    if repr32:
+        done, lat, lat_n, t_end, nreacq, npass = out
+        return (done, p32.pack(lat), lat_n, p32.pack(t_end), nreacq, npass)
+    return out
+
+
+def run_events_pairs(alg, T, N, K, n_events, wl, thread_node, lock_node, *,
+                     tile: int = DEFAULT_TILE,
+                     ev_chunk: int = DEFAULT_EV_CHUNK, interpret=None,
+                     lat_samples: int = LAT_SAMPLES,
+                     vmem_budget: int | None = None):
+    """The hi/lo representation end to end — no int64 anywhere, so it runs
+    with x64 off (the TPU vector constraint the x64-off CI leg emulates).
+
+    Returns (done (B,T) i32, (lat_hi, lat_lo) (B,lat_samples) i32 each,
+    lat_n (B,) i32, (t_end_hi, t_end_lo) (B,) i32 each, nreacq (B,) i32,
+    npass (B,) i32); combine pairs host-side with ``i32pair.pack_np``.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    B = wl.seed.shape[0]
+    if n_events < 1:
+        z1 = jnp.zeros(B, I32)
+        return (jnp.zeros((B, T), I32),
+                (jnp.full((B, lat_samples), -1, I32),
+                 jnp.full((B, lat_samples), -1, I32)),
+                z1, (z1, z1), z1, z1)
+    return _pallas_events(alg, T, N, K, n_events, wl, thread_node,
+                          lock_node, tile=tile, ev_chunk=ev_chunk,
+                          interpret=interpret, repr32=True,
+                          lat_samples=lat_samples, vmem_budget=vmem_budget)
+
+
+_jit_run_events = functools.partial(
     jax.jit, static_argnames=("alg", "T", "N", "K", "n_events", "tile",
-                              "ev_chunk", "interpret"))(run_events)
+                              "ev_chunk", "interpret", "representation",
+                              "lat_samples", "vmem_budget"))(run_events)
+
+
+def run_events_jit(alg, T, N, K, n_events, wl, thread_node, lock_node, *,
+                   tile: int = DEFAULT_TILE,
+                   ev_chunk: int = DEFAULT_EV_CHUNK, interpret=None,
+                   representation: str = "auto",
+                   lat_samples: int = LAT_SAMPLES,
+                   vmem_budget: int | None = None):
+    """Jitted ``run_events`` with the environment-dependent knobs resolved
+    *eagerly*, so they participate in the jit cache key — a cached
+    executable traced under ``"auto"`` would otherwise silently ignore a
+    later ``REPRO_EVENT_CLOCKS`` change (the env read inside a jitted
+    function only happens at trace time)."""
+    if interpret is None:
+        interpret = default_interpret()
+    representation = resolve_representation(representation, interpret)
+    return _jit_run_events(alg, T, N, K, n_events, wl, thread_node,
+                           lock_node, tile=tile, ev_chunk=ev_chunk,
+                           interpret=interpret,
+                           representation=representation,
+                           lat_samples=lat_samples,
+                           vmem_budget=vmem_budget)

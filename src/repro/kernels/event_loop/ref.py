@@ -15,20 +15,21 @@ import functools
 
 import jax
 
-from repro.core.sim import _run_events
+from repro.core.sim import LAT_SAMPLES, _run_events
 
 
-def run_events_ref(alg, T, N, K, n_events, wl, thread_node, lock_node):
+def run_events_ref(alg, T, N, K, n_events, wl, thread_node, lock_node, *,
+                   lat_samples: int = LAT_SAMPLES):
     """Batched XLA reference. ``wl`` is a ``WorkloadOperands`` whose leaves
     all carry a leading replica axis B (locality (B,P,T), zcdf (B,P,kpn),
     edges/think_ns (B,P), active (B,P,T), b_init (B,P,2), cost_rows
     (B,P,8), seed (B,)); thread_node (T,) and lock_node (K,) broadcast.
-    Returns (done (B,T), lat (B,LAT), lat_n (B,), t_end (B,), nreacq (B,),
-    npass (B,)) — must run under ``enable_x64()``.
+    Returns (done (B,T), lat (B,lat_samples), lat_n (B,), t_end (B,),
+    nreacq (B,), npass (B,)) — must run under ``enable_x64()``.
     """
     point = functools.partial(_run_events, alg, T, N, K, n_events)
 
     def one(w):
-        return point(w, thread_node, lock_node)
+        return point(w, thread_node, lock_node, lat_samples=lat_samples)
 
     return jax.vmap(one)(wl)

@@ -1,0 +1,206 @@
+"""VMEM budget planner for the event-loop kernel (pure python, no JAX).
+
+The kernel keeps *every* per-replica buffer VMEM-resident for the whole
+``n_events`` run, so its footprint per grid step is a closed-form function
+of ``(tile, ev_chunk, T, N, K, P, lat_samples, representation)``. On real
+TPU an oversized ``(tile, lat_samples)`` request dies inside Mosaic as an
+opaque VMEM-exhaustion error; this planner computes the byte table up
+front, **deterministically shrinks the replica tile** (halving) until the
+configured budget fits, and raises an actionable ``ValueError`` when even
+``tile=1`` cannot fit — never a silent wrong answer.
+
+Byte formula (one grid step = one replica tile; int32/float32 = 4 bytes,
+clocks = 8 bytes, as one i64 buffer or an (hi, lo) i32 pair):
+
+  streamed inputs   u1/r2/r3: ``3 * tile*ev_chunk*4``, **x2** for the
+                    pipeline double-buffer along the sequential event axis
+  workload rows     edges/think ``tile*P*4`` each; locality/active
+                    ``tile*P*T*4`` each; b_init ``tile*P*2*4``; cost_rows
+                    ``tile*P*8*4``; thread_node ``T*4``; lock_node ``K*4``
+  outputs           done ``tile*T*4``; latency ring ``tile*lat_samples*8``;
+                    lat_n/reacq/npass ``tile*4`` each; t_end ``tile*8``
+  scratch           tails/victim ``3 * tile*K*4``; six per-thread i32
+                    descriptors ``tile*T*4``; ready/op_start ``tile*T*8``;
+                    busy ``tile*N*8``
+
+``plan_vmem`` is exercised by ``tests/test_vmem_planner.py`` with no TPU:
+the breakdown shapes are checked against the buffers ``ops.run_events``
+actually allocates in interpret mode. The chosen plan is recorded via
+``note_plan`` and surfaced through ``repro.core.batch.exec_stats()`` and
+the ``benchmarks/perfcheck.py`` / ``benchmarks.run`` report rows.
+
+>>> p = plan_vmem(tile=8, ev_chunk=512, T=16, N=4, K=16, P=1,
+...               lat_samples=1 << 15, repr32=True)
+>>> p.tile, p.shrunk, p.total_bytes == sum(
+...     b for _, b in p.breakdown.values())
+(8, False, True)
+>>> tight = plan_vmem(tile=64, ev_chunk=512, T=16, N=4, K=16, P=1,
+...                   lat_samples=1 << 15, repr32=True,
+...                   budget=4 * 2**20)
+>>> tight.requested_tile, tight.tile, tight.shrunk
+(64, 8, True)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Mapping
+
+from repro.core.cost_model import N_COST_ROWS
+
+#: Per-core VMEM on current TPUs is ~16 MiB; leave headroom for Mosaic's
+#: own spills/temporaries. Overridable per call (``run_events(vmem_budget=)``).
+DEFAULT_VMEM_BUDGET = 12 * 2**20
+
+_I32 = 4
+_F32 = 4
+_CLOCK = 8          # one i64 buffer, or an (hi, lo) i32 pair — same bytes
+#: the sequential event axis streams u1/r2/r3 chunk by chunk; Pallas
+#: double-buffers streamed inputs so the next chunk loads during compute
+PIPELINE_FACTOR = 2
+
+
+def _entries(name, shape, itemsize, factor=1):
+    n = factor
+    for d in shape:
+        n *= d
+    return (name, (shape, n * itemsize))
+
+
+def _clock_entries(name, shape, repr32: bool):
+    """One i64 buffer, or two i32 buffers for the hi/lo representation —
+    the shapes here must match ``ops.run_events``'s allocations exactly."""
+    if repr32:
+        return [_entries(f"{name}.hi", shape, _I32),
+                _entries(f"{name}.lo", shape, _I32)]
+    return [_entries(name, shape, _CLOCK)]
+
+
+def buffer_table(tile: int, ev_chunk: int, T: int, N: int, K: int, P: int,
+                 lat_samples: int, repr32: bool) -> dict:
+    """name -> (block shape, bytes) for every VMEM buffer of one grid step.
+
+    Mirrors the ``in_specs`` / ``out_specs`` / ``scratch_shapes`` that
+    ``ops.run_events`` builds — ``tests/test_vmem_planner.py`` asserts the
+    two stay in sync.
+    """
+    rows: list[tuple] = [
+        # streamed draw inputs (double-buffered along the event axis)
+        _entries("in.u1", (tile, ev_chunk), _F32, PIPELINE_FACTOR),
+        _entries("in.r2", (tile, ev_chunk), _I32, PIPELINE_FACTOR),
+        _entries("in.r3", (tile, ev_chunk), _I32, PIPELINE_FACTOR),
+        # per-phase workload rows (same block every chunk)
+        _entries("in.edges", (tile, P), _I32),
+        _entries("in.think", (tile, P), _I32),
+        _entries("in.locality", (tile, P * T), _F32),
+        _entries("in.active", (tile, P * T), _I32),
+        _entries("in.b_init", (tile, P * 2), _I32),
+        _entries("in.cost_rows", (tile, P * N_COST_ROWS), _I32),
+        _entries("in.thread_node", (1, T), _I32),
+        _entries("in.lock_node", (1, K), _I32),
+        # outputs (flushed when the replica tile changes)
+        _entries("out.done", (tile, T), _I32),
+        *_clock_entries("out.lat", (tile, lat_samples), repr32),
+        _entries("out.lat_n", (tile, 1), _I32),
+        *_clock_entries("out.t_end", (tile, 1), repr32),
+        _entries("out.reacq", (tile, 1), _I32),
+        _entries("out.npass", (tile, 1), _I32),
+        # semantic scratch (int32 in every representation)
+        _entries("scr.tail0", (tile, K), _I32),
+        _entries("scr.tail1", (tile, K), _I32),
+        _entries("scr.victim", (tile, K), _I32),
+        _entries("scr.pc", (tile, T), _I32),
+        _entries("scr.budget", (tile, T), _I32),
+        _entries("scr.nxt", (tile, T), _I32),
+        _entries("scr.prev", (tile, T), _I32),
+        _entries("scr.target", (tile, T), _I32),
+        _entries("scr.cohort", (tile, T), _I32),
+        # clock scratch
+        *_clock_entries("scr.ready", (tile, T), repr32),
+        *_clock_entries("scr.busy", (tile, N), repr32),
+        *_clock_entries("scr.op_start", (tile, T), repr32),
+    ]
+    return dict(rows)
+
+
+@dataclass(frozen=True)
+class VmemPlan:
+    """The planner's verdict for one ``run_events`` call."""
+    requested_tile: int
+    tile: int
+    ev_chunk: int
+    lat_samples: int
+    representation: str                      # "i64" | "i32pair"
+    budget: int | None                       # bytes; None = unconstrained
+    total_bytes: int
+    breakdown: Mapping[str, tuple]           # name -> (shape, bytes)
+
+    @property
+    def shrunk(self) -> bool:
+        return self.tile != self.requested_tile
+
+    def as_dict(self) -> dict:
+        """Compact form for ``exec_stats()`` / benchmark JSON rows."""
+        return {
+            "requested_tile": self.requested_tile, "tile": self.tile,
+            "ev_chunk": self.ev_chunk, "lat_samples": self.lat_samples,
+            "representation": self.representation, "budget": self.budget,
+            "total_bytes": self.total_bytes, "shrunk": self.shrunk,
+        }
+
+
+def plan_vmem(*, tile: int, ev_chunk: int, T: int, N: int, K: int, P: int,
+              lat_samples: int, repr32: bool,
+              budget: int | None = None) -> VmemPlan:
+    """Compute the byte table; halve ``tile`` until ``budget`` fits.
+
+    Deterministic: the same arguments always yield the same plan. With
+    ``budget=None`` the table is computed but never shrunk (interpret
+    mode / host runs have no VMEM ceiling). Raises ``ValueError`` when
+    even ``tile=1`` exceeds the budget, naming the dominant buffers and
+    the knobs that actually help.
+    """
+    if tile < 1 or ev_chunk < 1:
+        raise ValueError(f"tile and ev_chunk must be >= 1, got "
+                         f"(tile={tile}, ev_chunk={ev_chunk})")
+    if budget is not None and budget < 1:
+        raise ValueError(f"vmem budget must be >= 1 byte, got {budget}")
+    requested = tile
+    t = tile
+    while True:
+        table = buffer_table(t, ev_chunk, T, N, K, P, lat_samples, repr32)
+        total = sum(b for _, b in table.values())
+        if budget is None or total <= budget or t == 1:
+            break
+        t = max(1, t // 2)
+    if budget is not None and total > budget:
+        top = sorted(table.items(), key=lambda kv: -kv[1][1])[:3]
+        detail = ", ".join(f"{name}{shape}={b:,}B"
+                           for name, (shape, b) in top)
+        raise ValueError(
+            f"event-loop kernel cannot fit VMEM budget {budget:,}B even at "
+            f"tile=1 (needs {total:,}B; largest buffers: {detail}). Lower "
+            f"lat_samples ({lat_samples}) or ev_chunk ({ev_chunk}), or "
+            f"raise the budget (run_events(vmem_budget=...)).")
+    return VmemPlan(requested_tile=requested, tile=t, ev_chunk=ev_chunk,
+                    lat_samples=lat_samples,
+                    representation="i32pair" if repr32 else "i64",
+                    budget=budget, total_bytes=total, breakdown=table)
+
+
+# -- last-plan registry (read by batch.exec_stats / benchmarks) -------------
+
+_LAST_PLAN: VmemPlan | None = None
+
+
+def note_plan(plan: VmemPlan) -> None:
+    global _LAST_PLAN
+    _LAST_PLAN = plan
+
+
+def last_plan() -> VmemPlan | None:
+    return _LAST_PLAN
+
+
+def clear_plan() -> None:
+    global _LAST_PLAN
+    _LAST_PLAN = None

@@ -1,0 +1,236 @@
+"""Differential harness for the native-TPU clock representation.
+
+Runs the event-loop kernel with the hi/lo i32-pair representation forced
+on (interpret mode, **no** ``enable_x64`` anywhere near the kernel — the
+x64-off CI leg executes this file with ``JAX_ENABLE_X64=0`` to emulate the
+TPU i32-vector constraint) and asserts bitwise equality with the XLA
+engine:
+
+  * an alg x phased x zipf x churn operand matrix with mid-chunk phase
+    boundaries;
+  * **every simulator scenario in the registry** (uniform-grid,
+    hot-key-storm, mixed-locality, node-churn, paper-fig5, congested-nic,
+    budget-ramp) via ``repro.experiments.scenario_workloads``;
+  * latency-ring overflow (``latn`` wrapping past ``lat_samples``) across
+    all three engines: XLA, i64-pallas, i32-pair-pallas.
+
+The XLA oracle still runs under a local ``enable_x64()`` (its clocks are
+real int64); pair outputs are packed host-side with ``i32pair.pack_np`` so
+the comparison itself never needs x64.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from repro.core.sim import topology, zipf_cdf
+from repro.experiments import scenario_names, scenario_workloads
+from repro.kernels.event_loop import i32pair as p32
+from repro.kernels.event_loop.ops import (resolve_representation,
+                                          run_events, run_events_pairs)
+from repro.kernels.event_loop.ref import run_events_ref
+from repro.workloads import Workload, WorkloadOperands, lower, pad_phases
+
+EV = 1100
+
+
+def _pack_outputs(out):
+    """(done, (lat_hi, lat_lo), lat_n, (te_hi, te_lo), ...) -> np int64."""
+    done, lat_p, lat_n, te_p, nreacq, npass = out
+    return (np.asarray(done),
+            p32.pack_np(np.asarray(lat_p[0]), np.asarray(lat_p[1])),
+            np.asarray(lat_n),
+            p32.pack_np(np.asarray(te_p[0]), np.asarray(te_p[1])),
+            np.asarray(nreacq), np.asarray(npass))
+
+
+def _assert_bitwise(ref, got):
+    for name, a, b in zip(("done", "lat", "lat_n", "t_end", "nreacq",
+                           "npass"), ref, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"mismatch in {name}")
+
+
+def _stack_operands(workloads, n_events, **lower_kw):
+    """Lower specs, pad phases to the bucket max, stack a replica axis —
+    the same layout ``batch.sweep`` builds for one shape bucket."""
+    lowered = [lower(w, n_events, **lower_kw) for w in workloads]
+    keys = {lw.shape_key for lw in lowered}
+    assert len(keys) == 1, f"one bucket at a time, got {keys}"
+    pmax = max(lw.operands.n_phases for lw in lowered)
+    ops = [pad_phases(lw.operands, pmax) for lw in lowered]
+    leaves = [np.stack([np.asarray(getattr(o, f)) for o in ops])
+              for f in WorkloadOperands._fields]
+    return lowered[0], WorkloadOperands(*(jnp.asarray(a) for a in leaves))
+
+
+@pytest.mark.parametrize("alg", ["alock", "spinlock", "mcs"])
+def test_native_repr_bitwise_phased_zipf_churn(alg):
+    """The tentpole contract on handcrafted operands: per-thread locality,
+    per-phase Zipf CDFs + cost rows + budgets, a downed node, and phase
+    edges that land mid event-chunk — i32-pair kernel (x64 off) vs the
+    int64 XLA loop, bitwise."""
+    N, tpn, K = 3, 4, 6
+    T, B, P = N * tpn, 5, 2
+    tn, ln, costs = topology(alg, N, tpn, K)
+    rng = np.random.default_rng(0)
+    loc = rng.uniform(0.3, 1.0, (B, P, T)).astype(np.float32)
+    zc = np.stack([[zipf_cdf(K // N, s) for s in row]
+                   for row in rng.uniform(0.0, 2.0, (B, P))])
+    active = np.ones((B, P, T), np.int32)
+    active[:, 1, :tpn] = 0          # node 0 down in the second phase
+    cst = np.tile(np.int32(costs), (B, P, 1))
+    cst[:, 1, 4:6] *= 2
+    wl = WorkloadOperands(
+        locality=jnp.asarray(loc), zcdf=jnp.asarray(np.float32(zc)),
+        edges=jnp.asarray(np.tile(np.int32([0, 600]), (B, 1))),
+        think_ns=jnp.asarray(np.tile(np.int32([500, 250]), (B, 1))),
+        active=jnp.asarray(active),
+        b_init=jnp.asarray(np.tile(np.int32([[2, 3], [1, 5]]), (B, 1, 1))),
+        seed=jnp.arange(B, dtype=jnp.int32) + 11,
+        cost_rows=jnp.asarray(cst))
+    with enable_x64():
+        ref = [np.asarray(r) for r in
+               run_events_ref(alg, T, N, K, EV, wl, tn, ln)]
+    # the phase edge at 600 falls mid-chunk (600 % 256 != 0)
+    out = run_events_pairs(alg, T, N, K, EV, wl, tn, ln,
+                           tile=2, ev_chunk=256, interpret=True)
+    _assert_bitwise(ref, _pack_outputs(out))
+
+
+def test_registry_scenarios_bitwise_i32pair():
+    """Acceptance gate: every simulator scenario in the registry is
+    bitwise-identical through the i32-pair kernel. Workloads are grouped
+    into shape buckets (one ref + one kernel compile per bucket) exactly
+    like a production sweep; lat_samples is shrunk so the interpret-mode
+    ring stays cheap (both engines get the same value)."""
+    ev, lat_samples = 400, 512
+    sim_scenarios = {}
+    for name in scenario_names():
+        ws = scenario_workloads(name)
+        if ws is None:
+            assert name == "coord-stress"   # only the threaded coord plane
+            continue
+        sim_scenarios[name] = ws
+    assert set(sim_scenarios) == {
+        "uniform-grid", "hot-key-storm", "mixed-locality", "node-churn",
+        "paper-fig5", "congested-nic", "budget-ramp"}
+
+    buckets: dict[tuple, list] = {}
+    for name, ws in sim_scenarios.items():
+        for w in ws:
+            buckets.setdefault(lower(w, ev).shape_key, []).append((name, w))
+
+    for key, items in buckets.items():
+        alg, T, N, K, _ = key
+        tn, ln, _ = topology(alg, N, T // N, K)
+        _, wl = _stack_operands([w for _, w in items], ev)
+        with enable_x64():
+            ref = [np.asarray(r) for r in
+                   run_events_ref(alg, T, N, K, ev, wl, tn, ln,
+                                  lat_samples=lat_samples)]
+        # ev_chunk=192: the scenarios' phase edges (ev * 0.3/0.34/0.4...)
+        # all land mid-chunk
+        out = run_events_pairs(alg, T, N, K, ev, wl, tn, ln, tile=3,
+                               ev_chunk=192, interpret=True,
+                               lat_samples=lat_samples)
+        got = _pack_outputs(out)
+        for i, (name, w) in enumerate(items):
+            for fname, a, b in zip(("done", "lat", "lat_n", "t_end",
+                                    "nreacq", "npass"), ref, got):
+                np.testing.assert_array_equal(
+                    a[i], b[i],
+                    err_msg=f"scenario {name} workload {i} ({w.alg}): "
+                            f"{fname} diverged")
+
+
+def test_ring_overflow_identical_across_engines():
+    """latn wrapping past lat_samples: ring contents and p50/p99
+    aggregates must match on XLA, i64-pallas and i32-pair-pallas."""
+    alg, N, tpn, K, lat_samples = "alock", 2, 2, 8, 64
+    T = N * tpn
+    ev = 2500                       # ~400 completions >> 64 slots
+    tn, ln, _ = topology(alg, N, tpn, K)
+    w = lower(Workload(alg, N, tpn, K, locality=0.9, seed=3), ev)
+    wl = WorkloadOperands(*(jnp.asarray(a)[None] for a in w.operands))
+    with enable_x64():
+        ref = [np.asarray(r) for r in
+               run_events_ref(alg, T, N, K, ev, wl, tn, ln,
+                              lat_samples=lat_samples)]
+        i64 = run_events(alg, T, N, K, ev, wl, tn, ln, interpret=True,
+                         representation="i64", lat_samples=lat_samples,
+                         ev_chunk=512)
+        i64 = [np.asarray(r) for r in i64]
+    pair = _pack_outputs(run_events_pairs(
+        alg, T, N, K, ev, wl, tn, ln, interpret=True,
+        lat_samples=lat_samples, ev_chunk=512))
+
+    assert ref[2][0] > 2 * lat_samples      # the ring really wrapped
+    assert (ref[1] >= 0).all()              # ... and every slot was filled
+    _assert_bitwise(ref, i64)
+    _assert_bitwise(ref, pair)
+    for eng in (i64, pair):
+        assert np.percentile(eng[1][0], 50) == np.percentile(ref[1][0], 50)
+        assert np.percentile(eng[1][0], 99) == np.percentile(ref[1][0], 99)
+
+
+def test_packed_run_events_i32pair_matches_i64():
+    """The public ``run_events(representation=)`` contract: both
+    representations return identical int64 outputs under x64."""
+    alg, N, tpn, K, ev = "mcs", 2, 2, 8, 900
+    T = N * tpn
+    tn, ln, _ = topology(alg, N, tpn, K)
+    w = lower(Workload(alg, N, tpn, K, locality=0.85, seed=5), ev)
+    wl = WorkloadOperands(*(jnp.asarray(a)[None] for a in w.operands))
+    with enable_x64():
+        a = run_events(alg, T, N, K, ev, wl, tn, ln, interpret=True,
+                       representation="i64")
+        b = run_events(alg, T, N, K, ev, wl, tn, ln, interpret=True,
+                       representation="i32pair")
+        for x, y in zip(a, b):
+            assert x.dtype == y.dtype
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_resolve_representation():
+    assert resolve_representation("i64", interpret=True) == "i64"
+    assert resolve_representation("i32pair", interpret=True) == "i32pair"
+    assert resolve_representation("auto", interpret=True) == "i64"
+    assert resolve_representation("auto", interpret=False) == "i32pair"
+    with pytest.raises(ValueError, match="representation"):
+        resolve_representation("i48", interpret=True)
+
+
+def test_env_override_keys_the_jit_cache(monkeypatch):
+    """Flipping REPRO_EVENT_CLOCKS mid-process must re-trace, not reuse a
+    cached executable of the other representation — run_events_jit
+    resolves the env *before* the jit boundary so it keys the cache. A
+    fresh trace is observable through the VMEM plan it records (a cache
+    hit records nothing), and both traces stay bitwise-equal."""
+    from repro.kernels.event_loop import vmem
+    from repro.kernels.event_loop.ops import run_events_jit
+    alg, N, tpn, K, ev = "alock", 2, 2, 8, 600
+    T = N * tpn
+    tn, ln, _ = topology(alg, N, tpn, K)
+    w = lower(Workload(alg, N, tpn, K, locality=0.9, seed=2), ev)
+    wl = WorkloadOperands(*(jnp.asarray(a)[None] for a in w.operands))
+    with enable_x64():
+        a = run_events_jit(alg, T, N, K, ev, wl, tn, ln, interpret=True,
+                           lat_samples=256)
+        vmem.clear_plan()
+        monkeypatch.setenv("REPRO_EVENT_CLOCKS", "i32pair")
+        b = run_events_jit(alg, T, N, K, ev, wl, tn, ln, interpret=True,
+                           lat_samples=256)
+    plan = vmem.last_plan()
+    assert plan is not None and plan.representation == "i32pair"
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_resolve_representation_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_EVENT_CLOCKS", "i32pair")
+    assert resolve_representation("auto", interpret=True) == "i32pair"
+    assert resolve_representation("i64", interpret=True) == "i64"
+    monkeypatch.setenv("REPRO_EVENT_CLOCKS", "bogus")
+    with pytest.raises(ValueError, match="REPRO_EVENT_CLOCKS"):
+        resolve_representation("auto", interpret=True)

@@ -1,0 +1,191 @@
+"""VMEM budget planner (`kernels/event_loop/vmem`): the bytes formula
+matches the buffers the kernel actually allocates, oversize tiles
+auto-shrink deterministically, impossible budgets raise an actionable
+ValueError (never a Mosaic crash), and the chosen plan is reported through
+``batch.exec_stats()`` — all with no TPU (interpret mode / pure python).
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from repro.core import batch
+from repro.core.cost_model import N_COST_ROWS
+from repro.core.sim import LAT_SAMPLES, topology
+from repro.kernels.event_loop import vmem
+from repro.kernels.event_loop.ops import run_events, run_events_pairs
+from repro.kernels.event_loop.ref import run_events_ref
+from repro.workloads import Workload, WorkloadOperands, lower
+
+ARGS = dict(tile=4, ev_chunk=256, T=12, N=3, K=6, P=2,
+            lat_samples=LAT_SAMPLES)
+
+
+def test_buffer_table_matches_kernel_allocations():
+    """The documented formula, buffer for buffer: every shape in the plan
+    equals the block/scratch shape ``ops.run_events`` builds for the same
+    parameters (the interpret-mode allocations the acceptance criterion
+    points at)."""
+    for repr32 in (False, True):
+        t = vmem.buffer_table(repr32=repr32, **ARGS)
+        tile, ev_chunk, T, N, K, P = (ARGS["tile"], ARGS["ev_chunk"],
+                                      ARGS["T"], ARGS["N"], ARGS["K"],
+                                      ARGS["P"])
+        # inputs: the in_specs block shapes
+        assert t["in.u1"][0] == (tile, ev_chunk)
+        assert t["in.locality"][0] == (tile, P * T)
+        assert t["in.cost_rows"][0] == (tile, P * N_COST_ROWS)
+        assert t["in.thread_node"][0] == (1, T)
+        assert t["in.lock_node"][0] == (1, K)
+        # outputs: one i64 ring vs an (hi, lo) i32 pair, same total bytes
+        if repr32:
+            assert t["out.lat.hi"][0] == (tile, LAT_SAMPLES)
+            assert (t["out.lat.hi"][1] + t["out.lat.lo"][1]
+                    == tile * LAT_SAMPLES * 8)
+            assert "out.lat" not in t
+        else:
+            assert t["out.lat"] == ((tile, LAT_SAMPLES),
+                                    tile * LAT_SAMPLES * 8)
+        # scratch: semantic i32 + clock buffers
+        assert t["scr.tail0"] == ((tile, K), tile * K * 4)
+        assert t["scr.pc"] == ((tile, T), tile * T * 4)
+        ready = (t["scr.ready.hi"][1] + t["scr.ready.lo"][1] if repr32
+                 else t["scr.ready"][1])
+        assert ready == tile * T * 8
+        busy = (t["scr.busy.hi"][1] + t["scr.busy.lo"][1] if repr32
+                else t["scr.busy"][1])
+        assert busy == tile * N * 8
+        # the double-buffered event streams carry the pipeline factor
+        assert t["in.u1"][1] == tile * ev_chunk * 4 * vmem.PIPELINE_FACTOR
+        # and the plan total is exactly the sum of the table
+        plan = vmem.plan_vmem(repr32=repr32, **ARGS)
+        assert plan.total_bytes == sum(b for _, b in t.values())
+
+
+def test_plan_matches_measured_pallas_buffers(monkeypatch):
+    """Measure, don't restate: intercept ``pl.pallas_call`` and diff the
+    planner's table against the in/out/scratch buffers the kernel
+    *actually* allocates in interpret mode — name for name, shape for
+    shape, byte for byte."""
+    from repro.kernels.event_loop import ops as el_ops
+    captured = {}
+    real = el_ops.pl.pallas_call
+
+    def spy(kernel, **kw):
+        captured.update(kw)
+        return real(kernel, **kw)
+
+    monkeypatch.setattr(el_ops.pl, "pallas_call", spy)
+    wl, tn, ln, ev = _replicas("alock", ev=300, B=5)
+    run_events_pairs("alock", 4, 2, 8, ev, wl, tn, ln, interpret=True,
+                     tile=2, ev_chunk=128, lat_samples=512)
+    plan = vmem.last_plan()
+    t = plan.breakdown          # insertion-ordered: in.* / out.* / scr.*
+
+    def names(prefix):
+        return [k for k in t if k.startswith(prefix)]
+
+    assert [t[k][0] for k in names("in.")] == \
+        [s.block_shape for s in captured["in_specs"]]
+    assert [t[k][0] for k in names("out.")] == \
+        [s.block_shape for s in captured["out_specs"]]
+    assert [t[k][0] for k in names("scr.")] == \
+        [tuple(s.shape) for s in captured["scratch_shapes"]]
+    # bytes = prod(shape) x 4 (all buffers are f32/i32 pairs under the
+    # native representation), x2 for the double-buffered event streams
+    for k, (shape, nbytes) in t.items():
+        factor = (vmem.PIPELINE_FACTOR
+                  if k in ("in.u1", "in.r2", "in.r3") else 1)
+        assert nbytes == int(np.prod(shape)) * 4 * factor, k
+
+
+def test_plan_representations_cost_identical_bytes():
+    """hi/lo i32 pairs occupy exactly the bytes of the i64 buffers they
+    replace — switching representation must never change the footprint."""
+    a = vmem.plan_vmem(repr32=False, **ARGS)
+    b = vmem.plan_vmem(repr32=True, **ARGS)
+    assert a.total_bytes == b.total_bytes
+
+
+def test_oversize_tile_auto_shrinks_deterministically():
+    kw = dict(ARGS, tile=64)
+    budget = 4 * 2**20
+    p1 = vmem.plan_vmem(repr32=True, budget=budget, **kw)
+    p2 = vmem.plan_vmem(repr32=True, budget=budget, **kw)
+    assert p1 == p2                       # deterministic
+    assert p1.shrunk and p1.requested_tile == 64
+    assert p1.tile < 64 and p1.total_bytes <= budget
+    # halving: the next-larger tile would NOT have fit
+    over = vmem.plan_vmem(repr32=True, **dict(kw, tile=p1.tile * 2))
+    assert over.total_bytes > budget
+    # the dict view benchmarks serialize
+    d = p1.as_dict()
+    assert d["shrunk"] and d["tile"] == p1.tile and d["budget"] == budget
+
+
+def test_impossible_budget_raises_actionable_error():
+    with pytest.raises(ValueError, match="lat_samples"):
+        vmem.plan_vmem(repr32=True, budget=10_000, **ARGS)
+    # bad arguments are real errors too
+    with pytest.raises(ValueError, match="tile"):
+        vmem.plan_vmem(repr32=True, **dict(ARGS, tile=0))
+    with pytest.raises(ValueError, match="budget"):
+        vmem.plan_vmem(repr32=True, budget=0, **ARGS)
+
+
+def _replicas(alg="alock", ev=700, B=1):
+    ws = [lower(Workload(alg, 2, 2, 8, locality=0.9, seed=4 + s), ev)
+          for s in range(B)]
+    wl = WorkloadOperands(
+        *(jnp.asarray(np.stack([np.asarray(getattr(w.operands, f))
+                                for w in ws]))
+          for f in WorkloadOperands._fields))
+    tn, ln, _ = topology(alg, 2, 2, 8)
+    return wl, tn, ln, ev
+
+
+def test_budgeted_run_shrinks_tile_and_stays_bitwise():
+    """An explicit budget that cannot hold the requested tile must shrink
+    it — and the shrunk run stays bitwise-equal to the oracle (auto-shrink
+    is never allowed to become a silent wrong answer)."""
+    wl, tn, ln, ev = _replicas(B=6)
+    lat_samples = 1024
+    # 6 replicas at lat_samples=1024 / ev_chunk=128 cost ~12 KiB per tile
+    # row; 24 KiB forces the 6 -> 3 -> 1 halving path
+    budget = 24 * 1024
+    with enable_x64():
+        ref = [np.asarray(r) for r in
+               run_events_ref("alock", 4, 2, 8, ev, wl, tn, ln,
+                              lat_samples=lat_samples)]
+        out = run_events("alock", 4, 2, 8, ev, wl, tn, ln, interpret=True,
+                         representation="i32pair", tile=8, ev_chunk=128,
+                         lat_samples=lat_samples, vmem_budget=budget)
+    plan = vmem.last_plan()
+    assert plan is not None and plan.shrunk
+    assert plan.requested_tile == 6 and plan.tile == 1
+    assert plan.total_bytes <= budget
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(a, np.asarray(b))
+
+
+def test_plan_surfaces_through_exec_stats():
+    batch.reset_exec_stats()
+    assert batch.exec_stats()["vmem_plan"] is None
+    wl, tn, ln, ev = _replicas("mcs")
+    run_events_pairs("mcs", 4, 2, 8, ev, wl, tn, ln, interpret=True,
+                     lat_samples=256, ev_chunk=256)
+    st = batch.exec_stats()
+    assert st["vmem_plan"] is not None
+    assert st["vmem_plan"]["representation"] == "i32pair"
+    assert st["vmem_plan"]["lat_samples"] == 256
+    batch.reset_exec_stats()
+    assert batch.exec_stats()["vmem_plan"] is None
+
+
+def test_impossible_budget_through_run_events():
+    """The planner error reaches the caller as ValueError, not a trace-
+    or Mosaic-level failure."""
+    wl, tn, ln, ev = _replicas()
+    with pytest.raises(ValueError, match="budget"):
+        run_events_pairs("alock", 4, 2, 8, ev, wl, tn, ln, interpret=True,
+                         vmem_budget=1024)
