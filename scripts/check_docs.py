@@ -4,9 +4,12 @@
 Two gates, both wired into the CI ``docs`` leg:
 
   1. **Doctests** — every ``>>>`` example in the public-API module/function
-     docstrings (the module list below) runs for real, ``python -m
-     doctest`` style. An example that drifts from the code fails the
-     build, so the docstrings stay runnable documentation.
+     docstrings runs for real, ``python -m doctest`` style. Modules are
+     **auto-discovered**: any ``src/repro/**/*.py`` whose source contains
+     a ``>>>`` example is collected — there is no list to forget to
+     update. A discovered module that fails to import, or whose examples
+     doctest collects zero of (``>>>`` outside a docstring — written but
+     silently never run), fails the build.
   2. **Reference check** — every markdown link target and every
      backtick-quoted file path in ``docs/*.md`` and ``README.md`` must
      exist in the tree, and dotted ``repro.*`` / ``benchmarks.*`` module
@@ -27,20 +30,23 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 
-# The public API surface whose examples must stay runnable. Order is
-# cheap-to-expensive so failures surface fast.
-DOCTEST_MODULES = [
-    "repro.core.cost_model",
-    "repro.workloads.spec",
-    "repro.workloads.lower",
-    "repro.workloads",
-    "repro.experiments.slo",
-    "repro.kernels.event_loop.i32pair",
-    "repro.kernels.event_loop.vmem",
-    "repro.core.batch",
-    "repro.experiments",
-    "repro.kernels.event_loop.ops",
-]
+def discover_doctest_modules() -> list[str]:
+    """Every module under ``src/repro`` whose source contains a ``>>>``
+    example, as dotted names (``__init__.py`` maps to its package).
+    Discovery is textual so a module whose examples doctest cannot
+    collect (e.g. ``>>>`` in a plain string) is still discovered — and
+    then *fails* below, instead of silently never running."""
+    src = REPO / "src"
+    out = []
+    for path in sorted((src / "repro").rglob("*.py")):
+        if ">>>" not in path.read_text(encoding="utf-8"):
+            continue
+        rel = path.relative_to(src).with_suffix("")
+        parts = rel.parts
+        if parts[-1] == "__init__":
+            parts = parts[:-1]
+        out.append(".".join(parts))
+    return out
 
 # docs sources scanned by the reference checker
 DOC_FILES = ["README.md", *sorted(
@@ -67,6 +73,11 @@ def run_doctests(names: list[str]) -> list[str]:
         if res.failed:
             failures.append(f"doctest {name}: {res.failed} of "
                             f"{res.attempted} example(s) failed")
+        elif res.attempted == 0:
+            failures.append(
+                f"doctest {name}: source contains >>> examples but "
+                f"doctest collected none — examples outside a docstring "
+                f"are written-but-never-run documentation")
     return failures
 
 
@@ -131,7 +142,7 @@ def main() -> int:
 
     failures = check_doc_references(DOC_FILES)
     if not args.skip_doctests:
-        failures += run_doctests(DOCTEST_MODULES)
+        failures += run_doctests(discover_doctest_modules())
 
     if failures:
         print("\nDOCS CHECK FAILED:", flush=True)

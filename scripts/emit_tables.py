@@ -1,7 +1,6 @@
 """Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from artifacts."""
 import glob
 import json
-import sys
 
 
 def rows(pattern="artifacts/dryrun/*.json"):

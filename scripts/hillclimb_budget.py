@@ -20,7 +20,7 @@ from repro.configs import get_config
 from repro.launch import mesh as mesh_lib
 from repro.launch.hlo_analysis import parse_collectives
 from repro.models import model as M
-from repro.models.params import ParamSpec, is_spec, tree_structs
+from repro.models.params import is_spec, tree_structs
 from repro.parallel import sharding as sh
 from repro.parallel.collectives import make_budgeted_steps
 from repro.train.optimizer import OptConfig, opt_state_specs

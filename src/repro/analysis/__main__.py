@@ -1,0 +1,115 @@
+"""CLI for the static jaxpr lint: ``python -m repro.analysis``.
+
+Modes (mutually exclusive; default is a lint report):
+
+  (default)    trace the entrypoint catalog, run every rule, print the
+               findings; exit 0 regardless
+  --strict     same, but exit 1 when any finding fires (the CI lint leg)
+  --selftest   run the known-bad fixture corpus and verify every rule
+               family still fires (>= 4 distinct rule ids, all 4
+               families); exit 1 when a family has gone blind
+  --imports    static import-graph report of src/repro modules no entry
+               package can reach (report-only; always exit 0)
+
+Scoping/output knobs: ``--scenarios a,b`` restricts tracing to named
+scenarios, ``--events N`` sets the traced event-count (shapes only),
+``--rules M001,X001`` restricts the rule set, ``--json PATH`` writes
+machine-readable findings.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _lint(args) -> int:
+    from repro.analysis.entrypoints import trace_entrypoints
+    from repro.analysis.rules import RULES, run_rules
+    scenarios = args.scenarios.split(",") if args.scenarios else None
+    rules = args.rules.split(",") if args.rules else None
+    unknown = set(rules or ()) - set(RULES)
+    if unknown:
+        print(f"unknown rule ids: {', '.join(sorted(unknown))} "
+              f"(known: {', '.join(sorted(RULES))})", file=sys.stderr)
+        return 2
+    eps = trace_entrypoints(scenarios=scenarios, n_events=args.events)
+    findings = run_rules(eps, rules=rules)
+    print(f"traced {len(eps)} entrypoints "
+          f"({len({e.meta.get('shape_key') for e in eps})} compile "
+          f"buckets); {len(RULES) if rules is None else len(rules)} rules; "
+          f"{len(findings)} finding(s)")
+    for f in findings:
+        print(f.format())
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as fh:
+            json.dump([vars(f) for f in findings], fh, indent=2)
+        print(f"wrote {args.json}")
+    if findings:
+        return 1 if args.strict else 0
+    print("lint-clean.")
+    return 0
+
+
+def _selftest(args) -> int:
+    from repro.analysis.fixtures import run_corpus
+    from repro.analysis.rules import RULES
+    per_family = run_corpus()
+    fired = {f.rule for fs in per_family.values() for f in fs}
+    ok = True
+    for family, fs in sorted(per_family.items()):
+        ids = sorted({f.rule for f in fs})
+        status = "ok" if fs else "BLIND"
+        ok &= bool(fs)
+        print(f"{family:22s} {status:6s} "
+              f"({len(fs)} finding(s): {', '.join(ids) or '-'})")
+    families = {RULES[r].family for r in fired}
+    print(f"corpus: {len(fired)} distinct rule ids across "
+          f"{len(families)} families")
+    if len(fired) < 4 or len(families) < 4:
+        print("selftest FAILED: need >= 4 rule ids across all 4 families",
+              file=sys.stderr)
+        return 1
+    if not ok:
+        print("selftest FAILED: a rule family no longer flags its "
+              "known-bad fixture", file=sys.stderr)
+        return 1
+    print("selftest passed.")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static jaxpr lint over the engine's traced "
+                    "entrypoints (no execution)")
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--strict", action="store_true",
+                      help="exit 1 when any finding fires")
+    mode.add_argument("--selftest", action="store_true",
+                      help="run the known-bad fixture corpus")
+    mode.add_argument("--imports", action="store_true",
+                      help="import-graph dead-weight report")
+    ap.add_argument("--scenarios", default="",
+                    help="comma-separated scenario names (default: all)")
+    ap.add_argument("--events", type=int, default=None,
+                    help="traced event count (shapes only; default 2048)")
+    ap.add_argument("--rules", default="",
+                    help="comma-separated rule ids (default: all)")
+    ap.add_argument("--json", default="",
+                    help="write findings as JSON to this path")
+    args = ap.parse_args(argv)
+    if args.events is None:
+        from repro.analysis.entrypoints import DEFAULT_TRACE_EVENTS
+        args.events = DEFAULT_TRACE_EVENTS
+    if args.imports:
+        from repro.analysis.imports import report
+        print(report())
+        return 0
+    if args.selftest:
+        return _selftest(args)
+    return _lint(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,162 @@
+"""Static import-graph report: which ``src/repro`` modules are dead weight.
+
+Parses every module under ``src/repro`` with ``ast`` (nothing is
+imported or executed), resolves ``import``/``from``-imports — including
+relative and function-local ones — to edges between repo modules, and
+walks reachability from the engine's entry packages
+(:data:`ROOT_PACKAGES`). Modules no root can reach are *unreachable*:
+nothing the engine, the experiment registry, the coordinator or the
+serving layer runs can ever import them.
+
+Report-only by design: unreachable modules are candidates for deletion or
+for wiring into an entrypoint, not CI failures — the CI ``lint`` leg
+uploads the report as an artifact (``python -m repro.analysis --imports``)
+so the drift is visible per-PR without blocking anyone.
+
+Resolution rules:
+
+  * ``from repro.a.b import c`` edges to ``repro.a.b.c`` when that is a
+    module, else to ``repro.a.b``;
+  * importing ``repro.a.b`` also edges to package ``repro.a`` (its
+    ``__init__`` runs) — namespace dirs without an ``__init__.py`` (e.g.
+    ``repro`` itself, ``coord``, ``serve``) contribute no such edge;
+  * relative imports resolve against the importing module's package;
+  * imports of modules outside ``src/repro`` are ignored.
+
+>>> g = build_graph()
+>>> "repro.core.sim" in g.modules
+True
+>>> "repro.kernels.event_loop.i32pair" in g.reachable()
+True
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+
+__all__ = ["ROOT_PACKAGES", "ImportGraph", "build_graph", "report"]
+
+#: reachability roots: the packages whose public surface the engine, the
+#: scenario registry, the coordinator and the serving layer expose. For a
+#: namespace package (no ``__init__.py``) the roots are its direct child
+#: modules.
+ROOT_PACKAGES = ("repro.core", "repro.kernels", "repro.workloads",
+                 "repro.experiments", "repro.coord", "repro.serve",
+                 "repro.analysis")
+
+
+def _src_root() -> Path:
+    return Path(__file__).resolve().parent.parent
+
+
+@dataclass
+class ImportGraph:
+    modules: dict = field(default_factory=dict)   # name -> Path
+    edges: dict = field(default_factory=dict)     # name -> set[str]
+
+    def roots(self) -> list:
+        out = []
+        for pkg in ROOT_PACKAGES:
+            if pkg in self.modules:               # real package: __init__
+                out.append(pkg)
+            else:                                 # namespace: direct children
+                prefix = pkg + "."
+                out += [m for m in self.modules
+                        if m.startswith(prefix)
+                        and "." not in m[len(prefix):]]
+        return sorted(set(out))
+
+    def reachable(self) -> set:
+        seen, todo = set(), list(self.roots())
+        while todo:
+            m = todo.pop()
+            if m in seen:
+                continue
+            seen.add(m)
+            todo += [d for d in self.edges.get(m, ()) if d not in seen]
+        return seen
+
+    def unreachable(self) -> list:
+        return sorted(set(self.modules) - self.reachable())
+
+
+def _module_name(path: Path, src: Path) -> str:
+    rel = path.relative_to(src).with_suffix("")
+    parts = ("repro",) + rel.parts
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _resolve(target: str, modules: dict) -> list:
+    """Longest known prefix of a dotted import target (with its package
+    chain), or [] for anything outside the repo."""
+    out = []
+    parts = target.split(".")
+    for i in range(len(parts), 0, -1):
+        cand = ".".join(parts[:i])
+        if cand in modules:
+            out.append(cand)
+            # packages up the chain run their __init__ on import
+            for j in range(i - 1, 0, -1):
+                pkg = ".".join(parts[:j])
+                if pkg in modules:
+                    out.append(pkg)
+            break
+    return out
+
+
+def build_graph(src: Path | None = None) -> ImportGraph:
+    src = Path(src) if src is not None else _src_root()
+    g = ImportGraph()
+    for path in sorted(src.rglob("*.py")):
+        g.modules[_module_name(path, src)] = path
+    for name, path in g.modules.items():
+        deps = g.edges.setdefault(name, set())
+        try:
+            tree = ast.parse(path.read_text(encoding="utf-8"))
+        except SyntaxError:
+            continue
+        pkg_parts = name.split(".")[:-1] if not _is_pkg(name, g.modules) \
+            else name.split(".")
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    deps.update(_resolve(alias.name, g.modules))
+            elif isinstance(node, ast.ImportFrom):
+                if node.level:                    # relative import
+                    base = pkg_parts[:len(pkg_parts) - node.level + 1]
+                    mod = ".".join(base + ([node.module]
+                                           if node.module else []))
+                else:
+                    mod = node.module or ""
+                for alias in node.names:
+                    hits = _resolve(f"{mod}.{alias.name}", g.modules) \
+                        or _resolve(mod, g.modules)
+                    deps.update(hits)
+        deps.discard(name)
+    return g
+
+
+def _is_pkg(name: str, modules: dict) -> bool:
+    path = modules.get(name)
+    return path is not None and path.name == "__init__.py"
+
+
+def report(src: Path | None = None) -> str:
+    """Human-readable unreachability report (the ``--imports`` output)."""
+    g = build_graph(src)
+    dead = g.unreachable()
+    lines = [f"import graph: {len(g.modules)} modules under src/repro, "
+             f"{len(g.roots())} roots, "
+             f"{len(g.reachable())} reachable, {len(dead)} unreachable",
+             f"roots: {', '.join(ROOT_PACKAGES)}", ""]
+    if not dead:
+        lines.append("no unreachable modules.")
+    else:
+        lines.append("unreachable from every entry package "
+                     "(deletion / wiring candidates):")
+        for m in dead:
+            lines.append(f"  {m}  ({g.modules[m].relative_to(_src_root())})")
+    return "\n".join(lines)

@@ -1,0 +1,103 @@
+"""Generic jaxpr equation walker with sub-jaxpr recursion + provenance.
+
+Every rule in ``repro.analysis.rules`` consumes the same traversal: a
+depth-first walk over a (closed) jaxpr's equations that recurses into
+*every* sub-jaxpr an equation carries in its params — ``pjit``'s inner
+jaxpr, ``scan``/``while`` body/cond jaxprs, ``cond``'s branch list,
+``shard_map``'s body and — the one the Mosaic rules care about —
+``pallas_call``'s kernel jaxpr. Recursion is structural (any param value
+that *is* or *wraps* a jaxpr), so new higher-order primitives are walked
+without code changes here.
+
+Each visited equation is yielded as a :class:`EqnSite` carrying
+
+  * ``path`` — the chain of enclosing higher-order primitives, e.g.
+    ``"pjit/pallas_call/scan"`` (the outermost call is ``""``);
+  * ``in_kernel`` — True once the walk has crossed a ``pallas_call``
+    boundary, i.e. the equation executes *inside* the Mosaic kernel
+    (where TPU vector-unit restrictions apply);
+  * ``src`` — best-effort ``file:line`` provenance of the traced line.
+
+>>> import jax, jax.numpy as jnp
+>>> jx = jax.make_jaxpr(lambda x: jax.lax.scan(
+...     lambda c, t: (c + t, c), x, jnp.ones(3)))(1.0)
+>>> names = [s.eqn.primitive.name for s in walk_jaxpr(jx.jaxpr)]
+>>> "scan" in names, "add" in names
+(True, True)
+>>> {s.path for s in walk_jaxpr(jx.jaxpr) if s.eqn.primitive.name == "add"}
+{'scan'}
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Iterator
+
+__all__ = ["EqnSite", "walk_jaxpr", "all_avals", "eqn_src"]
+
+
+@dataclass(frozen=True)
+class EqnSite:
+    """One visited equation, with where-it-lives context."""
+    eqn: Any            # jax.core.JaxprEqn
+    path: str           # "/"-joined enclosing higher-order primitives
+    depth: int
+    in_kernel: bool     # inside a pallas_call kernel jaxpr
+
+    @property
+    def src(self) -> str:
+        return eqn_src(self.eqn)
+
+
+def eqn_src(eqn) -> str:
+    """Best-effort ``file:line`` of the python line that traced ``eqn``."""
+    try:
+        from jax._src import source_info_util
+        return source_info_util.summarize(eqn.source_info)
+    except Exception:
+        return "<unknown>"
+
+
+def _sub_jaxprs(eqn) -> Iterator[Any]:
+    """Every jaxpr an equation's params reference (ClosedJaxpr unwrapped;
+    lists/tuples — e.g. ``cond``'s branches — flattened)."""
+    for val in eqn.params.values():
+        items = val if isinstance(val, (list, tuple)) else (val,)
+        for item in items:
+            inner = getattr(item, "jaxpr", item)   # ClosedJaxpr -> Jaxpr
+            if hasattr(inner, "eqns"):
+                yield inner
+
+
+def walk_jaxpr(jaxpr, path: str = "", depth: int = 0,
+               in_kernel: bool = False) -> Iterator[EqnSite]:
+    """Depth-first over ``jaxpr.eqns``, recursing into sub-jaxprs.
+
+    ``jaxpr`` may be open or closed. Parents are yielded before their
+    sub-jaxpr bodies; ``in_kernel`` turns (and stays) True below a
+    ``pallas_call`` equation.
+    """
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)         # ClosedJaxpr -> Jaxpr
+    for eqn in jaxpr.eqns:
+        yield EqnSite(eqn, path, depth, in_kernel)
+        name = eqn.primitive.name
+        sub_path = f"{path}/{name}" if path else name
+        sub_kernel = in_kernel or name == "pallas_call"
+        for sub in _sub_jaxprs(eqn):
+            yield from walk_jaxpr(sub, sub_path, depth + 1, sub_kernel)
+
+
+def all_avals(jaxpr, include_invars: bool = True) -> Iterator[tuple]:
+    """Every abstract value in the (recursively walked) jaxpr, as
+    ``(aval, where)`` pairs — invars/constvars of the top jaxpr plus each
+    equation's operands and outputs. ``where`` is a human-readable site."""
+    top = getattr(jaxpr, "jaxpr", jaxpr)
+    if include_invars:
+        for v in list(top.invars) + list(top.constvars):
+            yield v.aval, "<entry operand>"
+    for site in walk_jaxpr(jaxpr):
+        for v in list(site.eqn.invars) + list(site.eqn.outvars):
+            aval = getattr(v, "aval", None)
+            if aval is not None:
+                where = (f"{site.path}/{site.eqn.primitive.name}"
+                         if site.path else site.eqn.primitive.name)
+                yield aval, f"{where} @ {site.src}"

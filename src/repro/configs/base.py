@@ -7,7 +7,7 @@ executed as a ``lax.scan`` over ``repeats`` stacked parameter copies
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Any
 
 import jax.numpy as jnp

@@ -11,7 +11,7 @@ from __future__ import annotations
 import threading
 import time
 import zlib
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.core.lock_table import LockTable
 

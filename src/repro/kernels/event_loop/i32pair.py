@@ -138,8 +138,8 @@ def pmax2(a, b):
 def pgather(oh, p, axis=1):
     """One-hot gather: ``oh`` has exactly one True per reduced row. Sum
     dtypes are pinned to int32 so enabling x64 cannot widen them."""
-    return (jnp.sum(jnp.where(oh, p[0], 0), axis=axis, dtype=I32),
-            jnp.sum(jnp.where(oh, p[1], 0), axis=axis, dtype=I32))
+    return (jnp.sum(jnp.where(oh, p[0], np.int32(0)), axis=axis, dtype=I32),
+            jnp.sum(jnp.where(oh, p[1], np.int32(0)), axis=axis, dtype=I32))
 
 
 def reduce_min_masked(p, mask, axis=1):
@@ -174,7 +174,11 @@ def argmin_masked(p, mask=None, axis=1):
     ml = jnp.min(jnp.where(cand, _u(fl), _INT32_MAX), axis=axis,
                  keepdims=True)
     win = cand & (_u(fl) == ml)
-    return jnp.argmax(win, axis=axis).astype(I32)
+    # first-True index as a masked-iota min: jnp.argmax's index dtype is
+    # int64 under x64, which Mosaic cannot lower (and 1-D iota is equally
+    # rejected, hence the broadcasted form). `win` has >= 1 True per row.
+    idx = jax.lax.broadcasted_iota(I32, win.shape, axis)
+    return jnp.min(jnp.where(win, idx, _INT32_MAX), axis=axis)
 
 
 def mod_pow2(p, m: int):

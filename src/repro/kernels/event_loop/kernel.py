@@ -67,6 +67,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.experimental import pallas as pl
 
@@ -84,6 +85,22 @@ def _iota(shape, dim):
     """2D index grid — Mosaic rejects 1D iota, so every index vector in
     the kernel is built broadcasted."""
     return lax.broadcasted_iota(I32, shape, dim)
+
+
+#: python-int constants (machine PCs, opcodes, dims) are weak-typed: under
+#: x64 they widen `jnp.where` branches to int64, which Mosaic cannot lower.
+#: Every such constant is pinned at its use site (repro.analysis rule M001).
+_I = np.int32
+
+
+def _select(conds, vals, default):
+    """``jnp.select`` semantics (first true condition wins) as a reversed
+    ``jnp.where`` chain — jnp.select lowers through an argmax whose index
+    dtype is int64 under x64, poisoning the Mosaic kernel jaxpr."""
+    acc = default
+    for c, v in zip(reversed(conds), reversed(vals)):
+        acc = jnp.where(c, v, acc)
+    return acc
 
 
 class _I64Clocks:
@@ -264,11 +281,13 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
         """(tile, T) gathered at per-row thread idx -> (tile,). The sum
         dtype is pinned: under x64 ``jnp.sum(int32)`` would widen to the
         default int and poison every downstream carry dtype."""
-        return jnp.sum(jnp.where(tids == idx[:, None], arr, 0), axis=1,
+        return jnp.sum(jnp.where(tids == idx[:, None], arr,
+                                 arr.dtype.type(0)), axis=1,
                        dtype=arr.dtype)
 
     def gat_k(arr, idx):
-        return jnp.sum(jnp.where(kio == idx[:, None], arr, 0), axis=1,
+        return jnp.sum(jnp.where(kio == idx[:, None], arr,
+                                 arr.dtype.type(0)), axis=1,
                        dtype=arr.dtype)
 
     state = (s_t0[...], s_t1[...], s_vic[...], s_pc[...], s_bud[...],
@@ -284,23 +303,28 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
         # -- phase resolve (pure function of the global event index) -------
         gi = j * ev_chunk + e
         if P > 1:
-            ph = jnp.sum((gi >= edges).astype(I32), axis=1) - 1  # (tile,)
+            ph = jnp.sum((gi >= edges).astype(I32), axis=1,
+                         dtype=I32) - 1              # (tile,)
             ohP = pio == ph[:, None]
-            act_row = jnp.sum(jnp.where(ohP[:, :, None], actp, 0), axis=1)
-            loc_row = jnp.sum(jnp.where(ohP[:, :, None], locp, 0.0),
+            act_row = jnp.sum(jnp.where(ohP[:, :, None], actp, _I(0)),
+                              axis=1, dtype=I32)
+            loc_row = jnp.sum(jnp.where(ohP[:, :, None], locp,
+                                        np.float32(0)),
                               axis=1, dtype=jnp.float32)
-            think_e = jnp.sum(jnp.where(ohP, think, 0), axis=1, dtype=I32)
+            think_e = jnp.sum(jnp.where(ohP, think, _I(0)), axis=1,
+                              dtype=I32)
             # phase-indexed cost rows + ALock budgets (sum dtypes pinned,
             # same x64 caveat as gat_t)
-            binit = jnp.sum(jnp.where(ohP[:, :, None], binitp, 0), axis=1,
-                            dtype=I32)               # (tile, 2)
-            cst = jnp.sum(jnp.where(ohP[:, :, None], cstp, 0), axis=1,
+            binit = jnp.sum(jnp.where(ohP[:, :, None], binitp, _I(0)),
+                            axis=1, dtype=I32)       # (tile, 2)
+            cst = jnp.sum(jnp.where(ohP[:, :, None], cstp, _I(0)), axis=1,
                           dtype=I32)                 # (tile, 8)
 
             # phase boundary: rejoining threads resume from the cluster's
             # current clock (mirror of the XLA loop's rejoin bump)
-            ohPp = pio == jnp.maximum(ph - 1, 0)[:, None]
-            was_act = jnp.sum(jnp.where(ohPp[:, :, None], actp, 0), axis=1)
+            ohPp = pio == jnp.maximum(ph - _I(1), _I(0))[:, None]
+            was_act = jnp.sum(jnp.where(ohPp[:, :, None], actp, _I(0)),
+                              axis=1, dtype=I32)
             rejoin = (jnp.any(gi == edges, axis=1)[:, None]
                       & (act_row != 0) & (was_act == 0))
             cont_min = C.reduce_min_masked(ready,
@@ -336,10 +360,10 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
         r3e = lax.dynamic_index_in_dim(r3s, e, 1, keepdims=False)
         # thread-dependent half of the locality draw: same f32 compare as
         # the XLA loop's uniform(k1) < locality[ph, tid]
-        loc_t = jnp.sum(jnp.where(ohT, loc_row, 0.0), axis=1,
+        loc_t = jnp.sum(jnp.where(ohT, loc_row, np.float32(0)), axis=1,
                         dtype=jnp.float32)
         ge = u1e < loc_t
-        other = (mynode + 1 + r2e) % N
+        other = (mynode + _I(1) + r2e) % _I(N)
         node_w = jnp.where(ge, mynode, other).astype(I32)
         new_t = node_w * kpn + r3e
         new_c = (node_w != mynode).astype(I32)
@@ -385,22 +409,22 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
             t1 = jnp.where(m1, me[:, None], t1)
             r0 = (is_rc & solo & (ch == 0))[:, None] & ohK
             r1 = (is_rc & solo & (ch == 1))[:, None] & ohK
-            t0 = jnp.where(r0, 0, t0)
-            t1 = jnp.where(r1, 0, t1)
+            t0 = jnp.where(r0, _I(0), t0)
+            t1 = jnp.where(r1, _I(0), t1)
             vmask = (is_sv | is_svr)[:, None] & ohK
             vic = jnp.where(vmask, ch[:, None], vic)
         else:
             t0 = jnp.where(is_swap[:, None] & ohK, me[:, None], t0)
-            t0 = jnp.where((is_rc & solo)[:, None] & ohK, 0, t0)
+            t0 = jnp.where((is_rc & solo)[:, None] & ohK, _I(0), t0)
             t0 = jnp.where((is_slc & free)[:, None] & ohK, me[:, None], t0)
-            t0 = jnp.where(is_slr[:, None] & ohK, 0, t0)
+            t0 = jnp.where(is_slr[:, None] & ohK, _I(0), t0)
 
         # -- per-thread descriptors ----------------------------------------
         prv = jnp.where(is_swap[:, None] & ohT, prev_val[:, None], prv)
-        nxt = jnp.where(is_ncs[:, None] & ohT, 0, nxt)
+        nxt = jnp.where(is_ncs[:, None] & ohT, _I(0), nxt)
         nxt = jnp.where(is_wn[:, None] & oh_pred, me[:, None], nxt)
-        bud_tid_val = jnp.select([is_ncs, is_swap, is_pwr],
-                                 [jnp.full_like(bd, -1), Bc, Bc], bd)
+        bud_tid_val = _select([is_ncs, is_swap, is_pwr],
+                              [jnp.full_like(bd, -1), Bc, Bc], bd)
         swap_bud = (is_swap & empty) if is_alock else jnp.zeros_like(is_swap)
         bud_tid_m = is_ncs | swap_bud | (is_pwr & can)
         bud = jnp.where(bud_tid_m[:, None] & ohT, bud_tid_val[:, None], bud)
@@ -411,25 +435,26 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
         # -- next PC (the lax.switch, as one select over PC classes) -------
         first = mc.SL_CAS if is_spin else mc.SWAP
         if is_alock:
-            pc_swap = jnp.where(empty, mc.SET_VICTIM, mc.WRITE_NEXT)
-            pc_sb = jnp.where(bd == -1, mc.SPIN_BUDGET,
-                              jnp.where(bd == 0, mc.SET_VICTIM_R, mc.CS))
+            pc_swap = jnp.where(empty, _I(mc.SET_VICTIM), _I(mc.WRITE_NEXT))
+            pc_sb = jnp.where(bd == -1, _I(mc.SPIN_BUDGET),
+                              jnp.where(bd == 0, _I(mc.SET_VICTIM_R),
+                                        _I(mc.CS)))
         else:
-            pc_swap = jnp.where(empty, mc.CS, mc.WRITE_NEXT)
-            pc_sb = jnp.where(bd == -1, mc.SPIN_BUDGET, mc.CS)
-        new_pc = jnp.select(
+            pc_swap = jnp.where(empty, _I(mc.CS), _I(mc.WRITE_NEXT))
+            pc_sb = jnp.where(bd == -1, _I(mc.SPIN_BUDGET), _I(mc.CS))
+        new_pc = _select(
             [is_ncs, is_swap, is_wn, is_sb, is_sv, is_svr, is_pw, is_pwr,
              is_cs, is_rc, is_sn, is_ps, is_slc, is_slr],
             [jnp.full_like(p, first), pc_swap,
              jnp.full_like(p, mc.SPIN_BUDGET), pc_sb,
              jnp.full_like(p, mc.PET_WAIT), jnp.full_like(p, mc.PET_WAIT_R),
-             jnp.where(can, mc.CS, mc.PET_WAIT),
-             jnp.where(can, mc.CS, mc.PET_WAIT_R),
+             jnp.where(can, _I(mc.CS), _I(mc.PET_WAIT)),
+             jnp.where(can, _I(mc.CS), _I(mc.PET_WAIT_R)),
              jnp.full_like(p, mc.SL_REL if is_spin else mc.REL_CAS),
-             jnp.where(solo, mc.NCS, mc.SPIN_NEXT),
-             jnp.where(has_succ, mc.PASS, mc.SPIN_NEXT),
+             jnp.where(solo, _I(mc.NCS), _I(mc.SPIN_NEXT)),
+             jnp.where(has_succ, _I(mc.PASS), _I(mc.SPIN_NEXT)),
              jnp.full_like(p, mc.NCS),
-             jnp.where(free, mc.CS, mc.SL_CAS),
+             jnp.where(free, _I(mc.CS), _I(mc.SL_CAS)),
              jnp.full_like(p, mc.NCS)],
             p).astype(I32)
         pc = jnp.where(ohT, new_pc[:, None], pc)
@@ -439,24 +464,25 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
         pred_node = gat_t(tn, pred)
         succ_node = gat_t(tn, succ)
         if is_alock:
-            lock_code = jnp.where(ch == 0, OP_LOCAL, OP_RDMA)
-            peer_local = OP_LOCAL
+            lock_code = jnp.where(ch == 0, _I(OP_LOCAL), _I(OP_RDMA))
+            peer_local = _I(OP_LOCAL)
         else:
-            lock_code = jnp.where(lnode == mynode, OP_LOOP, OP_RDMA)
-            peer_local = OP_LOOP
+            lock_code = jnp.where(lnode == mynode, _I(OP_LOOP), _I(OP_RDMA))
+            peer_local = _I(OP_LOOP)
         lock_m = (is_swap | is_sv | is_svr | is_pw | is_pwr | is_rc
                   | is_slc | is_slr)
-        code = jnp.select(
+        code = _select(
             [is_ncs, is_wn, is_sb, is_cs, is_sn, is_ps, lock_m],
             [jnp.full_like(p, OP_THINK),
-             jnp.where(pred_node == mynode, peer_local, OP_RDMA),
-             jnp.where(bd == -1, OP_POLL, OP_LOCAL),
+             jnp.where(pred_node == mynode, peer_local, _I(OP_RDMA)),
+             jnp.where(bd == -1, _I(OP_POLL), _I(OP_LOCAL)),
              jnp.full_like(p, OP_CS),
-             jnp.where(has_succ, OP_LOCAL, OP_POLL),
-             jnp.where(succ_node == mynode, peer_local, OP_RDMA),
-             lock_code], 0).astype(I32)
-        tnode = jnp.select([is_wn, is_ps, lock_m],
-                           [pred_node, succ_node, lnode], 0).astype(I32)
+             jnp.where(has_succ, _I(OP_LOCAL), _I(OP_POLL)),
+             jnp.where(succ_node == mynode, peer_local, _I(OP_RDMA)),
+             lock_code], jnp.full_like(p, 0)).astype(I32)
+        tnode = _select([is_wn, is_ps, lock_m],
+                        [pred_node, succ_node, lnode],
+                        jnp.full_like(p, 0)).astype(I32)
 
         # -- cost application (identical int arithmetic to _run_events) ----
         is_rdma = (code == OP_RDMA) | (code == OP_LOOP)
@@ -467,7 +493,7 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
         start = C.max2(now, busy_t)
         fin = C.add_i32(start, svc)
         busy = C.where(is_rdma[:, None] & ohN, C.col(fin), busy)
-        dt_plain = jnp.select(
+        dt_plain = _select(
             [code == OP_LOCAL, code == OP_POLL, code == OP_CS,
              code == OP_THINK],
             [cst[:, 0], cst[:, 1], cst[:, 2], think_e], cst[:, 0])
@@ -478,7 +504,7 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
         # -- completion accounting (latency ring, counters) ----------------
         finished = (is_rc | is_ps | is_slr) & (new_pc == mc.NCS)
         lat_val = C.sub(now, C.gather(ohT, opst))
-        slot = latn % lat_samples
+        slot = latn % _I(lat_samples)
         if repr32:
             # masked one-hot accumulate over the sample axis — bitwise
             # the scatter below, but expressible in Mosaic (which rejects
@@ -491,7 +517,7 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
             lat = lat.at[rows, slot].set(
                 jnp.where(finished, lat_val, lat[rows, slot]))
         latn = latn + finished.astype(I32)
-        done = done + jnp.where(ohT & finished[:, None], 1, 0).astype(I32)
+        done = done + jnp.where(ohT & finished[:, None], _I(1), _I(0))
         opst = C.where(is_ncs[:, None] & ohT, C.col(new_ready), opst)
         reacq = reacq + (is_sb & (new_pc == mc.SET_VICTIM_R)).astype(I32)
         npass = npass + is_ps.astype(I32)
@@ -503,7 +529,17 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
         return jax.tree_util.tree_map(
             lambda n, o: jnp.where(valid, n, o), new_st, st)
 
-    state = lax.fori_loop(0, ev_chunk, step, state)
+    if repr32:
+        # explicit i32-counter while_loop: under x64, fori_loop's induction
+        # variable is int64 — the one 64-bit aval Mosaic would still see in
+        # this kernel. The i64 fast path keeps the fori_loop below.
+        carry = lax.while_loop(
+            lambda c: c[0] < _I(ev_chunk),
+            lambda c: (c[0] + _I(1), step(c[0], c[1])),
+            (jnp.zeros((), I32), state))
+        state = carry[1]
+    else:
+        state = lax.fori_loop(0, ev_chunk, step, state)
     (t0, t1, vic, pc, bud, nxt, prv, tgt, coh, ready, busy, opst,
      done, lat, latn, reacq, npass) = state
 

@@ -57,6 +57,10 @@ _CLOCK = 8          # one i64 buffer, or an (hi, lo) i32 pair — same bytes
 #: the sequential event axis streams u1/r2/r3 chunk by chunk; Pallas
 #: double-buffers streamed inputs so the next chunk loads during compute
 PIPELINE_FACTOR = 2
+#: the table entries the pipeline factor applies to — `repro.analysis`'s
+#: vmem-consistency rule divides it back out when diffing the table
+#: against the traced kernel's buffer bindings
+STREAMED_INPUTS = ("in.u1", "in.r2", "in.r3")
 
 
 def _entries(name, shape, itemsize, factor=1):
@@ -84,7 +88,8 @@ def buffer_table(tile: int, ev_chunk: int, T: int, N: int, K: int, P: int,
     two stay in sync.
     """
     rows: list[tuple] = [
-        # streamed draw inputs (double-buffered along the event axis)
+        # streamed draw inputs (STREAMED_INPUTS — double-buffered along
+        # the event axis)
         _entries("in.u1", (tile, ev_chunk), _F32, PIPELINE_FACTOR),
         _entries("in.r2", (tile, ev_chunk), _I32, PIPELINE_FACTOR),
         _entries("in.r3", (tile, ev_chunk), _I32, PIPELINE_FACTOR),

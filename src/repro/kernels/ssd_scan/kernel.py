@@ -16,7 +16,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
 def _ssd_kernel(xd_ref, dA_ref, b_ref, c_ref, y_ref, st_ref, cd_ref, *,

@@ -8,7 +8,6 @@ Pallas intra-chunk kernel are validated against it.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 

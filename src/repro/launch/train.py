@@ -13,9 +13,8 @@ shard ownership) is transport-agnostic (repro.coord).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
-from repro.configs import SHAPES, all_arch_names, get_config
+from repro.configs import all_arch_names, get_config
 from repro.train.loop import LoopConfig, Trainer
 from repro.train.optimizer import OptConfig
 

@@ -14,9 +14,8 @@ Attention has two mathematically-identical implementations:
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Any, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ Cache tree layout mirrors "dec": (groups)(elements){...arrays stacked R...}.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -18,7 +18,6 @@ gradient staleness across pods (local accumulation is exact within a pod).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -9,11 +9,9 @@ code paths a multi-host deployment drives through jax.distributed's KV store.
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.coord.service import CoordService, LeaseManager, Membership

@@ -7,7 +7,6 @@ rule table (ZeRO-style: 8 bytes/param spread over the data axis).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

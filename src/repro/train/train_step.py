@@ -7,10 +7,8 @@ variant (the paper's remote-budget idea applied to cross-pod sync) lives in
 """
 from __future__ import annotations
 
-import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M

@@ -2,7 +2,6 @@
 the test session must keep seeing 1). Also covers hlo_analysis loop
 accounting and the budgeted cohort-collective programs on a multi-pod mesh.
 """
-import json
 import os
 import subprocess
 import sys

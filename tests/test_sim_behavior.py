@@ -4,7 +4,6 @@ These are the Fig. 1/4/5 sanity anchors; the quantitative sweeps live in
 benchmarks/ (one per paper figure).
 """
 import numpy as np
-import pytest
 
 from repro.core.cost_model import CostModel
 from repro.core.sim import SimConfig, simulate

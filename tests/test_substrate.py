@@ -1,14 +1,11 @@
 """Optimizer, data pipeline, checkpointing, MoE layer, sharding rules."""
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.models.params import ParamSpec
-from repro.parallel.sharding import AUDIT, Rules, TRAIN_RULES, pspec, \
+from repro.parallel.sharding import TRAIN_RULES, pspec, \
     rules_for_shape
 from repro.train import checkpoint as ckpt
 from repro.train.data import SyntheticLM, global_batch
@@ -129,7 +126,6 @@ def test_moe_matches_dense_oracle():
     from repro.configs import get_config
     from repro.models import layers as L
     from repro.models.params import init_tree
-    import dataclasses
 
     cfg = get_config("mixtral-8x7b").tiny()
     spec = cfg.groups[0][0][0]

@@ -1,9 +1,6 @@
 """End-to-end behaviour: train -> crash -> restart -> converge -> serve."""
-import shutil
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_config
