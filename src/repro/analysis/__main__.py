@@ -8,8 +8,9 @@ Modes (mutually exclusive; default is a lint report):
   --selftest   run the known-bad fixture corpus and verify every rule
                family still fires (>= 4 distinct rule ids, all 4
                families); exit 1 when a family has gone blind
-  --imports    static import-graph report of src/repro modules no entry
-               package can reach (report-only; always exit 0)
+  --imports    static import-graph gate: every src/repro module no entry
+               package can reach must carry an explicit quarantine entry
+               (exit 1 on unexpected unreachables or stale quarantines)
 
 Scoping/output knobs: ``--scenarios a,b`` restricts tracing to named
 scenarios, ``--events N`` sets the traced event-count (shapes only),
@@ -89,7 +90,8 @@ def main(argv=None) -> int:
     mode.add_argument("--selftest", action="store_true",
                       help="run the known-bad fixture corpus")
     mode.add_argument("--imports", action="store_true",
-                      help="import-graph dead-weight report")
+                      help="import-graph gate (quarantine-checked dead "
+                           "weight; exit 1 on drift)")
     ap.add_argument("--scenarios", default="",
                     help="comma-separated scenario names (default: all)")
     ap.add_argument("--events", type=int, default=None,
@@ -104,8 +106,9 @@ def main(argv=None) -> int:
         args.events = DEFAULT_TRACE_EVENTS
     if args.imports:
         from repro.analysis.imports import report
-        print(report())
-        return 0
+        text, rc = report()
+        print(text)
+        return rc
     if args.selftest:
         return _selftest(args)
     return _lint(args)

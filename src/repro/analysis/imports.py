@@ -8,10 +8,12 @@ walks reachability from the engine's entry packages
 nothing the engine, the experiment registry, the coordinator or the
 serving layer runs can ever import them.
 
-Report-only by design: unreachable modules are candidates for deletion or
-for wiring into an entrypoint, not CI failures — the CI ``lint`` leg
-uploads the report as an artifact (``python -m repro.analysis --imports``)
-so the drift is visible per-PR without blocking anyone.
+The report is *actionable*, not informational: every unreachable module
+must either be wired into an entry package or carry an explicit
+:data:`QUARANTINED` entry naming why it is parked. An unreachable module
+with no quarantine entry — or a quarantine entry that went stale (its
+modules vanished or became reachable) — exits nonzero, which is what the
+CI ``lint`` leg gates on (``python -m repro.analysis --imports``).
 
 Resolution rules:
 
@@ -35,15 +37,47 @@ import ast
 from dataclasses import dataclass, field
 from pathlib import Path
 
-__all__ = ["ROOT_PACKAGES", "ImportGraph", "build_graph", "report"]
+__all__ = ["ROOT_PACKAGES", "QUARANTINED", "ImportGraph", "build_graph",
+           "report", "classify"]
 
 #: reachability roots: the packages whose public surface the engine, the
 #: scenario registry, the coordinator and the serving layer expose. For a
 #: namespace package (no ``__init__.py``) the roots are its direct child
-#: modules.
+#: modules. ``repro.analysis.__main__`` is the lint CLI itself — an
+#: executable entry, reached by ``python -m``, not by imports.
 ROOT_PACKAGES = ("repro.core", "repro.kernels", "repro.workloads",
                  "repro.experiments", "repro.coord", "repro.serve",
-                 "repro.analysis")
+                 "repro.analysis", "repro.analysis.__main__")
+
+#: Explicitly parked module trees: unreachable from every root *on
+#: purpose*, with the reason recorded here. A prefix covers the module
+#: itself and everything below it. Anything unreachable and NOT covered
+#: fails the ``--imports`` gate; so does a stale entry (no unreachable
+#: module under the prefix anymore — delete the entry when the tree is
+#: wired in or removed).
+QUARANTINED: dict[str, str] = {
+    "repro.train": "legacy training-stack scaffolding from the repo "
+                   "seed; kept as reference until a training loop "
+                   "exercises the lock table end to end",
+    "repro.launch": "legacy launch/serving scaffolding from the repo "
+                    "seed; superseded by benchmarks.run + the scenario "
+                    "registry as the execution front door",
+    "repro.parallel": "collectives/compression helpers for the legacy "
+                      "training stack; nothing in the simulator path "
+                      "shards gradients",
+    "repro.core.tla": "TLA+ spec emitter — developer tooling invoked by "
+                      "hand, deliberately outside the engine's import "
+                      "surface",
+    "repro.kernels.alock_tick": "superseded by kernels.event_loop (the "
+                                "event-driven engine); retained for the "
+                                "kernel-evolution narrative in docs",
+    "repro.kernels.flash_attention": "exemplar Pallas kernel from the "
+                                     "seed, unrelated to the lock "
+                                     "simulator; reference material only",
+    "repro.kernels.ssd_scan": "exemplar Pallas kernel from the seed, "
+                              "unrelated to the lock simulator; "
+                              "reference material only",
+}
 
 
 def _src_root() -> Path:
@@ -144,19 +178,73 @@ def _is_pkg(name: str, modules: dict) -> bool:
     return path is not None and path.name == "__init__.py"
 
 
-def report(src: Path | None = None) -> str:
-    """Human-readable unreachability report (the ``--imports`` output)."""
+def _covering(module: str) -> str | None:
+    """The QUARANTINED prefix covering ``module``, if any."""
+    for prefix in QUARANTINED:
+        if module == prefix or module.startswith(prefix + "."):
+            return prefix
+    return None
+
+
+def classify(src: Path | None = None) -> tuple:
+    """Split the graph's unreachable set against :data:`QUARANTINED`.
+
+    Returns ``(quarantined, unexpected, stale)``: unreachable modules
+    covered by a quarantine prefix, unreachable modules covered by
+    nothing (gate failures), and quarantine prefixes that no longer
+    cover any unreachable module (stale entries — also gate failures).
+    """
     g = build_graph(src)
     dead = g.unreachable()
+    quarantined = [m for m in dead if _covering(m)]
+    unexpected = [m for m in dead if not _covering(m)]
+    hit = {_covering(m) for m in quarantined}
+    stale = sorted(p for p in QUARANTINED if p not in hit)
+    return quarantined, unexpected, stale
+
+
+def report(src: Path | None = None) -> tuple:
+    """The ``--imports`` gate: ``(human-readable text, exit code)``.
+
+    Exit 0 iff every unreachable module is explicitly quarantined and
+    every quarantine entry still earns its keep.
+    """
+    g = build_graph(src)
+    quarantined, unexpected, stale = classify(src)
+    dead = g.unreachable()
+    rel = _src_root()
     lines = [f"import graph: {len(g.modules)} modules under src/repro, "
              f"{len(g.roots())} roots, "
-             f"{len(g.reachable())} reachable, {len(dead)} unreachable",
+             f"{len(g.reachable())} reachable, {len(dead)} unreachable "
+             f"({len(quarantined)} quarantined, {len(unexpected)} "
+             f"unexpected)",
              f"roots: {', '.join(ROOT_PACKAGES)}", ""]
-    if not dead:
-        lines.append("no unreachable modules.")
-    else:
-        lines.append("unreachable from every entry package "
-                     "(deletion / wiring candidates):")
-        for m in dead:
-            lines.append(f"  {m}  ({g.modules[m].relative_to(_src_root())})")
-    return "\n".join(lines)
+    if quarantined:
+        lines.append("quarantined (unreachable on purpose — see "
+                     "repro.analysis.imports.QUARANTINED):")
+        last = None
+        for m in quarantined:
+            prefix = _covering(m)
+            if prefix != last:
+                lines.append(f"  [{prefix}] {QUARANTINED[prefix]}")
+                last = prefix
+            lines.append(f"    {m}  ({g.modules[m].relative_to(rel)})")
+        lines.append("")
+    if unexpected:
+        lines.append("UNEXPECTED unreachable modules — wire them into an "
+                     "entry package, delete them, or quarantine them "
+                     "with a reason:")
+        for m in unexpected:
+            lines.append(f"  {m}  ({g.modules[m].relative_to(rel)})")
+        lines.append("")
+    if stale:
+        lines.append("STALE quarantine entries — every module under the "
+                     "prefix is now reachable (or gone); delete the "
+                     "entry:")
+        for p in stale:
+            lines.append(f"  {p}")
+        lines.append("")
+    ok = not unexpected and not stale
+    lines.append("imports gate: "
+                 + ("clean." if ok else "FAILED (see above)."))
+    return "\n".join(lines), (0 if ok else 1)

@@ -76,7 +76,47 @@ class LeaseManager:
         self.ttl = ttl_s
         self._clock = clock
 
-    def acquire(self, node_id: int, name: str) -> Lease | None:
+    def acquire(self, node_id: int, name: str, *, attempts: int = 1,
+                deadline_s: float | None = None,
+                backoff_base_s: float = 0.05, backoff_max_s: float = 1.0,
+                rng=None, sleep=None) -> Lease | None:
+        """Acquire (or steal an expired) lease; ``None`` when held live.
+
+        ``attempts > 1`` turns one shot into a bounded retry loop with
+        exponential backoff: attempt ``i`` failing sleeps
+        ``min(base * 2**i, max)``, jittered into ``[0.5, 1.0)`` of itself
+        when an ``rng`` (anything with ``.random()``) is injected — a
+        seeded rng keeps the schedule deterministic while still
+        de-synchronizing contending nodes. ``deadline_s`` bounds the
+        *total* time budget measured on the injected ``clock``: no sleep
+        ever overshoots it, and the loop stops retrying once it is spent.
+        ``sleep`` defaults to ``ManualClock.advance`` when the clock is
+        manual (tests/stress advance virtual time, no real waiting) and
+        ``time.sleep`` otherwise.
+        """
+        if attempts < 1:
+            raise ValueError(f"attempts must be >= 1, got {attempts}")
+        if sleep is None:
+            sleep = getattr(self._clock, "advance", time.sleep)
+        start = self._clock()
+        for i in range(attempts):
+            lease = self._try_acquire(node_id, name)
+            if lease is not None:
+                return lease
+            if i + 1 >= attempts:
+                break
+            d = min(backoff_base_s * (2.0 ** i), backoff_max_s)
+            if rng is not None:
+                d *= 0.5 + 0.5 * rng.random()
+            if deadline_s is not None:
+                remaining = deadline_s - (self._clock() - start)
+                if remaining <= 0.0:
+                    break
+                d = min(d, remaining)
+            sleep(d)
+        return None
+
+    def _try_acquire(self, node_id: int, name: str) -> Lease | None:
         with self.svc.critical(node_id, "lease:" + name):
             cur: Lease | None = self.svc.get("lease:" + name)
             now = self._clock()
@@ -154,12 +194,22 @@ class Membership:
             return [s for s, n in owner.items() if n == node_id]
 
     def steal_from(self, node_id: int, dead_node: int) -> list[int]:
-        """Straggler/failure mitigation: re-own a dead node's shards."""
-        def upd(owner):
-            owner = dict(owner or {})
+        """Straggler/failure mitigation: re-own a dead node's shards.
+
+        Tolerates the "dead" node racing a late heartbeat: liveness is
+        re-checked *inside* the shards critical section (the same lock
+        :meth:`assign_shards` serializes on), and a target that
+        heartbeated within the TTL aborts the steal — the caller keeps
+        only what it already owns, and the revived node's shards stay
+        put instead of being clobbered mid-recovery.
+        """
+        with self.svc.critical(node_id, "shards"):
+            owner = dict(self.svc.get("shards") or {})
+            if dead_node in self.alive():
+                return [s for s, n in owner.items() if n == node_id]
             for s, n in owner.items():
                 if n == dead_node:
                     owner[s] = node_id
-            return owner
-        owner = self.svc.update(node_id, "shards", upd, default={})
-        return [s for s, n in owner.items() if n == node_id]
+            with self.svc._kv_lock:
+                self.svc._kv["shards"] = owner
+            return [s for s, n in owner.items() if n == node_id]

@@ -49,6 +49,7 @@ class StressReport:
     reacquires: int = 0
     lease_grants: int = 0
     lease_steals: int = 0          # grants that fenced off a prior epoch
+    lease_retries: int = 0         # backoff sleeps the retry loop took
     phase_members: list = field(default_factory=list)  # alive() per phase
     per_node_ops: list = field(default_factory=list)
 
@@ -131,7 +132,19 @@ def run_coord_stress(w: Workload, ops_per_thread: int = 200,
             (members.join if n in up else members.leave)(n)
         for n in up:
             for victim in range(N):
-                lease = leases.acquire(n, f"shard:{victim}")
+                # bounded retry with deterministic jitter: the seeded rng
+                # fixes the backoff schedule, the injected sleep advances
+                # the manual clock (and counts the retries) — contended
+                # names still resolve to one holder per storm
+                def _sleep(d):
+                    rep.lease_retries += 1
+                    clock.advance(d)
+                lease = leases.acquire(
+                    n, f"shard:{victim}", attempts=2,
+                    backoff_base_s=0.05, deadline_s=0.5,
+                    rng=np.random.default_rng(
+                        w.seed * 611_953 + p * 1009 + n * 31 + victim),
+                    sleep=_sleep)
                 if lease is None:
                     continue
                 rep.lease_grants += 1

@@ -146,8 +146,8 @@ def _bucket_runner(key, n_phases: int, backend: str, mesh: Mesh):
     if ck in _RUNNER_CACHE:
         return _RUNNER_CACHE[ck], ck
 
-    def local_block(loc, zc, ed, th, ac, bi, sd, cst, tn, ln):
-        wl = WorkloadOperands(loc, zc, ed, th, ac, bi, sd, cst)
+    def local_block(loc, zc, ed, th, ac, bi, sd, cst, nm, tn, ln):
+        wl = WorkloadOperands(loc, zc, ed, th, ac, bi, sd, cst, nm)
         if backend == "pallas":
             from repro.kernels.event_loop.ops import run_events
             return run_events(alg, T, N, K, n_events, wl, tn, ln)
@@ -156,7 +156,7 @@ def _bucket_runner(key, n_phases: int, backend: str, mesh: Mesh):
 
     fn = jax.jit(shard_map(
         local_block, mesh,
-        in_specs=(P("data"),) * 8 + (P(), P()),
+        in_specs=(P("data"),) * 9 + (P(), P()),
         out_specs=(P("data"),) * 6, axis_names={"data"}))
     _RUNNER_CACHE[ck] = fn
     return fn, ck
@@ -369,19 +369,21 @@ def sweep(configs: Sequence[SimConfig | Workload], n_seeds: int = 1,
         ac = np.empty((C, S, Pmax, T), np.int32)
         bi = np.empty((C, S, Pmax, 2), np.int32)
         cr = np.empty((C, S, Pmax, N_COST_ROWS), np.int32)
+        nm = np.empty((C, S, Pmax, N), np.float32)
         sd = np.empty((C, S), np.int32)
         for row, i in enumerate(idxs):
             o = pad_phases(lowered[i].operands, Pmax)
             loc[row], zc[row], ed[row] = o.locality, o.zcdf, o.edges
             th[row], ac[row], bi[row] = o.think_ns, o.active, o.b_init
-            cr[row] = o.cost_rows
+            cr[row], nm[row] = o.cost_rows, o.node_mult
             sd[row] = int(o.seed) + np.arange(S, dtype=np.int32)
 
         def flat(a):
             return a.reshape((C * S,) + a.shape[2:])
 
         wl = WorkloadOperands(flat(loc), flat(zc), flat(ed), flat(th),
-                              flat(ac), flat(bi), flat(sd), flat(cr))
+                              flat(ac), flat(bi), flat(sd), flat(cr),
+                              flat(nm))
         done, lat, _lat_n, t_end, nreacq, npass = _exec_bucket(
             key, thread_node, lock_node, wl, backend, devices, chunk)
         done = done.reshape(C, S, T)

@@ -46,7 +46,11 @@ uniform remote) and a lock within that node by inverse-CDF from
 ``zcdf[phase]``; the step's cost and any budget it arms come from
 ``cost_rows[phase]`` / ``b_init[phase]``. Threads whose node is down in
 the current phase are never scheduled (masked out of the ready-time
-argmin).
+argmin). Per-phase **node multipliers** ``node_mult (P, N)`` inject
+fail-slow degradation: every cost is scaled by the multiplier of the
+node that *performs* the work — RNIC service and wire time by the card's
+node, plain CPU-side ops (local/poll/cs/think) by the calling thread's
+node — so one limping node drags exactly the traffic that touches it.
 
 Because only ``(alg, T, N, K, n_events)`` — plus the phase count via
 operand *shapes* — is static, a ``batch.sweep`` mixing arbitrary
@@ -357,6 +361,19 @@ class SimResult(NamedTuple):
 LAT_SAMPLES = 1 << 15
 
 
+def _scale_cost(c, m):
+    """Apply a fail-slow node multiplier to an integer-ns cost.
+
+    Round-to-nearest in float32: cost rows are < 2^24 ns so the f32
+    product is exact, which makes ``m == 1.0`` bitwise inert (the
+    healthy-cluster path reproduces the pre-fault engine exactly) and
+    keeps the scaled delta i32 — both clock representations of the
+    Pallas kernel consume it unchanged. The kernel mirrors this formula
+    verbatim; any change here must be mirrored there.
+    """
+    return jnp.round(jnp.asarray(c, jnp.float32) * m).astype(I32)
+
+
 def _run_events(alg, T, N, K, n_events, wl: WorkloadOperands, thread_node,
                 lock_node, lat_samples: int = LAT_SAMPLES):
     """Serial next-event loop for one (workload, seed) point — XLA backend.
@@ -462,17 +479,22 @@ def _run_events(alg, T, N, K, n_events, wl: WorkloadOperands, thread_node,
         lat_n = lat_n + finished.astype(I32)
         done = done.at[tid].add(finished.astype(I32))
 
-        # cost application
+        # cost application. node_mult degrades the node doing the work:
+        # svc/wire belong to the target card's node, dt_plain to the
+        # caller's CPU (mult 1.0 is bitwise inert — see _scale_cost)
+        nm = wl.node_mult[ph]
         is_rdma = (code == OP_RDMA) | (code == OP_LOOP)
-        svc = jnp.where(code == OP_LOOP, c_svc_l, c_svc_r)
-        wire = jnp.where(code == OP_LOOP, c_wire_l, c_wire_r)
+        svc = _scale_cost(jnp.where(code == OP_LOOP, c_svc_l, c_svc_r),
+                          nm[tnode])
+        wire = _scale_cost(jnp.where(code == OP_LOOP, c_wire_l, c_wire_r),
+                           nm[tnode])
         start = jnp.maximum(now, busy[tnode])
         fin = start + svc
         busy = busy.at[tnode].set(jnp.where(is_rdma, fin, busy[tnode]))
-        dt_plain = jnp.select(
+        dt_plain = _scale_cost(jnp.select(
             [code == OP_LOCAL, code == OP_POLL, code == OP_CS,
              code == OP_THINK],
-            [c_local, c_poll, c_cs, wl.think_ns[ph]], c_local)
+            [c_local, c_poll, c_cs, wl.think_ns[ph]], c_local), nm[mynode])
         new_ready = jnp.where(is_rdma, fin + wire, now + dt_plain)
         ready = ready.at[tid].set(new_ready)
         # latency clock starts when the first lock op (SWAP/SL_CAS) can

@@ -26,7 +26,7 @@ from typing import Callable
 from repro.experiments.experiment import Experiment
 from repro.experiments.options import ExecOptions
 from repro.experiments.slo import Slo
-from repro.workloads import Phase, Workload, mixed
+from repro.workloads import Phase, Workload, mixed, resolve_node_mult
 
 _SCENARIOS: dict[str, "Scenario"] = {}
 
@@ -92,6 +92,14 @@ _BASE = Workload("alock", n_nodes=4, threads_per_node=4, n_locks=16,
                  locality=0.95)
 
 
+def _phase_mults(w: Workload) -> list[tuple]:
+    """Dense per-phase ``(n_nodes,)`` multiplier rows of a spec."""
+    base = w.node_mult
+    phases = w.phases or (Phase(frac=1.0),)
+    return [resolve_node_mult(p.node_mult if p.node_mult is not None
+                              else base, w.n_nodes) for p in phases]
+
+
 def _rows(result) -> list[dict]:
     out = []
     for lbl, w, br in result:
@@ -102,6 +110,24 @@ def _rows(result) -> list[dict]:
             "p99_lat_ns": br.p99_lat_ns,
             "ops": int(br.ops.sum()),
         })
+        # under non-uniform fail-slow degradation a per-alg aggregate
+        # hides exactly the asymmetry the scenario exists to show — break
+        # the throughput out per node (op-share weighted)
+        mults = _phase_mults(w)
+        if any(m != 1.0 for row in mults for m in row):
+            pto = br.per_thread_ops.sum(axis=0)
+            total = max(float(pto.sum()), 1e-9)
+            tpn = w.threads_per_node
+            for n in range(w.n_nodes):
+                share = float(pto[n * tpn:(n + 1) * tpn].sum()) / total
+                xmax = max(row[n] for row in mults)
+                out.append({
+                    "name": f"{lbl}.node{n}", "us_per_call": 0.0,
+                    "derived": (f"{br.mean_mops * share:.3f}Mops "
+                                f"({share:.3f} share, x{xmax:g})"),
+                    "node_mops": br.mean_mops * share,
+                    "node_op_share": share, "node_mult_max": xmax,
+                })
     return out
 
 
@@ -119,6 +145,21 @@ _NIC_BURST = (Phase(frac=0.3), Phase(frac=0.4, cost="congested-nic"),
 _RAMP = (Phase(frac=0.34, b_init=(1, 1)), Phase(frac=0.33),
          Phase(frac=0.33, b_init=(20, 80)))
 _RAMP_BASE = _BASE.replace(locality=0.9)
+# fail-slow: node 0 limps at 4x. "hot" places the traffic on the limping
+# node (its own threads hammer their local locks, everyone else's remote
+# traffic spreads across nodes incl. node 0); "cold" steers all steady
+# traffic away from node 0's locks (its threads go fully remote, everyone
+# else fully local) — the limp then only taxes work node 0 itself performs.
+_LIMP = "limp-node0-4x"
+_TPN = _BASE.threads_per_node
+_T = _BASE.n_nodes * _TPN
+_LIMP_HOT = (1.0,) * _TPN + (0.0,) * (_T - _TPN)
+_LIMP_COLD = (0.0,) * _TPN + (1.0,) * (_T - _TPN)
+# degradation spreading node-to-node over the run; node 3 stays healthy
+_CASCADE = (Phase(frac=0.25),
+            Phase(frac=0.25, node_mult={0: 4.0}),
+            Phase(frac=0.25, node_mult={0: 4.0, 1: 4.0}),
+            Phase(frac=0.25, node_mult={0: 4.0, 1: 4.0, 2: 4.0}))
 
 
 def _uniform_grid_workloads():
@@ -153,6 +194,19 @@ def _congested_nic_workloads():
 def _budget_ramp_workloads():
     return [_RAMP_BASE, _RAMP_BASE.replace(b_init=(1, 1)),
             _RAMP_BASE.replace(phases=_RAMP)]
+
+
+def _limping_node_workloads():
+    return [_BASE.replace(alg=alg, locality=loc, node_mult=nm)
+            for alg in ("alock", "mcs")
+            for loc in (_LIMP_HOT, _LIMP_COLD)
+            for nm in (None, _LIMP)]
+
+
+def _fail_slow_cascade_workloads():
+    return [w for alg in ("alock", "mcs")
+            for w in (_BASE.replace(alg=alg),
+                      _BASE.replace(alg=alg, phases=_CASCADE))]
 
 
 @scenario("uniform-grid",
@@ -271,6 +325,69 @@ def _budget_ramp(n_seeds, n_events, options):
         rows.append({"name": f"{lbl}.reacquires", "us_per_call": 0.0,
                      "derived": f"{res[lbl].reacquires.mean():.0f}",
                      "reacquires": float(res[lbl].reacquires.mean())})
+    return rows
+
+
+@scenario("limping-node",
+          "one 4x fail-slow node hosting hot vs cold locks; SLO-gated",
+          slo=Slo(p99_ns=500_000, min_events_per_sec=10.0),
+          workloads=_limping_node_workloads)
+def _limping_node(n_seeds, n_events, options):
+    """The limplock regime: node 0's card serves every request at 4x
+    (``node_mult="limp-node0-4x"``) while the cluster stays up. Placement
+    decides the blast radius — with the *hot* locks on the limping node
+    every client queues behind the slow card, with them *cold* only node
+    0's own work drags. ALock's lease handoffs keep the hot path local to
+    each holder, so it degrades by the single slow participant; MCS
+    loopback traffic pays the slow card on every hop.
+    """
+    exp = Experiment("limping-node", n_seeds=n_seeds, n_events=n_events,
+                     options=options)
+    for alg in ("alock", "mcs"):
+        for place, loc in (("hot", _LIMP_HOT), ("cold", _LIMP_COLD)):
+            exp.add(_BASE.replace(alg=alg, locality=loc),
+                    label=f"{alg}.{place}.healthy")
+            exp.add(_BASE.replace(alg=alg, locality=loc, node_mult=_LIMP),
+                    label=f"{alg}.{place}.limp")
+    res = exp.run()
+    rows = _rows(res)
+    for alg in ("alock", "mcs"):
+        for place in ("hot", "cold"):
+            hit = res[f"{alg}.{place}.limp"].mean_mops / \
+                max(res[f"{alg}.{place}.healthy"].mean_mops, 1e-9)
+            rows.append({"name": f"{alg}.{place}.limp_throughput_ratio",
+                         "us_per_call": 0.0, "derived": f"{hit:.3f}x",
+                         "ratio": hit})
+    return rows
+
+
+@scenario("fail-slow-cascade",
+          "degradation spreading node-to-node over the run; SLO-gated",
+          slo=Slo(p99_ns=300_000, min_events_per_sec=10.0),
+          workloads=_fail_slow_cascade_workloads)
+def _fail_slow_cascade(n_seeds, n_events, options):
+    """A fail-slow *program*: the run starts healthy, then node 0 limps
+    at 4x, then node 1 joins it, then node 2 — only node 3 stays healthy
+    by the final quarter (the cascading-slowdown pattern from the
+    limplock literature, where one degraded NIC backs up its peers). The
+    per-phase ``node_mult`` rows make the spread a single compiled
+    executable; the ratio rows track how much of the healthy baseline
+    each algorithm keeps as the cascade widens.
+    """
+    exp = Experiment("fail-slow-cascade", n_seeds=n_seeds,
+                     n_events=n_events, options=options)
+    for alg in ("alock", "mcs"):
+        exp.add(_BASE.replace(alg=alg), label=f"{alg}.healthy")
+        exp.add(_BASE.replace(alg=alg, phases=_CASCADE),
+                label=f"{alg}.cascade")
+    res = exp.run()
+    rows = _rows(res)
+    for alg in ("alock", "mcs"):
+        hit = res[f"{alg}.cascade"].mean_mops / \
+            max(res[f"{alg}.healthy"].mean_mops, 1e-9)
+        rows.append({"name": f"{alg}.cascade_throughput_ratio",
+                     "us_per_call": 0.0, "derived": f"{hit:.3f}x",
+                     "ratio": hit})
     return rows
 
 

@@ -57,8 +57,9 @@ Randomness + workload operands
   per event from the ``edges`` operand (phase = sum(i >= edges) - 1);
   the per-phase ``active`` mask parks downed threads by excluding them
   from the ready-time argmin, ``think_ns[phase]`` replaces the static
-  think cost, and the event's cost scalars / ALock budgets are one-hot
-  phase selections from the ``cost_rows (P, 8)`` / ``b_init (P, 2)``
+  think cost, and the event's cost scalars / ALock budgets / fail-slow
+  node multipliers are one-hot phase selections from the
+  ``cost_rows (P, 8)`` / ``b_init (P, 2)`` / ``node_mult (P, N)``
   operands (single-phase specs keep the flat row-0 fast path). Per-seed
   results are bitwise-equal to the XLA path, which the tier-1
   equivalence tests assert. The semantic state stays int32 everywhere.
@@ -212,7 +213,7 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
                       lat_samples: int = LAT_SAMPLES, repr32: bool = False):
     """One (replica_tile, event_chunk) grid step.
 
-    ``refs`` arrive flat from ``pl.pallas_call`` — 11 inputs, then the
+    ``refs`` arrive flat from ``pl.pallas_call`` — 12 inputs, then the
     outputs and scratch whose *count* depends on the clock representation
     (one ref per clock buffer for i64, an (hi, lo) pair for i32) — and are
     regrouped here from the static ``repr32`` flag.
@@ -223,8 +224,8 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
     C = _PairClocks if repr32 else _I64Clocks
     nc = C.nrefs
     (u1_ref, r2_ref, r3_ref, edges_ref, think_ref, locp_ref, actp_ref,
-     binit_ref, costs_ref, tn_ref, ln_ref) = refs[:11]
-    rest = refs[11:]
+     binit_ref, costs_ref, nmult_ref, tn_ref, ln_ref) = refs[:12]
+    rest = refs[12:]
     done_ref = rest[0]
     lat_refs = rest[1:1 + nc]
     latn_ref = rest[1 + nc]
@@ -265,6 +266,7 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
     actp = actp_ref[...].astype(I32).reshape(tile, P, T)
     binitp = binit_ref[...].astype(I32).reshape(tile, P, 2)
     cstp = costs_ref[...].astype(I32).reshape(tile, P, N_COST_ROWS)
+    nmp = nmult_ref[...].reshape(tile, P, N)        # f32 fail-slow mults
     tn = jnp.broadcast_to(tn_ref[...].astype(I32), (tile, T))
     ln = jnp.broadcast_to(ln_ref[...].astype(I32), (tile, K))
 
@@ -319,6 +321,8 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
                             axis=1, dtype=I32)       # (tile, 2)
             cst = jnp.sum(jnp.where(ohP[:, :, None], cstp, _I(0)), axis=1,
                           dtype=I32)                 # (tile, 8)
+            nm_row = jnp.sum(jnp.where(ohP[:, :, None], nmp, np.float32(0)),
+                             axis=1, dtype=jnp.float32)   # (tile, N)
 
             # phase boundary: rejoining threads resume from the cluster's
             # current clock (mirror of the XLA loop's rejoin bump)
@@ -341,6 +345,7 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
             think_e = think[:, 0]
             binit = binitp[:, 0]
             cst = cstp[:, 0]
+            nm_row = nmp[:, 0, :]
             tid = C.argmin_masked(ready)
         ohT = tids == tid[:, None]
         now = C.gather(ohT, ready)
@@ -485,18 +490,30 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
                         jnp.full_like(p, 0)).astype(I32)
 
         # -- cost application (identical int arithmetic to _run_events) ----
+        # node_mult fail-slow scaling mirrors sim._scale_cost bitwise:
+        # f32 multiply of ints < 2^24 is exact, round-to-nearest, back to
+        # i32 — svc/wire take the target card's multiplier, dt_plain the
+        # calling thread's node's
         is_rdma = (code == OP_RDMA) | (code == OP_LOOP)
-        svc = jnp.where(code == OP_LOOP, cst[:, 5], cst[:, 4])
-        wire = jnp.where(code == OP_LOOP, cst[:, 7], cst[:, 6])
         ohN = nio == tnode[:, None]
+        nm_t = jnp.sum(jnp.where(ohN, nm_row, np.float32(0)), axis=1,
+                       dtype=jnp.float32)
+        ohMy = nio == mynode[:, None]
+        nm_my = jnp.sum(jnp.where(ohMy, nm_row, np.float32(0)), axis=1,
+                        dtype=jnp.float32)
+        svc = jnp.round(jnp.where(code == OP_LOOP, cst[:, 5], cst[:, 4])
+                        .astype(jnp.float32) * nm_t).astype(I32)
+        wire = jnp.round(jnp.where(code == OP_LOOP, cst[:, 7], cst[:, 6])
+                         .astype(jnp.float32) * nm_t).astype(I32)
         busy_t = C.gather(ohN, busy)
         start = C.max2(now, busy_t)
         fin = C.add_i32(start, svc)
         busy = C.where(is_rdma[:, None] & ohN, C.col(fin), busy)
-        dt_plain = _select(
+        dt_plain = jnp.round(_select(
             [code == OP_LOCAL, code == OP_POLL, code == OP_CS,
              code == OP_THINK],
             [cst[:, 0], cst[:, 1], cst[:, 2], think_e], cst[:, 0])
+            .astype(jnp.float32) * nm_my).astype(I32)
         new_ready = C.where(is_rdma, C.add_i32(fin, wire),
                             C.add_i32(now, dt_plain))
         ready = C.where(ohT, C.col(new_ready), ready)

@@ -198,6 +198,7 @@ def _pallas_events(alg, T, N, K, n_events, wl, thread_node, lock_node, *,
     actp = prep(wl.active.reshape(B, P * T))
     binit = prep(jnp.asarray(wl.b_init).reshape(B, P * 2))
     costp = prep(jnp.asarray(wl.cost_rows, I32).reshape(B, P * N_COST_ROWS))
+    nmult = prep(jnp.asarray(wl.node_mult, jnp.float32).reshape(B, P * N))
     edges, think = (prep(a) for a in (wl.edges, wl.think_ns))
     Bp = B + pad_b
     n_chunks = (n_events + pad_e) // ev_chunk
@@ -251,7 +252,7 @@ def _pallas_events(alg, T, N, K, n_events, wl, thread_node, lock_node, *,
             pl.BlockSpec((tile, ev_chunk), lambda i, j: (i, j)),
             pl.BlockSpec((tile, ev_chunk), lambda i, j: (i, j)),
             row(P), row(P), row(P * T), row(P * T),
-            row(P * 2), row(P * N_COST_ROWS),
+            row(P * 2), row(P * N_COST_ROWS), row(P * N),
             pl.BlockSpec((1, T), lambda i, j: (0, 0)),
             pl.BlockSpec((1, K), lambda i, j: (0, 0)),
         ],
@@ -263,6 +264,7 @@ def _pallas_events(alg, T, N, K, n_events, wl, thread_node, lock_node, *,
       jnp.asarray(edges, I32), jnp.asarray(think, I32),
       jnp.asarray(locp, jnp.float32), jnp.asarray(actp, I32),
       jnp.asarray(binit, I32), jnp.asarray(costp, I32),
+      jnp.asarray(nmult, jnp.float32),
       jnp.asarray(thread_node, I32)[None, :],
       jnp.asarray(lock_node, I32)[None, :])
 
@@ -288,9 +290,10 @@ def run_events(alg, T, N, K, n_events, wl, thread_node, lock_node, *,
     ``wl`` is a ``WorkloadOperands`` with a leading replica axis B on
     every leaf: locality (B,P,T) f32, zcdf (B,P,K//N) f32, edges (B,P)
     i32, think_ns (B,P) i32, active (B,P,T) i32, b_init (B,P,2) i32,
-    cost_rows (B,P,8) i32, seed (B,) i32; thread_node (T,)/lock_node (K,)
-    broadcast. Returns (done (B,T) i32, lat (B,lat_samples) i64, lat_n
-    (B,) i32, t_end (B,) i64, nreacq (B,) i32, npass (B,) i32).
+    cost_rows (B,P,8) i32, node_mult (B,P,N) f32, seed (B,) i32;
+    thread_node (T,)/lock_node (K,) broadcast. Returns (done (B,T) i32,
+    lat (B,lat_samples) i64, lat_n (B,) i32, t_end (B,) i64,
+    nreacq (B,) i32, npass (B,) i32).
 
     B need not divide the replica tile and n_events need not divide the
     event chunk: replicas are edge-padded (duplicates, sliced off) and the

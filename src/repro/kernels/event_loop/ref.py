@@ -23,7 +23,8 @@ def run_events_ref(alg, T, N, K, n_events, wl, thread_node, lock_node, *,
     """Batched XLA reference. ``wl`` is a ``WorkloadOperands`` whose leaves
     all carry a leading replica axis B (locality (B,P,T), zcdf (B,P,kpn),
     edges/think_ns (B,P), active (B,P,T), b_init (B,P,2), cost_rows
-    (B,P,8), seed (B,)); thread_node (T,) and lock_node (K,) broadcast.
+    (B,P,8), node_mult (B,P,N), seed (B,)); thread_node (T,) and
+    lock_node (K,) broadcast.
     Returns (done (B,T), lat (B,lat_samples), lat_n (B,), t_end (B,),
     nreacq (B,), npass (B,)) — must run under ``enable_x64()``.
     """

@@ -16,7 +16,8 @@ clocks = 8 bytes, as one i64 buffer or an (hi, lo) i32 pair):
                     pipeline double-buffer along the sequential event axis
   workload rows     edges/think ``tile*P*4`` each; locality/active
                     ``tile*P*T*4`` each; b_init ``tile*P*2*4``; cost_rows
-                    ``tile*P*8*4``; thread_node ``T*4``; lock_node ``K*4``
+                    ``tile*P*8*4``; node_mult ``tile*P*N*4``; thread_node
+                    ``T*4``; lock_node ``K*4``
   outputs           done ``tile*T*4``; latency ring ``tile*lat_samples*8``;
                     lat_n/reacq/npass ``tile*4`` each; t_end ``tile*8``
   scratch           tails/victim ``3 * tile*K*4``; six per-thread i32
@@ -100,6 +101,7 @@ def buffer_table(tile: int, ev_chunk: int, T: int, N: int, K: int, P: int,
         _entries("in.active", (tile, P * T), _I32),
         _entries("in.b_init", (tile, P * 2), _I32),
         _entries("in.cost_rows", (tile, P * N_COST_ROWS), _I32),
+        _entries("in.node_mult", (tile, P * N), _F32),
         _entries("in.thread_node", (1, T), _I32),
         _entries("in.lock_node", (1, K), _I32),
         # outputs (flushed when the replica tile changes)

@@ -30,12 +30,14 @@ from repro.core.cost_model import (COST_PROFILES, CostModel, CostProfile,
 from repro.workloads.lower import (Lowered, N_COST_ROWS, WorkloadOperands,
                                    as_workload, from_simconfig, lower,
                                    pad_phases, resolve_locality, zipf_cdf)
-from repro.workloads.spec import (ALGS, Mixed, Phase, THINK_CLASSES,
-                                  Workload, mixed)
+from repro.workloads.spec import (ALGS, Mixed, NODE_MULT_PROFILES, Phase,
+                                  THINK_CLASSES, Workload, freeze_node_mult,
+                                  mixed, node_mult_pairs, resolve_node_mult)
 
 __all__ = [
     "ALGS", "COST_PROFILES", "CostModel", "CostProfile", "Lowered",
-    "Mixed", "N_COST_ROWS", "Phase", "THINK_CLASSES", "Workload",
-    "WorkloadOperands", "as_workload", "from_simconfig", "lower", "mixed",
-    "pad_phases", "resolve_cost", "resolve_locality", "zipf_cdf",
+    "Mixed", "NODE_MULT_PROFILES", "N_COST_ROWS", "Phase", "THINK_CLASSES",
+    "Workload", "WorkloadOperands", "as_workload", "freeze_node_mult",
+    "from_simconfig", "lower", "mixed", "node_mult_pairs", "pad_phases",
+    "resolve_cost", "resolve_locality", "resolve_node_mult", "zipf_cdf",
 ]

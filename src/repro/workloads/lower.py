@@ -14,6 +14,7 @@
   b_init    (P, 2) i32 per-phase (local, remote) ALock budgets
   cost_rows (P, 8) i32 per-phase cost-model rows (CostModel.cost_rows)
   seed      () i32     replica PRNG seed
+  node_mult (P, N) f32 per-phase per-node fail-slow cost multipliers
   ========= ========== ===================================================
 
 Only ``(alg, T, N, K, n_events)`` — plus the phase-count P via the operand
@@ -56,7 +57,8 @@ from typing import Any, NamedTuple
 import numpy as np
 
 from repro.core.cost_model import CostModel, N_COST_ROWS, resolve_cost
-from repro.workloads.spec import Mixed, Phase, Workload, _check_think
+from repro.workloads.spec import (Mixed, Phase, Workload, _check_think,
+                                  resolve_node_mult)
 
 _I32_MAX = np.iinfo(np.int32).max
 
@@ -73,6 +75,7 @@ class WorkloadOperands(NamedTuple):
     b_init: Any     # (P, 2) i32
     seed: Any       # () i32
     cost_rows: Any  # (P, 8) i32
+    node_mult: Any  # (P, N) f32
 
     @property
     def n_phases(self) -> int:
@@ -169,6 +172,7 @@ def lower(w: Workload, n_events: int,
     active = np.ones((P, T), np.int32)
     b_init = np.empty((P, 2), np.int32)
     cost_rows = np.empty((P, N_COST_ROWS), np.int32)
+    node_mult = np.empty((P, N), np.float32)
     cum = 0.0
     for p, ph in enumerate(phases):
         edges[p] = int(round(cum * n_events))
@@ -184,6 +188,8 @@ def lower(w: Workload, n_events: int,
         # mult == 1.0 reproduces topology()'s c_think integer exactly —
         # the SimConfig adapter's bitwise contract rests on this
         think_ns[p] = int(round(mult * cm_p.think_ns))
+        node_mult[p] = resolve_node_mult(
+            w.node_mult if ph.node_mult is None else ph.node_mult, N)
         for node in ph.down_nodes:
             active[p, node * tpn:(node + 1) * tpn] = 0
     edges[0] = 0
@@ -201,6 +207,7 @@ def lower(w: Workload, n_events: int,
         active = np.repeat(active, 2, axis=0)
         b_init = np.repeat(b_init, 2, axis=0)
         cost_rows = np.repeat(cost_rows, 2, axis=0)
+        node_mult = np.repeat(node_mult, 2, axis=0)
         edges = np.asarray([0, n_events // 2], np.int32)
     if P > 1 and np.any(np.diff(edges) <= 0):
         # a zero-event phase would silently vanish AND misdirect the
@@ -214,7 +221,7 @@ def lower(w: Workload, n_events: int,
     ops = WorkloadOperands(
         locality=locality, zcdf=zcdf, edges=edges, think_ns=think_ns,
         active=active, b_init=b_init, seed=np.int32(w.seed),
-        cost_rows=cost_rows)
+        cost_rows=cost_rows, node_mult=node_mult)
     return Lowered(w.alg, N, tpn, K, int(n_events), ops)
 
 
@@ -224,7 +231,8 @@ def pad_phases(ops: WorkloadOperands, n_phases: int) -> WorkloadOperands:
     Padded phases start at ``INT32_MAX`` (past any event index), so the
     per-event selection ``phase = sum(i >= edges) - 1`` is bitwise
     unchanged; their payload rows — locality, CDFs, think, active mask,
-    budgets, cost rows — just duplicate the last real phase. Inertness of
+    budgets, cost rows, node multipliers — just duplicate the last real
+    phase. Inertness of
     the cost/budget rows is load-bearing for one-compile-per-bucket
     sweeps and is asserted engine-level in the tests.
     """
@@ -243,7 +251,8 @@ def pad_phases(ops: WorkloadOperands, n_phases: int) -> WorkloadOperands:
         edges=np.concatenate([ops.edges,
                               np.full(extra, _I32_MAX, np.int32)]),
         think_ns=rep(ops.think_ns), active=rep(ops.active),
-        b_init=rep(ops.b_init), cost_rows=rep(ops.cost_rows))
+        b_init=rep(ops.b_init), cost_rows=rep(ops.cost_rows),
+        node_mult=rep(ops.node_mult))
 
 
 def from_simconfig(cfg) -> Workload:

@@ -25,6 +25,16 @@ per-run) behavior — independently of how it is executed:
     and ``b_init`` make the cost table and the budget *programs* over the
     run — e.g. a mid-run NIC-congestion burst, or a budget ramp.
 
+  * **node_mult** — per-node fail-slow degradation: a multiplier applied
+    to every cost the node *performs* (its local/poll/cs/think work and
+    the RNIC service + wire of RDMA ops it serves). ``None`` means a
+    uniform healthy cluster; a :data:`NODE_MULT_PROFILES` name or a
+    ``{node: mult}`` mapping degrades specific nodes (the "limplock"
+    effect — one slow NIC/CPU dragging the system). Per-phase overrides
+    make degradation a *program* over the run (fail-slow cascades).
+    Lowered to a traced ``(P, N)`` operand — swapping degradation
+    patterns never adds a compile.
+
 Specs are frozen and hashable, so they key result dicts the way the old
 ``SimConfig`` NamedTuple did. Execution knobs (events, seeds, backend,
 devices) intentionally live elsewhere: ``repro.experiments`` composes
@@ -102,6 +112,73 @@ def _freeze_locality(loc):
     return _check_prob(loc, "locality")
 
 
+# Named fail-slow degradation profiles: {node: multiplier} patterns a
+# Workload/Phase ``node_mult`` field can name instead of spelling out.
+# 4x is the canonical "limping" severity — the limplock literature's
+# cascading-slowdown regime sits between 3x and 10x single-node drag.
+NODE_MULT_PROFILES: dict[str, dict[int, float]] = {
+    "healthy": {},
+    "limp-node0-2x": {0: 2.0},
+    "limp-node0-4x": {0: 4.0},
+}
+
+
+def freeze_node_mult(nm):
+    """Validate + canonicalize a ``node_mult`` value to its frozen form.
+
+    ``None`` (uniform) and :data:`NODE_MULT_PROFILES` names pass through;
+    a ``{node: mult}`` mapping (or pair iterable) becomes a sorted tuple
+    of ``(node, mult)`` pairs. Multipliers must be finite and > 0 —
+    a *dead* node is ``Phase.down_nodes``, not an infinite multiplier.
+    """
+    if nm is None:
+        return None
+    if isinstance(nm, str):
+        if nm not in NODE_MULT_PROFILES:
+            raise ValueError(f"unknown node_mult profile {nm!r}; "
+                             f"registered: {sorted(NODE_MULT_PROFILES)}")
+        return nm
+    if isinstance(nm, dict):
+        nm = tuple(sorted(nm.items()))
+    if isinstance(nm, (tuple, list)):
+        out = []
+        for pair in nm:
+            n, m = pair
+            n, m = int(n), float(m)
+            if n < 0:
+                raise ValueError(f"node_mult node ids must be >= 0, got {n}")
+            if not math.isfinite(m) or m <= 0.0:
+                raise ValueError(f"node_mult multipliers must be finite "
+                                 f"and > 0, got {m} for node {n}")
+            out.append((n, m))
+        if len({n for n, _ in out}) != len(out):
+            raise ValueError("duplicate node ids in node_mult")
+        return tuple(sorted(out))
+    raise TypeError(f"node_mult must be None, a profile name, or a "
+                    f"{{node: mult}} mapping, got {type(nm)!r}")
+
+
+def node_mult_pairs(nm) -> tuple:
+    """A ``node_mult`` value (raw or frozen) -> concrete ``(node, mult)``
+    pairs (profile names resolved). ``None`` -> ``()``."""
+    nm = freeze_node_mult(nm)
+    if nm is None:
+        return ()
+    if isinstance(nm, str):
+        return tuple(sorted(NODE_MULT_PROFILES[nm].items()))
+    return nm
+
+
+def resolve_node_mult(nm, n_nodes: int) -> tuple:
+    """Frozen ``node_mult`` -> a dense ``(n_nodes,)`` multiplier tuple
+    (1.0 everywhere a pair does not override) — the lowering's per-phase
+    row of the traced ``(P, N)`` operand."""
+    row = [1.0] * n_nodes
+    for n, m in node_mult_pairs(nm):
+        row[n] = m
+    return tuple(row)
+
+
 @dataclass(frozen=True)
 class Phase:
     """One piecewise regime over the event axis.
@@ -116,7 +193,9 @@ class Phase:
     the ALock ``(local, remote)`` budgets: acquisitions arming while the
     phase is live use the phase's budgets (the handoff is per-arm, not
     retroactive — a budget granted in phase *p* is spent down even after
-    the boundary, until its holder re-arms).
+    the boundary, until its holder re-arms); ``node_mult`` swaps the
+    per-node fail-slow multipliers for the phase (degradation programs —
+    a limp that spreads node-to-node across phases).
     """
     frac: float
     locality: object = None          # scalar | (T,) tuple | Mixed | None
@@ -126,6 +205,8 @@ class Phase:
     cost: object = None              # COST_PROFILES name | CostModel |
     #                                  override mapping | None (inherit)
     b_init: tuple | None = None      # (local, remote) | None (inherit)
+    node_mult: object = None         # NODE_MULT_PROFILES name |
+    #                                  {node: mult} mapping | None (inherit)
 
     def __post_init__(self):
         f = float(self.frac)
@@ -140,6 +221,8 @@ class Phase:
         object.__setattr__(self, "cost", freeze_cost(self.cost))
         if self.b_init is not None:
             object.__setattr__(self, "b_init", _check_b_init(self.b_init))
+        object.__setattr__(self, "node_mult",
+                           freeze_node_mult(self.node_mult))
 
 
 @dataclass(frozen=True)
@@ -164,6 +247,8 @@ class Workload:
     phases: tuple = ()               # tuple[Phase, ...]
     cost: object = None              # COST_PROFILES name | CostModel |
     #                                  override mapping | None (sweep default)
+    node_mult: object = None         # NODE_MULT_PROFILES name |
+    #                                  {node: mult} mapping | None (uniform)
 
     def __post_init__(self):
         if self.alg not in ALGS:
@@ -182,6 +267,8 @@ class Workload:
         _check_think(self.think)
         object.__setattr__(self, "b_init", _check_b_init(self.b_init))
         object.__setattr__(self, "cost", freeze_cost(self.cost))
+        object.__setattr__(self, "node_mult",
+                           freeze_node_mult(self.node_mult))
         object.__setattr__(self, "seed", int(self.seed))
         phases = tuple(self.phases)
         if phases:
@@ -211,6 +298,16 @@ class Workload:
                 raise ValueError(
                     f"phase per-thread locality needs {self.n_threads} "
                     f"entries, got {len(p.locality)}")
+        # node_mult node ids are validated here (not in Phase) because
+        # only the workload knows the topology — same split as down_nodes
+        for what, nm in [("node_mult", self.node_mult)] + \
+                [(f"phases[{i}].node_mult", p.node_mult)
+                 for i, p in enumerate(phases)]:
+            bad = [n for n, _ in node_mult_pairs(nm)
+                   if not 0 <= n < self.n_nodes]
+            if bad:
+                raise ValueError(f"{what} node ids {bad} outside "
+                                 f"[0, {self.n_nodes})")
 
     @property
     def n_threads(self) -> int:

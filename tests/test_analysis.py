@@ -149,12 +149,43 @@ def test_cli_selftest_passes():
     assert "BLIND" not in r.stdout, r.stdout
 
 
-def test_cli_imports_reports_dead_weight():
+def test_cli_imports_gate_clean_with_quarantine():
     r = _cli("--imports")
     assert r.returncode == 0, r.stdout + r.stderr
     assert "unreachable" in r.stdout
-    # the training stack is real dead weight from the simulator's roots
+    # the training stack is real dead weight from the simulator's roots,
+    # parked under an explicit quarantine entry rather than deleted
     assert "repro.train.loop" in r.stdout, r.stdout
+    assert "quarantined" in r.stdout, r.stdout
+    assert "0 unexpected" in r.stdout, r.stdout
+    assert "imports gate: clean." in r.stdout, r.stdout
+
+
+def test_imports_gate_flags_unexpected_and_stale():
+    """The gate is actionable both ways: an unreachable module without a
+    quarantine entry fails, and a quarantine entry whose tree became
+    reachable (or vanished) fails too."""
+    from repro.analysis import imports as imp
+    quarantined, unexpected, stale = imp.classify()
+    assert quarantined and not unexpected and not stale
+    # drop one entry -> its modules become unexpected
+    trimmed = {k: v for k, v in imp.QUARANTINED.items()
+               if k != "repro.train"}
+    orig = imp.QUARANTINED
+    try:
+        imp.QUARANTINED = trimmed
+        _, unexpected, _ = imp.classify()
+        assert "repro.train.loop" in unexpected
+        text, rc = imp.report()
+        assert rc == 1 and "UNEXPECTED" in text
+        # add a prefix covering nothing -> stale
+        imp.QUARANTINED = {**orig, "repro.no_such_pkg": "ghost"}
+        _, _, stale = imp.classify()
+        assert stale == ["repro.no_such_pkg"]
+        text, rc = imp.report()
+        assert rc == 1 and "STALE" in text
+    finally:
+        imp.QUARANTINED = orig
 
 
 def test_cli_unknown_rule_id_exits_2():

@@ -61,6 +61,11 @@ def test_kernel_ragged_tile_and_chunk_bitwise():
     # budget and doubles the RNIC service cost per replica
     cst = np.tile(np.int32(costs), (B, P, 1))
     cst[:, 1, 4:6] *= 2
+    # fail-slow: node 2 limps at 4x in phase 1, then node 1 at 1.5x in
+    # phase 2 — exercises the (P, N) node_mult operand across the phase edge
+    nm = np.ones((B, P, N), np.float32)
+    nm[:, 0, 2] = 4.0
+    nm[:, 1, 1] = 1.5
     wl = WorkloadOperands(
         locality=jnp.asarray(loc), zcdf=jnp.asarray(np.float32(zc)),
         edges=jnp.asarray(np.tile(np.int32([0, 600]), (B, 1))),
@@ -68,7 +73,7 @@ def test_kernel_ragged_tile_and_chunk_bitwise():
         active=jnp.asarray(active),
         b_init=jnp.asarray(np.tile(np.int32([[2, 3], [1, 5]]), (B, 1, 1))),
         seed=jnp.arange(B, dtype=jnp.int32) + 11,
-        cost_rows=jnp.asarray(cst))
+        cost_rows=jnp.asarray(cst), node_mult=jnp.asarray(nm))
     with enable_x64():
         ref = run_events_ref(alg, T, N, K, ev, wl, tn, ln)
         out = run_events(alg, T, N, K, ev, wl, tn, ln,

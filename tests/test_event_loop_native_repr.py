@@ -10,7 +10,8 @@ engine:
     boundaries;
   * **every simulator scenario in the registry** (uniform-grid,
     hot-key-storm, mixed-locality, node-churn, paper-fig5, congested-nic,
-    budget-ramp) via ``repro.experiments.scenario_workloads``;
+    budget-ramp, limping-node, fail-slow-cascade) via
+    ``repro.experiments.scenario_workloads``;
   * latency-ring overflow (``latn`` wrapping past ``lat_samples``) across
     all three engines: XLA, i64-pallas, i32-pair-pallas.
 
@@ -29,7 +30,8 @@ from repro.kernels.event_loop import i32pair as p32
 from repro.kernels.event_loop.ops import (resolve_representation,
                                           run_events, run_events_pairs)
 from repro.kernels.event_loop.ref import run_events_ref
-from repro.workloads import Workload, WorkloadOperands, lower, pad_phases
+from repro.workloads import (Phase, Workload, WorkloadOperands, lower,
+                             pad_phases)
 
 EV = 1100
 
@@ -81,6 +83,10 @@ def test_native_repr_bitwise_phased_zipf_churn(alg):
     active[:, 1, :tpn] = 0          # node 0 down in the second phase
     cst = np.tile(np.int32(costs), (B, P, 1))
     cst[:, 1, 4:6] *= 2
+    # fail-slow: node 1 limps at 3x in the first phase only, so the
+    # degradation operand flips across the mid-chunk phase edge too
+    nm = np.ones((B, P, N), np.float32)
+    nm[:, 0, 1] = 3.0
     wl = WorkloadOperands(
         locality=jnp.asarray(loc), zcdf=jnp.asarray(np.float32(zc)),
         edges=jnp.asarray(np.tile(np.int32([0, 600]), (B, 1))),
@@ -88,7 +94,7 @@ def test_native_repr_bitwise_phased_zipf_churn(alg):
         active=jnp.asarray(active),
         b_init=jnp.asarray(np.tile(np.int32([[2, 3], [1, 5]]), (B, 1, 1))),
         seed=jnp.arange(B, dtype=jnp.int32) + 11,
-        cost_rows=jnp.asarray(cst))
+        cost_rows=jnp.asarray(cst), node_mult=jnp.asarray(nm))
     with enable_x64():
         ref = [np.asarray(r) for r in
                run_events_ref(alg, T, N, K, EV, wl, tn, ln)]
@@ -96,6 +102,37 @@ def test_native_repr_bitwise_phased_zipf_churn(alg):
     out = run_events_pairs(alg, T, N, K, EV, wl, tn, ln,
                            tile=2, ev_chunk=256, interpret=True)
     _assert_bitwise(ref, _pack_outputs(out))
+
+
+def test_node_mult_phase_edge_mid_chunk_bitwise():
+    """Fail-slow satellite: a phase program whose *only* difference across
+    the boundary is ``node_mult`` (node 0 healthy -> 4x limp), with the
+    edge landing mid event-chunk (605 % 256 != 0) — i32-pair kernel (x64
+    off) vs the int64 XLA loop, bitwise, through the full spec -> lower ->
+    pad path."""
+    w = Workload("alock", n_nodes=4, threads_per_node=3, n_locks=8,
+                 locality=0.8, seed=9,
+                 phases=(Phase(frac=0.55),
+                         Phase(frac=0.45, node_mult="limp-node0-4x")))
+    lw = lower(w, EV)
+    alg, T, N, K, _ = lw.shape_key
+    tn, ln, _ = topology(alg, N, T // N, K)
+    wl = WorkloadOperands(*(jnp.asarray(a)[None] for a in lw.operands))
+    with enable_x64():
+        ref = [np.asarray(r) for r in
+               run_events_ref(alg, T, N, K, EV, wl, tn, ln)]
+    out = run_events_pairs(alg, T, N, K, EV, wl, tn, ln,
+                           tile=1, ev_chunk=256, interpret=True)
+    _assert_bitwise(ref, _pack_outputs(out))
+    # the limp is observable: the degraded half really runs slower than a
+    # healthy clone of the same spec (sanity, not bitwise)
+    healthy = lower(w.replace(phases=(Phase(frac=0.55), Phase(frac=0.45))),
+                    EV)
+    wl_h = WorkloadOperands(*(jnp.asarray(a)[None] for a in healthy.operands))
+    with enable_x64():
+        ref_h = [np.asarray(r) for r in
+                 run_events_ref(alg, T, N, K, EV, wl_h, tn, ln)]
+    assert ref[3][0] > ref_h[3][0]      # t_end grows under the limp
 
 
 def test_registry_scenarios_bitwise_i32pair():
@@ -114,7 +151,8 @@ def test_registry_scenarios_bitwise_i32pair():
         sim_scenarios[name] = ws
     assert set(sim_scenarios) == {
         "uniform-grid", "hot-key-storm", "mixed-locality", "node-churn",
-        "paper-fig5", "congested-nic", "budget-ramp"}
+        "paper-fig5", "congested-nic", "budget-ramp", "limping-node",
+        "fail-slow-cascade"}
 
     buckets: dict[tuple, list] = {}
     for name, ws in sim_scenarios.items():

@@ -79,7 +79,8 @@ def test_experiment_grid_labels_dedupe_and_results():
 def test_registry_names_and_unknown():
     names = scenario_names()
     for expected in ("uniform-grid", "hot-key-storm", "mixed-locality",
-                     "node-churn", "paper-fig5", "coord-stress"):
+                     "node-churn", "paper-fig5", "coord-stress",
+                     "limping-node", "fail-slow-cascade"):
         assert expected in names
     with pytest.raises(ValueError, match="unknown scenario"):
         get_scenario("nope")
@@ -90,6 +91,27 @@ def test_run_scenario_rows_smoke():
                         options=ExecOptions(backend="xla"))
     assert all({"name", "us_per_call", "derived"} <= set(r) for r in rows)
     assert any("node3_op_share" in r["name"] for r in rows)
+
+
+def test_fail_slow_scenarios_report_per_node_rows():
+    """Non-uniform node_mult workloads break throughput out per node;
+    uniform (healthy) workloads keep the per-alg aggregate only."""
+    rows = run_scenario("limping-node", n_seeds=1, n_events=600,
+                        options=ExecOptions(backend="xla"))
+    names = [r["name"] for r in rows]
+    for n in range(4):
+        assert f"alock.hot.limp.node{n}" in names
+    assert not any(n.startswith("alock.hot.healthy.node") for n in names)
+    limp0 = next(r for r in rows if r["name"] == "alock.hot.limp.node0")
+    assert limp0["node_mult_max"] == 4.0
+    assert 0.0 < limp0["node_op_share"] < 1.0
+    assert any(n.endswith("limp_throughput_ratio") for n in names)
+    # the cascade's per-phase program also counts as non-uniform
+    rows = run_scenario("fail-slow-cascade", n_seeds=1, n_events=600,
+                        options=ExecOptions(backend="xla"))
+    names = [r["name"] for r in rows]
+    assert "mcs.cascade.node3" in names
+    assert not any(n.startswith("mcs.healthy.node") for n in names)
 
 
 # -- coord stress through the workload spec ---------------------------------
@@ -110,6 +132,8 @@ def test_coord_stress_deterministic_and_churn_shaped():
     assert r1.ops == r2.ops and r1.per_node_ops == r2.per_node_ops
     assert r1.lease_grants == r2.lease_grants
     assert r1.lease_steals == r2.lease_steals
+    # contended names exercise the bounded-retry path, deterministically
+    assert r1.lease_retries == r2.lease_retries > 0
     # node 2 vanishes from phase-1 membership and does fewer lock ops
     assert r1.phase_members == [[0, 1, 2], [0, 1], [0, 1, 2]]
     assert r1.per_node_ops[2] < min(r1.per_node_ops[0],

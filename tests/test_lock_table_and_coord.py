@@ -4,6 +4,7 @@ import threading
 import time
 
 from repro.coord.service import CoordService, LeaseManager, Membership
+from repro.coord.stress import ManualClock
 from repro.core.lock_table import LockTable
 
 
@@ -87,16 +88,65 @@ def test_lease_single_writer_under_contention():
     assert len(wins) == 1
 
 
+def test_lease_acquire_retry_rides_out_expiry():
+    """attempts>1 + ManualClock: the exponential backoff sleeps advance
+    virtual time past the holder's TTL, so a contender that would have
+    given up in one shot wins a later attempt — no real sleeping."""
+    svc = CoordService(4)
+    clock = ManualClock()
+    lm = LeaseManager(svc, ttl_s=0.5, clock=clock)
+    l0 = lm.acquire(0, "ckpt:42")
+    assert l0 is not None
+    # one shot still fails fast (default attempts=1, clock untouched)
+    assert lm.acquire(1, "ckpt:42") is None and clock.t == 0.0
+    # backoff schedule 0.2, 0.4 pushes t to 0.6 > ttl: attempt 3 steals
+    l1 = lm.acquire(1, "ckpt:42", attempts=3, backoff_base_s=0.2)
+    assert l1 is not None and l1.epoch == l0.epoch + 1
+    assert clock.t == 0.2 + 0.4
+
+
+def test_lease_acquire_retry_deadline_and_jitter_deterministic():
+    svc = CoordService(4)
+    clock = ManualClock()
+    lm = LeaseManager(svc, ttl_s=10.0, clock=clock)
+    assert lm.acquire(0, "log") is not None
+    # the deadline caps total backoff: no sleep overshoots it and the
+    # loop stops retrying once it is spent
+    assert lm.acquire(1, "log", attempts=50, backoff_base_s=0.2,
+                      deadline_s=1.0) is None
+    assert clock.t <= 1.0
+    # a seeded rng jitters each sleep into [0.5, 1.0) of its nominal
+    # value — deterministically, so two identical schedules agree
+    t0 = clock.t
+    lm.acquire(1, "log", attempts=4, backoff_base_s=0.2,
+               rng=random.Random(7))
+    d1 = clock.t - t0
+    t0 = clock.t
+    lm.acquire(1, "log", attempts=4, backoff_base_s=0.2,
+               rng=random.Random(7))
+    assert clock.t - t0 == d1
+    nominal = 0.2 + 0.4 + 0.8
+    assert nominal * 0.5 <= d1 < nominal
+
+
 def test_membership_and_straggler_steal():
     svc = CoordService(4)
-    mem = Membership(svc, heartbeat_ttl=0.5)
+    clock = ManualClock()
+    mem = Membership(svc, heartbeat_ttl=0.5, clock=clock)
     for n in range(3):
         mem.join(n)
     assert mem.alive() == [0, 1, 2]
     owned0 = mem.assign_shards(0, 9)
     assert len(owned0) == 3
+    # node 0 heartbeated within the TTL: the steal must abort (a late
+    # heartbeat racing a premature steal_from), leaving ownership intact
+    kept = mem.steal_from(2, dead_node=0)
+    assert set(kept).isdisjoint(owned0)
+    assert [s for s, n in svc.get("shards").items() if n == 0] == owned0
+    # past the TTL node 0 really is dead and the steal goes through
+    clock.advance(0.6)
+    mem.heartbeat(2)
     stolen = mem.steal_from(2, dead_node=0)
     assert set(owned0) <= set(stolen)
-    time.sleep(0.6)
     mem.heartbeat(1)
-    assert mem.alive() == [1]
+    assert mem.alive() == [1, 2]
