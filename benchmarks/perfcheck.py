@@ -10,6 +10,11 @@ Measured quantities:
   * events/sec per backend (warm: one untimed sweep first, so compile cost
     is reported separately and the steady-state rate is comparable PR to
     PR);
+  * an open-loop serving row: the same topology driven by a fixed-rate
+    Poisson arrival stream (``repro.traffic``), recording offered vs
+    achieved request rate and the harness events/sec of the open-loop
+    code path — so the arrival-ingestion lanes show up in the perf
+    trajectory, not only in the scenario JSONs;
   * dispatch/compile counts from ``batch.exec_stats`` — the chunked layout
     must show one dispatch per chunk per mesh (vs one per bucket) while
     reusing a single compile per shape key, which is the CPU-visible half
@@ -21,12 +26,22 @@ Measured quantities:
     every PR records whether the kernel still fits the budget and whether
     the planner had to shrink the tile.
 
+``--baseline FILE`` compares the fresh report against a previous run's
+JSON (CI downloads the last ``BENCH_events_per_sec.json`` artifact and
+passes it here): every tracked events/sec figure must stay within
+``--regression-tolerance`` (default 10%) of the baseline, or the process
+exits non-zero. A missing baseline file, or one measured with a
+different grid/event count, is reported and skipped — the first run of a
+new trajectory cannot regress against anything.
+
 Smoke mode: REPRO_BENCH_EVENTS=2000 (same knob as the other benchmarks).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 import time
 
 import numpy as np
@@ -34,8 +49,24 @@ import numpy as np
 from benchmarks.common import EVENTS
 from repro.core import batch
 from repro.experiments import fig5_workloads
+from repro.workloads import Arrivals, Workload
 
 LOCALITY = (0.85, 0.95, 1.0)
+
+# the open-loop leg: the scenario topology under a fixed-rate Poisson
+# stream — a rate below ALock's knee but above the loopback designs', so
+# the row shows both regimes (tracked vs shed) in one line each
+OPEN_RATE_PER_US = 4.0
+OPEN_REQS = 256
+OPEN_QCAP = 32
+OPEN_ALGS = ("alock", "mcs")
+
+
+def _open_grid():
+    arr = Arrivals(rate_per_us=OPEN_RATE_PER_US, max_requests=OPEN_REQS,
+                   queue_cap=OPEN_QCAP)
+    return [Workload(alg, n_nodes=4, threads_per_node=4, n_locks=16,
+                     locality=0.95, arrivals=arr) for alg in OPEN_ALGS]
 
 
 def _grid():
@@ -59,6 +90,51 @@ def _timed_sweep(cfgs, n_seeds, events, **kw):
     return res, wall, st
 
 
+def _tracked_rates(report: dict) -> dict:
+    """name -> events/sec for every figure the regression gate tracks."""
+    rates = {}
+    for b, row in report.get("backends", {}).items():
+        rates[f"backends.{b}"] = row.get("events_per_sec", 0.0)
+    if "sharding" in report:
+        rates["sharding"] = report["sharding"].get("events_per_sec", 0.0)
+    if "open_loop" in report:
+        rates["open_loop"] = report["open_loop"].get("events_per_sec", 0.0)
+    return rates
+
+
+def _check_baseline(report: dict, path: str, tolerance: float) -> bool:
+    """Diff the fresh report's events/sec against a previous run's JSON."""
+    if not os.path.exists(path):
+        print(f"# baseline: {path} not found — nothing to regress against",
+              flush=True)
+        return True
+    with open(path) as f:
+        base = json.load(f)
+    bg, fg = base.get("grid", {}), report["grid"]
+    keys = ("events_per_replica", "configs", "seeds")
+    if tuple(bg.get(k) for k in keys) != tuple(fg[k] for k in keys):
+        print(f"# baseline: {path} measured a different grid "
+              f"({ {k: bg.get(k) for k in keys} } vs "
+              f"{ {k: fg[k] for k in keys} }) — comparison skipped",
+              flush=True)
+        return True
+    base_rates = _tracked_rates(base)
+    ok = True
+    for name, fresh in _tracked_rates(report).items():
+        ref = base_rates.get(name)
+        if not ref or ref <= 0:
+            continue        # row absent in the baseline: new, not regressed
+        ratio = fresh / ref
+        verdict = "ok" if ratio >= 1.0 - tolerance else "REGRESSION"
+        ok = ok and verdict == "ok"
+        print(f"# baseline {name}: {fresh:,.1f} vs {ref:,.1f} ev/s "
+              f"({ratio:.3f}x) {verdict}", flush=True)
+    if not ok:
+        print(f"# perfcheck: events/sec regressed more than "
+              f"{tolerance:.0%} vs {path}", flush=True)
+    return ok
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--backends", default="xla,pallas",
@@ -69,7 +145,18 @@ def main() -> None:
                     help="rows/device/dispatch for the sharded leg "
                          "(default: half a bucket, forcing 2 chunks)")
     ap.add_argument("--out", default="BENCH_events_per_sec.json")
+    ap.add_argument("--baseline", default=None, metavar="FILE",
+                    help="previous BENCH_events_per_sec.json to diff "
+                         "against; exit non-zero on an events/sec "
+                         "regression beyond the tolerance")
+    ap.add_argument("--regression-tolerance", type=float, default=0.10,
+                    metavar="FRAC",
+                    help="allowed fractional events/sec drop vs the "
+                         "baseline (default 0.10)")
     args = ap.parse_args()
+    if args.baseline and not 0.0 < args.regression_tolerance < 1.0:
+        ap.error(f"--regression-tolerance must be in (0, 1), got "
+                 f"{args.regression_tolerance}")
 
     cfgs = _grid()
     n_buckets = len({batch.shape_key(c, args.events) for c in cfgs})
@@ -134,6 +221,33 @@ def main() -> None:
           f"dispatches={st_c['dispatches']},compiles={st_c['compiles']},"
           f"bitwise_ok={eq}", flush=True)
 
+    # open-loop leg: the arrival-ingestion code path is a different kernel
+    # trace (R > 0 adds the request lanes), so its events/sec is tracked
+    # as its own trajectory row, with the simulated serving split alongside
+    open_cfgs = _open_grid()
+    res_o, wall_o, st_o = _timed_sweep(open_cfgs, args.seeds, args.events,
+                                       backend="xla")
+    open_events = len(open_cfgs) * args.seeds * args.events
+    report["open_loop"] = {
+        "rate_per_us": OPEN_RATE_PER_US, "requests": OPEN_REQS,
+        "queue_cap": OPEN_QCAP, "wall_s": round(wall_o, 4),
+        "events_per_sec": round(open_events / max(wall_o, 1e-9), 1),
+        "dispatches": st_o["dispatches"], "compiles": st_o["compiles"],
+        "workloads": {},
+    }
+    for w, br in zip(open_cfgs, res_o):
+        sm = br.serving_mean()
+        report["open_loop"]["workloads"][w.alg] = {
+            "offered_per_us": round(sm["offered_per_us"], 3),
+            "goodput_per_us": round(sm["goodput_per_us"], 3),
+            "drop_rate": round(sm["drop_rate"], 4),
+        }
+        print(f"perfcheck.open_loop.{w.alg},"
+              f"{wall_o * 1e6 / len(open_cfgs):.1f},"
+              f"offered={sm['offered_per_us']:.3f}/us,"
+              f"goodput={sm['goodput_per_us']:.3f}/us,"
+              f"drop={sm['drop_rate']:.3f}", flush=True)
+
     bk = report["backends"]
     if "xla" in bk and "pallas" in bk:
         report["pallas_over_xla"] = round(
@@ -142,6 +256,10 @@ def main() -> None:
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
     print(f"# wrote {args.out}", flush=True)
+
+    if args.baseline and not _check_baseline(report, args.baseline,
+                                             args.regression_tolerance):
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -30,7 +30,8 @@ def main() -> None:
     rs = rows()
     if not rs:
         emit("roofline.missing", 0.0,
-             "run: python -m repro.launch.dryrun --all")
+             "no artifacts/dryrun/*.json (the dry-run generator left with "
+             "the legacy launch stack)")
         return
     for r in rs:
         t = r["roofline"]

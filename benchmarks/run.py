@@ -38,7 +38,7 @@ import sys
 import time
 
 from benchmarks import (common, fig1_loopback, fig4_budget, fig5_throughput,
-                        fig6_latency, microbench, roofline)
+                        fig6_latency, microbench, roofline, serving_curves)
 from repro.core import batch
 from repro.experiments import (ExecOptions, Slo, check_slo, get_scenario,
                                run_scenario, scenario_names)
@@ -50,6 +50,7 @@ SECTIONS = {
     "fig6": fig6_latency.main,
     "micro": microbench.main,
     "roofline": roofline.main,
+    "serving": serving_curves.main,
 }
 
 

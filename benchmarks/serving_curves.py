@@ -1,0 +1,67 @@
+"""Serving curves: goodput and p99 sojourn vs offered load, with knees.
+
+Runs the registry's ``open-loop-ramp`` scenario — a Poisson arrival
+stream at each rate of the ramp per algorithm, bounded wait queue with
+tail drop — and prints the serving-curve table the paper's closed-loop
+figures cannot show: offered vs achieved request rate, drop rate, and
+p99 *sojourn* (arrival -> departure, queueing included) next to the p99
+acquire latency the closed-loop benches report. Below each algorithm's
+saturation knee the two goodput columns track; above it the queue
+overflows and the drop column absorbs the difference. The knee lines at
+the bottom are ``repro.traffic.metrics.detect_knee`` over the measured
+curve — ALock's local-handoff capacity sits several times above the
+loopback designs, which is the serving-path restatement of the paper's
+throughput asymmetry.
+
+Usage: PYTHONPATH=src python -m benchmarks.serving_curves [--seeds N]
+           [--events N] [--backend auto|xla|pallas] [--devices N]
+           [--chunk R]
+Also runnable as the ``serving`` section of ``benchmarks.run``.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import EVENTS
+from repro.experiments import ExecOptions, run_scenario
+
+
+def _fmt_us(ns: float) -> str:
+    return f"{ns / 1e3:.2f}" if ns == ns else "nan"      # NaN-safe
+
+
+def main(n_seeds: int = 1, options: ExecOptions | None = None,
+         events: int | None = None) -> None:
+    options = options or ExecOptions.from_env()
+    rows = run_scenario("open-loop-ramp", n_seeds=n_seeds,
+                        n_events=events or EVENTS, options=options)
+    by_name = {r["name"]: r for r in rows}
+    print(f"{'workload':<18}{'offered/us':>11}{'goodput/us':>11}"
+          f"{'drop':>7}{'p99.soj.us':>12}{'p99.acq.us':>12}")
+    for r in rows:
+        if not r["name"].endswith(".serving"):
+            continue
+        lbl = r["name"][:-len(".serving")]
+        acq = by_name.get(lbl, {}).get("p99_lat_ns", float("nan"))
+        print(f"{lbl:<18}{r['offered_per_us']:>11.3f}"
+              f"{r['goodput_per_us']:>11.3f}{r['drop_rate']:>7.3f}"
+              f"{_fmt_us(r['p99_sojourn_ns']):>12}{_fmt_us(acq):>12}")
+    for r in rows:
+        if r["name"].endswith(".knee"):
+            print(f"# {r['name']}: {r['derived']}", flush=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seeds", type=int, default=1)
+    ap.add_argument("--events", type=int, default=EVENTS)
+    ap.add_argument("--backend", choices=("auto", "xla", "pallas"),
+                    default=None)
+    ap.add_argument("--devices", type=int, default=None)
+    ap.add_argument("--chunk", type=int, default=None)
+    args = ap.parse_args()
+    main(n_seeds=args.seeds,
+         options=ExecOptions.from_env(backend=args.backend,
+                                      devices=args.devices,
+                                      chunk=args.chunk),
+         events=args.events)

@@ -27,6 +27,14 @@ VMEM plan + static dims the vmem-consistency rule diffs the byte table
 against. Tracing runs under an explicit x64 context per row, so the
 catalog is identical whether the host process enables x64 or not.
 
+Open-loop buckets ride in through the same four kinds: a scenario whose
+workloads carry :class:`~repro.workloads.Arrivals` lowers to a shape key
+with ``R > 0`` request slots, so the traced jaxprs include the arrival
+ingestion/dispatch lanes and the per-request outputs, and the rules lint
+them exactly like the closed loop. ``meta["dims"]["R"]`` /
+``meta["open_loop"]`` mark those rows; the vmem-consistency rule prices
+the open-loop buffer table through the same ``R``.
+
 >>> eps = trace_entrypoints(scenarios=["node-churn"], n_events=512)
 >>> sorted({ep.kind for ep in eps})
 ['pallas-i64', 'pallas-native', 'pallas-pairs', 'xla-batch']
@@ -35,6 +43,10 @@ catalog is identical whether the host process enables x64 or not.
 True
 >>> pairs[0].meta["plan"].representation
 'i32pair'
+>>> ramp = trace_entrypoints(scenarios=["burst-storm"], n_events=512,
+...                          kinds=["xla-batch"])
+>>> all(ep.meta["open_loop"] and ep.meta["dims"]["R"] > 0 for ep in ramp)
+True
 """
 from __future__ import annotations
 
@@ -55,7 +67,7 @@ DEFAULT_TRACE_EVENTS = 2048
 @dataclass(frozen=True)
 class Entrypoint:
     """One traced engine entrypoint: a closed jaxpr + rule context."""
-    name: str            # e.g. "pallas-pairs:('alock', 16, 4, 16, 2048)"
+    name: str            # e.g. "pallas-pairs:('alock', 16, 4, 16, 2048, 0)"
     kind: str            # xla-batch | pallas-i64 | pallas-native | ...
     jaxpr: Any           # jax.core.ClosedJaxpr
     repr32: bool         # Mosaic-lowerability rules apply
@@ -124,11 +136,12 @@ def trace_entrypoints(scenarios: Iterable[str] | None = None,
         "xla-batch", "pallas-i64", "pallas-native", "pallas-pairs"}
     eps: list[Entrypoint] = []
     for key, (wl, bmeta) in collect_buckets(scenarios, n_events).items():
-        alg, T, N, K, ne = key
+        alg, T, N, K, ne, R = key
         B, P = wl.seed.shape[0], bmeta["n_phases"]
         thread_node, lock_node, _ = topology(alg, N, T // N, K)
-        dims = {"T": T, "N": N, "K": K, "P": P}
-        meta = dict(bmeta, shape_key=key, B=B, dims=dims)
+        dims = {"T": T, "N": N, "K": K, "P": P, "R": R}
+        meta = dict(bmeta, shape_key=key, B=B, dims=dims,
+                    open_loop=R > 0)
 
         def j(a):
             return jax.numpy.asarray(a)
@@ -153,7 +166,8 @@ def trace_entrypoints(scenarios: Iterable[str] | None = None,
         # clamping+planning code path), so the vmem rule diffs the same
         # (tile, ev_chunk) the traced pallas_call actually bound
         if "pallas-native" in want:
-            plan = el_ops.plan_for_run(B, P, ne, T, N, K, interpret=False,
+            plan = el_ops.plan_for_run(B, P, ne, T, N, K, R=R,
+                                       interpret=False,
                                        representation="i32pair")
             with enable_x64():
                 jx = _trace(functools.partial(
@@ -163,7 +177,8 @@ def trace_entrypoints(scenarios: Iterable[str] | None = None,
                                   jx, repr32=True, x64_off=False,
                                   meta=dict(meta, plan=plan)))
         if "pallas-pairs" in want:
-            plan = el_ops.plan_for_run(B, P, ne, T, N, K, interpret=False,
+            plan = el_ops.plan_for_run(B, P, ne, T, N, K, R=R,
+                                       interpret=False,
                                        representation="i32pair")
             with disable_x64():
                 jx = _trace(functools.partial(

@@ -23,7 +23,12 @@ Offenders:
   * ``bucket_offender`` — one sweep bucket holding two different abstract
     signatures (R003: a silent recompile per sweep);
   * ``corrupt_buffer_table`` — a VMEM byte table whose ``scr.victim`` row
-    drifted from the kernel's real allocation (V001).
+    drifted from the kernel's real allocation (V001);
+  * ``corrupt_open_buffer_table`` — the open-loop variant: the
+    per-request dispatch scratch ``scr.curreq`` (only allocated when the
+    bucket carries ``R > 0`` request slots) drifted, diffed against a
+    real arrival-stream trace — proves V001 watches the traffic buffers
+    too (V001).
 
 >>> fams = run_corpus()
 >>> sorted(fams) == ["mosaic-lowerability", "retrace-hazards",
@@ -47,7 +52,7 @@ from repro.analysis.rules import (RULES, _stamp, check_bucket_signatures,
 
 __all__ = ["run_corpus", "mosaic_offender", "x64_offender",
            "weak_offender", "lazy_resolver", "bucket_offender",
-           "corrupt_buffer_table"]
+           "corrupt_buffer_table", "corrupt_open_buffer_table"]
 
 
 def mosaic_offender() -> Entrypoint:
@@ -117,7 +122,7 @@ def bucket_offender() -> dict:
     ops = lower(Workload("alock", 2, 2, 8, locality=0.9), 512).operands
     drifted = ops._replace(
         locality=np.asarray(ops.locality, np.float64))
-    return {"corpus:('alock', 4, 2, 8, 512)": [ops, drifted]}
+    return {"corpus:('alock', 4, 2, 8, 512, 0)": [ops, drifted]}
 
 
 def corrupt_buffer_table(**kw) -> dict:
@@ -130,12 +135,35 @@ def corrupt_buffer_table(**kw) -> dict:
     return table
 
 
+def corrupt_open_buffer_table(**kw) -> dict:
+    """The open-loop drift: ``scr.curreq`` — the per-thread current-request
+    dispatch scratch the traffic engine added — silently grew a column.
+    Only meaningful against an ``R > 0`` trace (the closed-loop table has
+    no such row)."""
+    from repro.kernels.event_loop import vmem
+    table = dict(vmem.buffer_table(**kw))
+    (shape, nbytes) = table["scr.curreq"]
+    table["scr.curreq"] = ((shape[0], shape[1] + 1), nbytes)
+    return table
+
+
 @functools.lru_cache(maxsize=1)
 def _pairs_entrypoint():
     """One real (tiny) pairs-path trace for the vmem fixture to corrupt."""
     from repro.analysis.entrypoints import trace_entrypoints
     eps = trace_entrypoints(scenarios=["node-churn"], n_events=256,
                             kinds=["pallas-pairs"])
+    return eps[0]
+
+
+@functools.lru_cache(maxsize=1)
+def _open_pairs_entrypoint():
+    """One real open-loop (R > 0) pairs-path trace — the arrival rows,
+    per-request outputs and dispatch scratch are all bound."""
+    from repro.analysis.entrypoints import trace_entrypoints
+    eps = trace_entrypoints(scenarios=["burst-storm"], n_events=256,
+                            kinds=["pallas-pairs"])
+    assert eps and all(ep.meta["dims"]["R"] > 0 for ep in eps)
     return eps[0]
 
 
@@ -156,4 +184,7 @@ def run_corpus() -> dict:
     out["retrace-hazards"] = retrace
     out["vmem-consistency"] = _stamp(RULES["V001"], check_vmem_consistency(
         _pairs_entrypoint(), table_fn=corrupt_buffer_table))
+    out["vmem-consistency"] += _stamp(
+        RULES["V001"], check_vmem_consistency(
+            _open_pairs_entrypoint(), table_fn=corrupt_open_buffer_table))
     return out

@@ -56,15 +56,10 @@ ROOT_PACKAGES = ("repro.core", "repro.kernels", "repro.workloads",
 #: module under the prefix anymore — delete the entry when the tree is
 #: wired in or removed).
 QUARANTINED: dict[str, str] = {
-    "repro.train": "legacy training-stack scaffolding from the repo "
-                   "seed; kept as reference until a training loop "
-                   "exercises the lock table end to end",
-    "repro.launch": "legacy launch/serving scaffolding from the repo "
-                    "seed; superseded by benchmarks.run + the scenario "
-                    "registry as the execution front door",
-    "repro.parallel": "collectives/compression helpers for the legacy "
-                      "training stack; nothing in the simulator path "
-                      "shards gradients",
+    # the legacy training stack (repro.train / repro.launch and the
+    # parallel collectives/compression helpers) was deleted outright —
+    # repro.parallel.sharding survives because batch.sweep's chunked
+    # dispatch and the model layers import it
     "repro.core.tla": "TLA+ spec emitter — developer tooling invoked by "
                       "hand, deliberately outside the engine's import "
                       "surface",

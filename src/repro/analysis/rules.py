@@ -332,7 +332,7 @@ def check_runner_cache_keys() -> list[Finding]:
     from repro.core import batch
     findings = []
     mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
-    key = ("alock", 4, 2, 8, 64)
+    key = ("alock", 4, 2, 8, 64, 0)
     old = os.environ.get("REPRO_EVENT_CLOCKS")
     try:
         cks = {}
@@ -441,7 +441,7 @@ def check_vmem_consistency(ep, table_fn=None) -> list[Finding]:
     if not calls:
         return []
     findings = []
-    dims = ep.meta["dims"]            # {T, N, K, P}
+    dims = ep.meta["dims"]            # {T, N, K, P, R}
     table = table_fn(tile=plan.tile, ev_chunk=plan.ev_chunk,
                      lat_samples=plan.lat_samples, repr32=ep.repr32,
                      **dims)

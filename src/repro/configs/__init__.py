@@ -4,14 +4,10 @@ from repro.configs.base import (  # noqa: F401
     cell_supported, get_config, register,
 )
 
-# one module per assigned architecture
-from repro.configs import internvl2_2b   # noqa: F401
-from repro.configs import whisper_base   # noqa: F401
+# one module per retained architecture (the serve-engine exemplars and the
+# optimizer-variant test matrix); the other seed archs were deleted with
+# the legacy training stack
 from repro.configs import minicpm3_4b    # noqa: F401
 from repro.configs import gemma3_1b      # noqa: F401
-from repro.configs import qwen2_72b      # noqa: F401
 from repro.configs import yi_9b          # noqa: F401
-from repro.configs import jamba_v01_52b  # noqa: F401
-from repro.configs import mixtral_8x7b   # noqa: F401
 from repro.configs import qwen2_moe_a27b # noqa: F401
-from repro.configs import mamba2_13b     # noqa: F401

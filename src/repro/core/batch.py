@@ -100,9 +100,12 @@ def _note_call(key) -> None:
 
 def shape_key(cfg, n_events: int):
     """The static-argument tuple that determines a compile: two workloads
-    (or SimConfigs) with equal keys can share one XLA executable."""
+    (or SimConfigs) with equal keys can share one XLA executable. The
+    final entry is the open-loop request-slot count R (0 = closed loop;
+    legacy SimConfigs have no arrivals and are always closed)."""
+    arr = getattr(cfg, "arrivals", None)
     return (cfg.alg, cfg.n_nodes * cfg.threads_per_node, cfg.n_nodes,
-            cfg.n_locks, n_events)
+            cfg.n_locks, n_events, 0 if arr is None else arr.n_requests)
 
 
 @functools.partial(jax.jit,
@@ -132,7 +135,7 @@ def _bucket_runner(key, n_phases: int, backend: str, mesh: Mesh):
     selected backend. Fixed chunk sizes upstream mean each runner compiles
     once per chunk shape and is reused across chunks and buckets.
     """
-    alg, T, N, K, n_events = key
+    alg, T, N, K, n_events, R = key
     rep = None
     if backend == "pallas":
         # the clock representation is env-overridable (REPRO_EVENT_CLOCKS)
@@ -145,9 +148,12 @@ def _bucket_runner(key, n_phases: int, backend: str, mesh: Mesh):
           tuple(d.id for d in mesh.devices.flat))
     if ck in _RUNNER_CACHE:
         return _RUNNER_CACHE[ck], ck
+    n_fields = len(WorkloadOperands._fields)
+    n_out = 10 if R else 6      # open loop appends arr/wq/soj/rstat
 
-    def local_block(loc, zc, ed, th, ac, bi, sd, cst, nm, tn, ln):
-        wl = WorkloadOperands(loc, zc, ed, th, ac, bi, sd, cst, nm)
+    def local_block(*args):
+        wl = WorkloadOperands(*args[:n_fields])
+        tn, ln = args[n_fields:]
         if backend == "pallas":
             from repro.kernels.event_loop.ops import run_events
             return run_events(alg, T, N, K, n_events, wl, tn, ln)
@@ -156,8 +162,8 @@ def _bucket_runner(key, n_phases: int, backend: str, mesh: Mesh):
 
     fn = jax.jit(shard_map(
         local_block, mesh,
-        in_specs=(P("data"),) * 9 + (P(), P()),
-        out_specs=(P("data"),) * 6, axis_names={"data"}))
+        in_specs=(P("data"),) * n_fields + (P(), P()),
+        out_specs=(P("data"),) * n_out, axis_names={"data"}))
     _RUNNER_CACHE[ck] = fn
     return fn, ck
 
@@ -187,16 +193,52 @@ class BatchResult(NamedTuple):
     per_thread_ops: np.ndarray    # (S, T)
     reacquires: np.ndarray        # (S,)
     passes: np.ndarray            # (S,)
+    # open-loop (Workload.arrivals) extras — None on closed-loop runs
+    arr_ns: np.ndarray | None = None      # (S, R) request arrival times
+    wait_ns: np.ndarray | None = None     # (S, R) queue waits, -1 padded
+    sojourn_ns: np.ndarray | None = None  # (S, R) sojourns, -1 padded
+    rstat: np.ndarray | None = None       # (S, R) repro.traffic codes
 
     @property
     def n_seeds(self) -> int:
         return len(self.seeds)
 
+    @property
+    def open_loop(self) -> bool:
+        return self.arr_ns is not None
+
     def result(self, i: int) -> SimResult:
+        extras = {}
+        if self.open_loop:
+            extras = dict(arr_ns=self.arr_ns[i], wait_ns=self.wait_ns[i],
+                          sojourn_ns=self.sojourn_ns[i],
+                          rstat=self.rstat[i])
         return SimResult(int(self.ops[i]), int(self.sim_ns[i]),
                          float(self.throughput_mops[i]), self.lat_ns[i],
                          self.per_thread_ops[i], int(self.reacquires[i]),
-                         int(self.passes[i]))
+                         int(self.passes[i]), **extras)
+
+    # -- open-loop serving aggregates --------------------------------------
+
+    def serving(self, i: int) -> dict:
+        """One seed's ``repro.traffic.metrics.serving_summary`` dict."""
+        if not self.open_loop:
+            raise ValueError("serving() needs an open-loop run "
+                             "(Workload.arrivals)")
+        from repro.traffic.metrics import serving_summary
+        return serving_summary(self.arr_ns[i], self.wait_ns[i],
+                               self.sojourn_ns[i], self.rstat[i],
+                               int(self.sim_ns[i]))
+
+    def serving_mean(self) -> dict:
+        """Seed-averaged serving summary (nan-safe over empty seeds)."""
+        rows = [self.serving(i) for i in range(self.n_seeds)]
+        out = {}
+        for k in rows[0]:
+            vals = np.asarray([r[k] for r in rows], np.float64)
+            finite = vals[np.isfinite(vals)]
+            out[k] = float(finite.mean()) if len(finite) else float("nan")
+        return out
 
     # -- throughput aggregates ---------------------------------------------
 
@@ -261,7 +303,7 @@ def _exec_bucket(key, thread_node, lock_node, wl: WorkloadOperands,
     over the device mesh in fixed chunks of ``chunk`` rows per device, one
     dispatch per chunk, executables shared across chunks.
     """
-    alg, T, N, K, n_events = key
+    alg, T, N, K, n_events, R = key
     B = wl.seed.shape[0]
     n_phases = wl.edges.shape[1]
     if devices is None and chunk is None:
@@ -273,7 +315,7 @@ def _exec_bucket(key, thread_node, lock_node, wl: WorkloadOperands,
                 # re-record the VMEM plan per dispatch: planning inside
                 # run_events is trace-time only, so a cached executable
                 # would otherwise leave exec_stats()["vmem_plan"] stale
-                plan_for_run(B, n_phases, n_events, T, N, K)
+                plan_for_run(B, n_phases, n_events, T, N, K, R=R)
                 out = run_events_jit(alg, T, N, K, n_events, wj,
                                      thread_node, lock_node)
             else:
@@ -299,7 +341,7 @@ def _exec_bucket(key, thread_node, lock_node, wl: WorkloadOperands,
         # each shard's kernel sees `rows` replicas (same trace-time-only
         # caveat as the unsharded branch above)
         from repro.kernels.event_loop.ops import plan_for_run
-        plan_for_run(rows, n_phases, n_events, T, N, K)
+        plan_for_run(rows, n_phases, n_events, T, N, K, R=R)
     outs = []
     with enable_x64():
         for c in range(n_chunks):
@@ -307,7 +349,7 @@ def _exec_bucket(key, thread_node, lock_node, wl: WorkloadOperands,
             outs.append(runner(*(a[sl] for a in leaves), tn, ln))
             _note_call((ck, step))
     return tuple(np.concatenate([np.asarray(o[j]) for o in outs])[:B]
-                 for j in range(6))
+                 for j in range(10 if R else 6))
 
 
 def sweep(configs: Sequence[SimConfig | Workload], n_seeds: int = 1,
@@ -355,12 +397,13 @@ def sweep(configs: Sequence[SimConfig | Workload], n_seeds: int = 1,
 
     out: list[BatchResult | None] = [None] * len(configs)
     for key, idxs in buckets.items():
-        alg, T, N, K, _ = key
+        alg, T, N, K, _, R = key
         kpn = K // N
         thread_node, lock_node, _ = topology(alg, N, T // N, K, cm)
         C, S = len(idxs), n_seeds
         # scenarios with fewer phases pad up to the bucket max with
         # unreachable phases, so mixed phase programs share one executable
+        # (open-loop arrival rows pad identically; R is part of the key)
         Pmax = max(lowered[i].operands.n_phases for i in idxs)
         loc = np.empty((C, S, Pmax, T), np.float32)
         zc = np.empty((C, S, Pmax, kpn), np.float32)
@@ -371,11 +414,19 @@ def sweep(configs: Sequence[SimConfig | Workload], n_seeds: int = 1,
         cr = np.empty((C, S, Pmax, N_COST_ROWS), np.int32)
         nm = np.empty((C, S, Pmax, N), np.float32)
         sd = np.empty((C, S), np.int32)
+        ag = np.empty((C, S, Pmax), np.float32)
+        ae = np.empty((C, S, Pmax), np.int32)
+        aq = np.empty((C, S, Pmax), np.int32)
+        at = np.empty((C, S, Pmax, 2), np.float32)
+        af = np.empty((C, S, R), np.int32)
         for row, i in enumerate(idxs):
             o = pad_phases(lowered[i].operands, Pmax)
             loc[row], zc[row], ed[row] = o.locality, o.zcdf, o.edges
             th[row], ac[row], bi[row] = o.think_ns, o.active, o.b_init
             cr[row], nm[row] = o.cost_rows, o.node_mult
+            ag[row], ae[row], aq[row] = (o.arr_gap_ns, o.arr_edges,
+                                         o.arr_qcap)
+            at[row], af[row] = o.arr_token, o.arr_fix
             sd[row] = int(o.seed) + np.arange(S, dtype=np.int32)
 
         def flat(a):
@@ -383,14 +434,19 @@ def sweep(configs: Sequence[SimConfig | Workload], n_seeds: int = 1,
 
         wl = WorkloadOperands(flat(loc), flat(zc), flat(ed), flat(th),
                               flat(ac), flat(bi), flat(sd), flat(cr),
-                              flat(nm))
-        done, lat, _lat_n, t_end, nreacq, npass = _exec_bucket(
+                              flat(nm), flat(ag), flat(ae), flat(aq),
+                              flat(at), flat(af))
+        outs = _exec_bucket(
             key, thread_node, lock_node, wl, backend, devices, chunk)
+        done, lat, _lat_n, t_end, nreacq, npass = outs[:6]
         done = done.reshape(C, S, T)
         lat = lat.reshape(C, S, LAT_SAMPLES)
         t_end = t_end.reshape(C, S)
         nreacq = nreacq.reshape(C, S)
         npass = npass.reshape(C, S)
+        extras = None
+        if R:
+            extras = tuple(o.reshape(C, S, R) for o in outs[6:])
 
         for row, i in enumerate(idxs):
             ops = done[row].sum(axis=1).astype(np.int64)
@@ -398,7 +454,11 @@ def sweep(configs: Sequence[SimConfig | Workload], n_seeds: int = 1,
             # per-element arithmetic matches simulate()'s scalar formula
             # bitwise: ops / sim_ns * 1e3 in float64 either way
             mops = ops / sim_ns * 1e3
+            kw = {}
+            if extras is not None:
+                kw = dict(arr_ns=extras[0][row], wait_ns=extras[1][row],
+                          sojourn_ns=extras[2][row], rstat=extras[3][row])
             out[i] = BatchResult(configs[i], n_events, sd[row], ops,
                                  sim_ns, mops, lat[row], done[row],
-                                 nreacq[row], npass[row])
+                                 nreacq[row], npass[row], **kw)
     return out

@@ -356,6 +356,11 @@ class SimResult(NamedTuple):
     per_thread_ops: jax.Array
     reacquires: int = 0       # budget-exhaustion pReacquire events
     passes: int = 0           # MCS lock passes
+    # open-loop (Workload.arrivals) extras — None on closed-loop runs
+    arr_ns: jax.Array | None = None    # (R,) request arrival times
+    wait_ns: jax.Array | None = None   # (R,) queue wait, -1 = never served
+    sojourn_ns: jax.Array | None = None  # (R,) total, -1 = never completed
+    rstat: jax.Array | None = None     # (R,) repro.traffic status codes
 
 
 LAT_SAMPLES = 1 << 15
@@ -411,8 +416,27 @@ def _run_events(alg, T, N, K, n_events, wl: WorkloadOperands, thread_node,
     # phase is lowered as two identical halves).
     multi_phase = wl.edges.shape[0] > 1
 
+    # static via the arr_fix shape: R == 0 is the closed loop and traces
+    # the exact pre-traffic program (every `if open_loop` block below is
+    # python-level dead code then — bitwise inertness by construction)
+    R = wl.arr_fix.shape[-1]
+    open_loop = R > 0
+    if open_loop:
+        # lazy: repro.traffic pulls in the i32pair helpers, and the import
+        # is only needed on the open-loop path anyway
+        from repro.traffic.metrics import COMPLETED, DROPPED, IN_SERVICE
+        from repro.traffic.stream import arrival_plan, arrival_times_i64
+        plan = arrival_plan(wl, n_events)
+        arr = arrival_times_i64(plan.gaps)          # (R,) i64
+        idx_r = jnp.arange(R, dtype=I32)
+
     def event(i, carry):
-        sem, ready, busy, op_start, done, lat, lat_n, nreacq, npass = carry
+        if open_loop:
+            (sem, ready, busy, op_start, done, lat, lat_n, nreacq, npass,
+             rstat, curreq, arrptr, qlen, wq, soj) = carry
+        else:
+            sem, ready, busy, op_start, done, lat, lat_n, nreacq, npass \
+                = carry
         if multi_phase:
             # piecewise phase over the event axis; with all-active phases
             # every line below reduces bitwise to the flat engine
@@ -432,10 +456,25 @@ def _run_events(alg, T, N, K, n_events, wl: WorkloadOperands, thread_node,
                                 jnp.min(jnp.where(act != 0, ready, never)),
                                 cont_min)
             ready = jnp.where(rejoin, jnp.maximum(ready, now_min), ready)
-            tid = jnp.argmin(jnp.where(act != 0, ready, never)).astype(I32)
+            actm = act != 0
         else:
             ph = 0
-            tid = jnp.argmin(ready).astype(I32)
+            actm = None
+        if open_loop:
+            # idle threads (NCS, no request bound) wake at the earliest
+            # available arrival instead of re-arming; busy threads keep
+            # their own clocks. A drained stream with everyone idle makes
+            # every lane read `never` -> the event is a no-op (live=False).
+            pend = (sem.pc == mc.NCS) & (curreq < 0)
+            avail = (rstat == 0) & (plan.tok == 1)
+            next_arr = jnp.min(jnp.where(avail, arr, never))
+            elig = jnp.where(pend, jnp.maximum(ready, next_arr), ready)
+        else:
+            elig = ready
+        if actm is not None:
+            tid = jnp.argmin(jnp.where(actm, elig, never)).astype(I32)
+        else:
+            tid = jnp.argmin(elig).astype(I32)
         # phase-indexed cost rows + ALock budgets (constant rows for a
         # single-phase spec — identical arithmetic to the flat engine)
         cst = wl.cost_rows[ph]
@@ -443,7 +482,7 @@ def _run_events(alg, T, N, K, n_events, wl: WorkloadOperands, thread_node,
         c_svc_r, c_svc_l, c_wire_r, c_wire_l = (cst[4], cst[5], cst[6],
                                                 cst[7])
         b_init = wl.b_init[ph]
-        now = ready[tid]
+        now = elig[tid]            # == ready[tid] on the closed-loop path
         k1, k2, k3 = jax.random.split(jax.random.fold_in(key, i), 3)
         # workload draw (used only when this step is the NCS re-arm);
         # dtypes pinned so enabling x64 does not change the draws
@@ -460,6 +499,36 @@ def _run_events(alg, T, N, K, n_events, wl: WorkloadOperands, thread_node,
         new_t = node * kpn + off
         new_c = (node != mynode).astype(I32)
 
+        if open_loop:
+            live = now != never
+            pend_tid = pend[tid]
+            # -- arrival ingestion: every request with arr <= now either
+            # joins the wait queue or drops (token reject / queue full).
+            # `rank` orders the token-admitted newcomers so tail drop is
+            # exact when a burst overshoots the remaining queue room.
+            cnt_now = jnp.where(
+                live, jnp.sum((arr <= now).astype(I32), dtype=I32), arrptr)
+            newly = (idx_r >= arrptr) & (idx_r < cnt_now)
+            rank = plan.tokcum - plan.tokcum[arrptr]
+            join = newly & (plan.tok == 1) & (rank < plan.qcap - qlen)
+            rstat = jnp.where(newly & ~join, DROPPED, rstat)
+            qlen = qlen + jnp.sum(join.astype(I32), dtype=I32)
+            arrptr = cnt_now
+            # -- dispatch: an idle selected thread takes the FIFO head --
+            queued = (rstat == 0) & (idx_r < arrptr)
+            head = jnp.min(jnp.where(queued, idx_r,
+                                     jnp.iinfo(jnp.int32).max))
+            do_disp = live & pend_tid & jnp.any(queued)
+            hd = jnp.minimum(head, jnp.int32(R - 1))
+            rstat = rstat.at[hd].set(
+                jnp.where(do_disp, IN_SERVICE, rstat[hd]))
+            curreq = curreq.at[tid].set(
+                jnp.where(do_disp, hd, curreq[tid]))
+            wq = wq.at[hd].set(jnp.where(do_disp, now - arr[hd], wq[hd]))
+            qlen = qlen - do_disp.astype(I32)
+            # an idle thread with nothing to take makes no machine step
+            step_ok = live & (~pend_tid | do_disp)
+
         was_ncs_bound = (sem.pc[tid] == mc.REL_CAS) | (sem.pc[tid] == mc.PASS) \
             | (sem.pc[tid] == mc.SL_REL)
         pre_pc = sem.pc[tid]
@@ -468,6 +537,12 @@ def _run_events(alg, T, N, K, n_events, wl: WorkloadOperands, thread_node,
         finished = was_ncs_bound & (sem2.pc[tid] == mc.NCS)
         reacq = (pre_pc == mc.SPIN_BUDGET) & (sem2.pc[tid] == mc.SET_VICTIM_R)
         passed = pre_pc == mc.PASS
+        if open_loop:
+            sem2 = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(step_ok, a, b), sem2, sem)
+            finished = finished & step_ok
+            reacq = reacq & step_ok
+            passed = passed & step_ok
 
         # completion accounting — lat_val reads op_start BEFORE this event's
         # re-stamp so it spans exactly acquire-entry -> release
@@ -484,6 +559,8 @@ def _run_events(alg, T, N, K, n_events, wl: WorkloadOperands, thread_node,
         # caller's CPU (mult 1.0 is bitwise inert — see _scale_cost)
         nm = wl.node_mult[ph]
         is_rdma = (code == OP_RDMA) | (code == OP_LOOP)
+        if open_loop:
+            is_rdma = is_rdma & step_ok
         svc = _scale_cost(jnp.where(code == OP_LOOP, c_svc_l, c_svc_r),
                           nm[tnode])
         wire = _scale_cost(jnp.where(code == OP_LOOP, c_wire_l, c_wire_r),
@@ -496,18 +573,45 @@ def _run_events(alg, T, N, K, n_events, wl: WorkloadOperands, thread_node,
              code == OP_THINK],
             [c_local, c_poll, c_cs, wl.think_ns[ph]], c_local), nm[mynode])
         new_ready = jnp.where(is_rdma, fin + wire, now + dt_plain)
-        ready = ready.at[tid].set(new_ready)
+        if open_loop:
+            ready = ready.at[tid].set(
+                jnp.where(step_ok, new_ready, ready[tid]))
+            opst_upd = (pre_pc == mc.NCS) & step_ok
+        else:
+            ready = ready.at[tid].set(new_ready)
+            opst_upd = pre_pc == mc.NCS
         # latency clock starts when the first lock op (SWAP/SL_CAS) can
         # issue, i.e. after the NCS think completes — Fig. 6 measures
         # acquire->release, not think_ns of app work
         op_start = op_start.at[tid].set(
-            jnp.where(pre_pc == mc.NCS, new_ready, op_start[tid]))
+            jnp.where(opst_upd, new_ready, op_start[tid]))
         nreacq = nreacq + reacq.astype(I32)
         npass = npass + passed.astype(I32)
+        if open_loop:
+            # -- departure: the finishing release frees the thread and
+            # stamps the request's sojourn at the step's completion time
+            req = curreq[tid]
+            comp = finished & (req >= 0)
+            rq = jnp.maximum(req, 0)
+            soj = soj.at[rq].set(
+                jnp.where(comp, new_ready - arr[rq], soj[rq]))
+            rstat = rstat.at[rq].set(jnp.where(comp, COMPLETED, rstat[rq]))
+            curreq = curreq.at[tid].set(jnp.where(comp, -1, curreq[tid]))
+            return (sem2, ready, busy, op_start, done, lat, lat_n, nreacq,
+                    npass, rstat, curreq, arrptr, qlen, wq, soj)
         return sem2, ready, busy, op_start, done, lat, lat_n, nreacq, npass
 
     carry = (sem, ready, busy, op_start, done, lat, lat_n, jnp.int32(0),
              jnp.int32(0))
+    if open_loop:
+        carry = carry + (jnp.zeros(R, I32), jnp.full(T, -1, I32),
+                         jnp.int32(0), jnp.int32(0), jnp.full(R, -1, I64),
+                         jnp.full(R, -1, I64))
+        (sem, ready, busy, op_start, done, lat, lat_n, nreacq, npass,
+         rstat, curreq, arrptr, qlen, wq,
+         soj) = lax.fori_loop(0, n_events, event, carry)
+        return (done, lat, lat_n, jnp.max(ready), nreacq, npass, arr, wq,
+                soj, rstat)
     (sem, ready, busy, op_start, done, lat, lat_n, nreacq,
      npass) = lax.fori_loop(0, n_events, event, carry)
     return done, lat, lat_n, jnp.max(ready), nreacq, npass
@@ -561,12 +665,17 @@ def simulate(cfg: SimConfig | Workload, n_events: int = 400_000,
                 *(jnp.asarray(a)[None] for a in lw.operands))
             out = run_events_jit(
                 w.alg, T, N, K, n_events, batched, thread_node, lock_node)
-            done, lat, lat_n, t_end, nreacq, npass = (o[0] for o in out)
+            out = tuple(o[0] for o in out)
         else:
             wl = WorkloadOperands(*(jnp.asarray(a) for a in lw.operands))
-            done, lat, lat_n, t_end, nreacq, npass = _run_events_jit(
+            out = _run_events_jit(
                 w.alg, T, N, K, n_events, wl, thread_node, lock_node)
+    done, lat, lat_n, t_end, nreacq, npass = out[:6]
+    extras = {}
+    if len(out) > 6:        # open-loop run: per-request serving arrays
+        extras = dict(arr_ns=out[6], wait_ns=out[7], sojourn_ns=out[8],
+                      rstat=out[9])
     ops = int(done.sum())
     sim_ns = max(int(t_end), 1)
     return SimResult(ops, sim_ns, ops / sim_ns * 1e3, lat, done,
-                     int(nreacq), int(npass))
+                     int(nreacq), int(npass), **extras)

@@ -77,6 +77,7 @@ from repro.core.cost_model import N_COST_ROWS
 from repro.core.sim import (LAT_SAMPLES, OP_CS, OP_LOCAL, OP_LOOP, OP_POLL,
                             OP_RDMA, OP_THINK)
 from repro.kernels.event_loop import i32pair as p32
+from repro.traffic.metrics import COMPLETED, DROPPED, IN_SERVICE
 
 I32 = jnp.int32
 I64 = jnp.int64
@@ -151,6 +152,10 @@ class _I64Clocks:
         return jnp.maximum(a, b)
 
     @staticmethod
+    def le(a, b):
+        return a <= b
+
+    @staticmethod
     def reduce_min_masked(v, mask):
         return jnp.min(jnp.where(mask, v, jnp.iinfo(jnp.int64).max), axis=1)
 
@@ -199,6 +204,7 @@ class _PairClocks:
     add_i32 = staticmethod(p32.padd_i32)
     sub = staticmethod(p32.psub)
     max2 = staticmethod(p32.pmax2)
+    le = staticmethod(p32.ple)
     reduce_min_masked = staticmethod(p32.reduce_min_masked)
     reduce_max = staticmethod(p32.reduce_max)
     argmin_masked = staticmethod(p32.argmin_masked)
@@ -210,13 +216,17 @@ class _PairClocks:
 
 def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
                       n_events: int, ev_chunk: int,
-                      lat_samples: int = LAT_SAMPLES, repr32: bool = False):
+                      lat_samples: int = LAT_SAMPLES, repr32: bool = False,
+                      R: int = 0):
     """One (replica_tile, event_chunk) grid step.
 
-    ``refs`` arrive flat from ``pl.pallas_call`` — 12 inputs, then the
-    outputs and scratch whose *count* depends on the clock representation
-    (one ref per clock buffer for i64, an (hi, lo) pair for i32) — and are
-    regrouped here from the static ``repr32`` flag.
+    ``refs`` arrive flat from ``pl.pallas_call`` — 12 inputs (plus the
+    open-loop arrival rows when ``R > 0``), then the outputs and scratch
+    whose *count* depends on the clock representation (one ref per clock
+    buffer for i64, an (hi, lo) pair for i32) — and are regrouped here
+    from the static ``repr32`` / ``R`` flags. ``R == 0`` is the closed
+    loop and parses/traces exactly the pre-traffic program (every
+    ``if R > 0`` block below is python-level dead code then).
 
     s_t0/s_t1 are the two cohort tails for alock; for mcs/spinlock s_t0 is
     the lock word and s_t1/s_vic stay zero (those PCs are unreachable).
@@ -225,17 +235,30 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
     nc = C.nrefs
     (u1_ref, r2_ref, r3_ref, edges_ref, think_ref, locp_ref, actp_ref,
      binit_ref, costs_ref, nmult_ref, tn_ref, ln_ref) = refs[:12]
-    rest = refs[12:]
+    pos = 12
+    if R > 0:
+        arr_refs = refs[pos:pos + nc]
+        tok_ref, tokcum_ref, qcap_ref = refs[pos + nc:pos + nc + 3]
+        pos += nc + 3
+    rest = refs[pos:]
     done_ref = rest[0]
     lat_refs = rest[1:1 + nc]
     latn_ref = rest[1 + nc]
     tend_refs = rest[2 + nc:2 + 2 * nc]
     reacq_ref, npass_ref = rest[2 + 2 * nc:4 + 2 * nc]
-    scr = rest[4 + 2 * nc:]
+    pos = 4 + 2 * nc
+    if R > 0:
+        wq_refs = rest[pos:pos + nc]
+        soj_refs = rest[pos + nc:pos + 2 * nc]
+        rstat_ref = rest[pos + 2 * nc]
+        pos += 2 * nc + 1
+    scr = rest[pos:]
     (s_t0, s_t1, s_vic, s_pc, s_bud, s_nxt, s_prev, s_tgt, s_coh) = scr[:9]
     ready_refs = scr[9:9 + nc]
     busy_refs = scr[9 + nc:9 + 2 * nc]
     opst_refs = scr[9 + 2 * nc:9 + 3 * nc]
+    if R > 0:
+        s_curreq, s_arrptr, s_qlen = scr[9 + 3 * nc:12 + 3 * nc]
 
     is_alock = alg == "alock"
     is_spin = alg == "spinlock"
@@ -246,8 +269,11 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
     @pl.when(j == 0)
     def _init():
         # fresh replicas == sim.init_sem + zeroed clocks/accounting
-        for ref in (s_t0, s_t1, s_vic, s_nxt, s_prev, s_tgt, s_coh,
-                    done_ref, latn_ref, reacq_ref, npass_ref):
+        zrefs = (s_t0, s_t1, s_vic, s_nxt, s_prev, s_tgt, s_coh,
+                 done_ref, latn_ref, reacq_ref, npass_ref)
+        if R > 0:
+            zrefs = zrefs + (rstat_ref, s_arrptr, s_qlen)
+        for ref in zrefs:
             ref[...] = jnp.zeros(ref.shape, ref.dtype)
         s_pc[...] = jnp.full((tile, T), mc.NCS, I32)
         s_bud[...] = jnp.full((tile, T), -1, I32)
@@ -255,6 +281,10 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
                              (opst_refs, (tile, T))):
             C.write(crefs, C.zeros(shape))
         C.write(lat_refs, C.full_m1((tile, lat_samples)))
+        if R > 0:
+            s_curreq[...] = jnp.full((tile, T), -1, I32)
+            C.write(wq_refs, C.full_m1((tile, R)))
+            C.write(soj_refs, C.full_m1((tile, R)))
 
     u1s = u1_ref[...]                               # (tile, ev_chunk) f32
     r2s = r2_ref[...].astype(I32)
@@ -269,6 +299,14 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
     nmp = nmult_ref[...].reshape(tile, P, N)        # f32 fail-slow mults
     tn = jnp.broadcast_to(tn_ref[...].astype(I32), (tile, T))
     ln = jnp.broadcast_to(ln_ref[...].astype(I32), (tile, K))
+    if R > 0:
+        # open-loop arrival rows: times (clock), token admit mask +
+        # exclusive prefix count, per-request queue bound (all (tile, R))
+        arr = C.read(arr_refs)
+        tok = tok_ref[...].astype(I32)
+        tokcum = tokcum_ref[...].astype(I32)
+        qcap = qcap_ref[...].astype(I32)
+        rio = _iota((tile, R), 1)
 
     tids = _iota((tile, T), 1)
     kio = _iota((tile, K), 1)
@@ -297,10 +335,25 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
              C.read(ready_refs), C.read(busy_refs), C.read(opst_refs),
              done_ref[...], C.read(lat_refs), latn_ref[...][:, 0],
              reacq_ref[...][:, 0], npass_ref[...][:, 0])
+    if R > 0:
+        def gat_r(arr, idx):
+            return jnp.sum(jnp.where(rio == idx[:, None], arr,
+                                     arr.dtype.type(0)), axis=1,
+                           dtype=arr.dtype)
+
+        state = state + (rstat_ref[...], s_curreq[...],
+                         s_arrptr[...][:, 0], s_qlen[...][:, 0],
+                         C.read(wq_refs), C.read(soj_refs))
 
     def step(e, st):
-        (t0, t1, vic, pc, bud, nxt, prv, tgt, coh, ready, busy, opst,
-         done, lat, latn, reacq, npass) = st
+        if R > 0:
+            (t0, t1, vic, pc, bud, nxt, prv, tgt, coh, ready, busy, opst,
+             done, lat, latn, reacq, npass,
+             rstat, curreq, arrptr, qlen, wq, soj) = st
+            sem_old = (t0, t1, vic, pc, bud, nxt, prv, tgt, coh)
+        else:
+            (t0, t1, vic, pc, bud, nxt, prv, tgt, coh, ready, busy, opst,
+             done, lat, latn, reacq, npass) = st
 
         # -- phase resolve (pure function of the global event index) -------
         gi = j * ev_chunk + e
@@ -337,7 +390,7 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
                               C.reduce_min_masked(ready, act_row != 0),
                               cont_min)
             ready = C.where(rejoin, C.max2(ready, C.col(now_min)), ready)
-            tid = C.argmin_masked(ready, act_row != 0)
+            actm = act_row != 0
         else:
             # single phase: the flat PR-2 hot path, no phase machinery
             # (lowering guarantees P == 1 operands are all-active)
@@ -346,9 +399,23 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
             binit = binitp[:, 0]
             cst = cstp[:, 0]
             nm_row = nmp[:, 0, :]
-            tid = C.argmin_masked(ready)
+            actm = None
+        if R > 0:
+            # idle threads (NCS, no request bound) wake at the earliest
+            # available arrival instead of re-arming; busy threads keep
+            # their own clocks (mirror of sim._run_events' elig)
+            pend = (pc == mc.NCS) & (curreq < _I(0))
+            avail = (rstat == _I(0)) & (tok == _I(1))
+            next_arr = C.reduce_min_masked(arr, avail)
+            elig = C.where(pend, C.max2(ready, C.col(next_arr)), ready)
+        else:
+            elig = ready
+        if actm is not None:
+            tid = C.argmin_masked(elig, actm)
+        else:
+            tid = C.argmin_masked(elig)
         ohT = tids == tid[:, None]
-        now = C.gather(ohT, ready)
+        now = C.gather(ohT, elig)
         me = tid + 1
         p = gat_t(pc, tid)
         tg = gat_t(tgt, tid)
@@ -372,6 +439,43 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
         node_w = jnp.where(ge, mynode, other).astype(I32)
         new_t = node_w * kpn + r3e
         new_c = (node_w != mynode).astype(I32)
+
+        if R > 0:
+            live = jnp.logical_not(C.is_never(now))
+            pend_tid = jnp.sum(jnp.where(ohT, pend.astype(I32), _I(0)),
+                               axis=1, dtype=I32) == _I(1)
+            # -- arrival ingestion: every request with arr <= now either
+            # joins the wait queue or drops (token reject / queue full);
+            # `rank` orders token-admitted newcomers for exact tail drop.
+            # Integer-exact, so the one-hot forms here agree bitwise with
+            # the XLA loop's dynamic gathers/scatters.
+            arrived = C.le(arr, C.col(now))
+            cnt_now = jnp.where(
+                live, jnp.sum(arrived.astype(I32), axis=1, dtype=I32),
+                arrptr)
+            newly = ((rio >= arrptr[:, None])
+                     & (rio < cnt_now[:, None]))
+            rank = tokcum - gat_r(tokcum, arrptr)[:, None]
+            join = (newly & (tok == _I(1))
+                    & (rank < qcap - qlen[:, None]))
+            rstat = jnp.where(newly & ~join, _I(DROPPED), rstat)
+            qlen = qlen + jnp.sum(join.astype(I32), axis=1, dtype=I32)
+            arrptr = cnt_now
+            # -- dispatch: an idle selected thread takes the FIFO head --
+            queued = (rstat == _I(0)) & (rio < arrptr[:, None])
+            head = jnp.min(jnp.where(queued, rio,
+                                     _I(np.iinfo(np.int32).max)), axis=1)
+            do_disp = live & pend_tid & jnp.any(queued, axis=1)
+            hd = jnp.minimum(head, _I(R - 1))
+            ohR = rio == hd[:, None]
+            dm = do_disp[:, None]
+            rstat = jnp.where(ohR & dm, _I(IN_SERVICE), rstat)
+            curreq = jnp.where(ohT & dm, hd[:, None], curreq)
+            wqv = C.sub(now, C.gather(ohR, arr))
+            wq = C.where(ohR & dm, C.col(wqv), wq)
+            qlen = qlen - do_disp.astype(I32)
+            # an idle thread with nothing to take makes no machine step
+            step_ok = live & (~pend_tid | do_disp)
 
         # -- PC class masks (exactly one true per row) ---------------------
         is_ncs = p == mc.NCS
@@ -463,6 +567,14 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
              jnp.full_like(p, mc.NCS)],
             p).astype(I32)
         pc = jnp.where(ohT, new_pc[:, None], pc)
+        if R > 0:
+            # no-op events (drained stream / idle thread with an empty
+            # queue) keep the semantic machine frozen — the exact analogue
+            # of the XLA loop's step_ok tree_map over sem2
+            sm = step_ok[:, None]
+            (t0, t1, vic, pc, bud, nxt, prv, tgt, coh) = tuple(
+                jnp.where(sm, n, o) for n, o in
+                zip((t0, t1, vic, pc, bud, nxt, prv, tgt, coh), sem_old))
 
         # -- cost opcode + RNIC node (sim._step_fns' cost functions) -------
         lnode = gat_k(ln, tg)
@@ -495,6 +607,8 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
         # i32 — svc/wire take the target card's multiplier, dt_plain the
         # calling thread's node's
         is_rdma = (code == OP_RDMA) | (code == OP_LOOP)
+        if R > 0:
+            is_rdma = is_rdma & step_ok
         ohN = nio == tnode[:, None]
         nm_t = jnp.sum(jnp.where(ohN, nm_row, np.float32(0)), axis=1,
                        dtype=jnp.float32)
@@ -516,10 +630,15 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
             .astype(jnp.float32) * nm_my).astype(I32)
         new_ready = C.where(is_rdma, C.add_i32(fin, wire),
                             C.add_i32(now, dt_plain))
-        ready = C.where(ohT, C.col(new_ready), ready)
+        if R > 0:
+            ready = C.where(ohT & sm, C.col(new_ready), ready)
+        else:
+            ready = C.where(ohT, C.col(new_ready), ready)
 
         # -- completion accounting (latency ring, counters) ----------------
         finished = (is_rc | is_ps | is_slr) & (new_pc == mc.NCS)
+        if R > 0:
+            finished = finished & step_ok
         lat_val = C.sub(now, C.gather(ohT, opst))
         slot = latn % _I(lat_samples)
         if repr32:
@@ -535,12 +654,33 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
                 jnp.where(finished, lat_val, lat[rows, slot]))
         latn = latn + finished.astype(I32)
         done = done + jnp.where(ohT & finished[:, None], _I(1), _I(0))
-        opst = C.where(is_ncs[:, None] & ohT, C.col(new_ready), opst)
-        reacq = reacq + (is_sb & (new_pc == mc.SET_VICTIM_R)).astype(I32)
-        npass = npass + is_ps.astype(I32)
-
-        new_st = (t0, t1, vic, pc, bud, nxt, prv, tgt, coh, ready, busy,
-                  opst, done, lat, latn, reacq, npass)
+        if R > 0:
+            opst = C.where((is_ncs & step_ok)[:, None] & ohT,
+                           C.col(new_ready), opst)
+            reacq = reacq + (is_sb & (new_pc == mc.SET_VICTIM_R)
+                             & step_ok).astype(I32)
+            npass = npass + (is_ps & step_ok).astype(I32)
+            # -- departure: the finishing release frees the thread and
+            # stamps the request's sojourn at the step's completion time
+            req = gat_t(curreq, tid)
+            comp = finished & (req >= _I(0))
+            rq = jnp.maximum(req, _I(0))
+            ohRq = rio == rq[:, None]
+            cm = comp[:, None]
+            sojv = C.sub(new_ready, C.gather(ohRq, arr))
+            soj = C.where(ohRq & cm, C.col(sojv), soj)
+            rstat = jnp.where(ohRq & cm, _I(COMPLETED), rstat)
+            curreq = jnp.where(ohT & cm, _I(-1), curreq)
+            new_st = (t0, t1, vic, pc, bud, nxt, prv, tgt, coh, ready,
+                      busy, opst, done, lat, latn, reacq, npass,
+                      rstat, curreq, arrptr, qlen, wq, soj)
+        else:
+            opst = C.where(is_ncs[:, None] & ohT, C.col(new_ready), opst)
+            reacq = reacq + (is_sb
+                             & (new_pc == mc.SET_VICTIM_R)).astype(I32)
+            npass = npass + is_ps.astype(I32)
+            new_st = (t0, t1, vic, pc, bud, nxt, prv, tgt, coh, ready,
+                      busy, opst, done, lat, latn, reacq, npass)
         # ragged final chunk: events past n_events are masked no-ops
         valid = gi < n_events
         return jax.tree_util.tree_map(
@@ -558,7 +698,7 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
     else:
         state = lax.fori_loop(0, ev_chunk, step, state)
     (t0, t1, vic, pc, bud, nxt, prv, tgt, coh, ready, busy, opst,
-     done, lat, latn, reacq, npass) = state
+     done, lat, latn, reacq, npass) = state[:17]
 
     for ref, val in ((s_t0, t0), (s_t1, t1), (s_vic, vic), (s_pc, pc),
                      (s_bud, bud), (s_nxt, nxt), (s_prev, prv), (s_tgt, tgt),
@@ -573,3 +713,11 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
     C.write(tend_refs, C.col(C.reduce_max(ready)))
     reacq_ref[...] = reacq[:, None]
     npass_ref[...] = npass[:, None]
+    if R > 0:
+        (rstat, curreq, arrptr, qlen, wq, soj) = state[17:]
+        rstat_ref[...] = rstat
+        s_curreq[...] = curreq
+        s_arrptr[...] = arrptr[:, None]
+        s_qlen[...] = qlen[:, None]
+        C.write(wq_refs, wq)
+        C.write(soj_refs, soj)

@@ -79,6 +79,8 @@ from repro.core.sim import I32, I64, LAT_SAMPLES
 from repro.kernels.event_loop import i32pair as p32
 from repro.kernels.event_loop import vmem
 from repro.kernels.event_loop.kernel import event_loop_kernel
+from repro.traffic.stream import (arrival_plan, arrival_times_i64,
+                                  arrival_times_pairs)
 
 DEFAULT_TILE = 8
 DEFAULT_EV_CHUNK = 4096
@@ -136,7 +138,8 @@ def precompute_draws(seed, edges, zcdf, n_events: int, N: int, kpn: int):
     return jax.vmap(one)(seed, edges, zcdf)
 
 
-def plan_for_run(B, P, n_events, T, N, K, *, tile: int = DEFAULT_TILE,
+def plan_for_run(B, P, n_events, T, N, K, *, R: int = 0,
+                 tile: int = DEFAULT_TILE,
                  ev_chunk: int = DEFAULT_EV_CHUNK, interpret=None,
                  representation: str = "auto",
                  lat_samples: int = LAT_SAMPLES,
@@ -160,7 +163,7 @@ def plan_for_run(B, P, n_events, T, N, K, *, tile: int = DEFAULT_TILE,
     # price the VMEM footprint up front: shrink the replica tile to fit
     # the budget (or raise actionably) instead of dying inside Mosaic
     plan = vmem.plan_vmem(tile=tile, ev_chunk=ev_chunk, T=T, N=N, K=K, P=P,
-                          lat_samples=lat_samples, repr32=repr32,
+                          lat_samples=lat_samples, repr32=repr32, R=R,
                           budget=vmem_budget)
     vmem.note_plan(plan)
     return plan
@@ -173,11 +176,12 @@ def _pallas_events(alg, T, N, K, n_events, wl, thread_node, lock_node, *,
     (clock outputs as (hi, lo) pairs when ``repr32``)."""
     B = wl.seed.shape[0]
     P = wl.edges.shape[1]
+    R = wl.arr_fix.shape[-1]
     kpn = K // N
     u1, r2, r3 = precompute_draws(wl.seed, wl.edges, wl.zcdf, n_events, N,
                                   kpn)
 
-    plan = plan_for_run(B, P, n_events, T, N, K, tile=tile,
+    plan = plan_for_run(B, P, n_events, T, N, K, R=R, tile=tile,
                         ev_chunk=ev_chunk, interpret=interpret,
                         representation="i32pair" if repr32 else "i64",
                         lat_samples=lat_samples, vmem_budget=vmem_budget)
@@ -200,6 +204,21 @@ def _pallas_events(alg, T, N, K, n_events, wl, thread_node, lock_node, *,
     costp = prep(jnp.asarray(wl.cost_rows, I32).reshape(B, P * N_COST_ROWS))
     nmult = prep(jnp.asarray(wl.node_mult, jnp.float32).reshape(B, P * N))
     edges, think = (prep(a) for a in (wl.edges, wl.think_ns))
+    if R:
+        # open loop: the arrival plan is state-independent, so it is
+        # precomputed here with the *same* shared repro.traffic.stream
+        # helpers the XLA loop traces — the arrival times ride in as a
+        # clock-typed input and come back out verbatim as output #7
+        aplan = jax.vmap(lambda w: arrival_plan(w, n_events))(wl)
+        if repr32:
+            arr = jax.vmap(arrival_times_pairs)(aplan.gaps)
+            arr_in = [prep(arr[0]), prep(arr[1])]
+        else:
+            arr = jax.vmap(arrival_times_i64)(aplan.gaps)
+            arr_in = [prep(arr)]
+        tokp = prep(jnp.asarray(aplan.tok, I32))
+        tokcp = prep(jnp.asarray(aplan.tokcum, I32))
+        qcapp = prep(jnp.asarray(aplan.qcap, I32))
     Bp = B + pad_b
     n_chunks = (n_events + pad_e) // ev_chunk
     grid = (Bp // tile, n_chunks)
@@ -227,6 +246,12 @@ def _pallas_events(alg, T, N, K, n_events, wl, thread_node, lock_node, *,
                  + [jax.ShapeDtypeStruct((Bp, 1), I32)] + tend_shapes
                  + [jax.ShapeDtypeStruct((Bp, 1), I32),
                     jax.ShapeDtypeStruct((Bp, 1), I32)])
+    if R:
+        wq_specs, wq_shapes = clock_out(R)
+        soj_specs, soj_shapes = clock_out(R)
+        out_specs += wq_specs + soj_specs + [row(R)]
+        out_shape += (wq_shapes + soj_shapes
+                      + [jax.ShapeDtypeStruct((Bp, R), I32)])
     scratch_shapes = [
         pltpu.VMEM((tile, K), I32),   # tail0 / lock word
         pltpu.VMEM((tile, K), I32),   # tail1
@@ -241,41 +266,58 @@ def _pallas_events(alg, T, N, K, n_events, wl, thread_node, lock_node, *,
         *clock_scratch(N),            # busy
         *clock_scratch(T),            # op_start
     ]
+    in_specs = [
+        pl.BlockSpec((tile, ev_chunk), lambda i, j: (i, j)),
+        pl.BlockSpec((tile, ev_chunk), lambda i, j: (i, j)),
+        pl.BlockSpec((tile, ev_chunk), lambda i, j: (i, j)),
+        row(P), row(P), row(P * T), row(P * T),
+        row(P * 2), row(P * N_COST_ROWS), row(P * N),
+        pl.BlockSpec((1, T), lambda i, j: (0, 0)),
+        pl.BlockSpec((1, K), lambda i, j: (0, 0)),
+    ]
+    operands = [u1, r2, r3,
+                jnp.asarray(edges, I32), jnp.asarray(think, I32),
+                jnp.asarray(locp, jnp.float32), jnp.asarray(actp, I32),
+                jnp.asarray(binit, I32), jnp.asarray(costp, I32),
+                jnp.asarray(nmult, jnp.float32),
+                jnp.asarray(thread_node, I32)[None, :],
+                jnp.asarray(lock_node, I32)[None, :]]
+    if R:
+        in_specs += [row(R)] * (len(arr_in) + 3)
+        operands += [*arr_in, tokp, tokcp, qcapp]
+        scratch_shapes += [pltpu.VMEM((tile, T), I32),   # curreq
+                           pltpu.VMEM((tile, 1), I32),   # arrptr
+                           pltpu.VMEM((tile, 1), I32)]   # qlen
 
     out = pl.pallas_call(
         functools.partial(event_loop_kernel, alg=alg, T=T, N=N, K=K, P=P,
                           n_events=n_events, ev_chunk=ev_chunk,
-                          lat_samples=lat_samples, repr32=repr32),
+                          lat_samples=lat_samples, repr32=repr32, R=R),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((tile, ev_chunk), lambda i, j: (i, j)),
-            pl.BlockSpec((tile, ev_chunk), lambda i, j: (i, j)),
-            pl.BlockSpec((tile, ev_chunk), lambda i, j: (i, j)),
-            row(P), row(P), row(P * T), row(P * T),
-            row(P * 2), row(P * N_COST_ROWS), row(P * N),
-            pl.BlockSpec((1, T), lambda i, j: (0, 0)),
-            pl.BlockSpec((1, K), lambda i, j: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=scratch_shapes,
         interpret=interpret,
-    )(u1, r2, r3,
-      jnp.asarray(edges, I32), jnp.asarray(think, I32),
-      jnp.asarray(locp, jnp.float32), jnp.asarray(actp, I32),
-      jnp.asarray(binit, I32), jnp.asarray(costp, I32),
-      jnp.asarray(nmult, jnp.float32),
-      jnp.asarray(thread_node, I32)[None, :],
-      jnp.asarray(lock_node, I32)[None, :])
+    )(*operands)
 
     out = [o[:B] for o in out]
     if repr32:
-        done, lat_hi, lat_lo, lat_n, te_hi, te_lo, nreacq, npass = out
-        return (done, (lat_hi, lat_lo), lat_n[:, 0],
+        (done, lat_hi, lat_lo, lat_n, te_hi, te_lo, nreacq, npass,
+         *extra) = out
+        base = (done, (lat_hi, lat_lo), lat_n[:, 0],
                 (te_hi[:, 0], te_lo[:, 0]), nreacq[:, 0], npass[:, 0])
-    done, lat, lat_n, t_end, nreacq, npass = out
-    return (done, lat, lat_n[:, 0], t_end[:, 0], nreacq[:, 0],
+        if R:
+            wq_hi, wq_lo, soj_hi, soj_lo, rstat = extra
+            return base + (arr, (wq_hi, wq_lo), (soj_hi, soj_lo), rstat)
+        return base
+    done, lat, lat_n, t_end, nreacq, npass, *extra = out
+    base = (done, lat, lat_n[:, 0], t_end[:, 0], nreacq[:, 0],
             npass[:, 0])
+    if R:
+        wq, soj, rstat = extra
+        return base + (arr, wq, soj, rstat)
+    return base
 
 
 def run_events(alg, T, N, K, n_events, wl, thread_node, lock_node, *,
@@ -295,6 +337,12 @@ def run_events(alg, T, N, K, n_events, wl, thread_node, lock_node, *,
     lat (B,lat_samples) i64, lat_n (B,) i32, t_end (B,) i64,
     nreacq (B,) i32, npass (B,) i32).
 
+    Open-loop workloads (``wl.arr_fix`` non-empty, R request slots) return
+    four extra arrays mirroring ``sim._run_events``: arr (B,R) i64 arrival
+    times, wq (B,R) i64 queue waits, soj (B,R) i64 sojourns (-1 when never
+    dispatched/completed) and rstat (B,R) i32 ``repro.traffic`` status
+    codes.
+
     B need not divide the replica tile and n_events need not divide the
     event chunk: replicas are edge-padded (duplicates, sliced off) and the
     final chunk masks events past n_events inside the kernel. The tile may
@@ -306,19 +354,32 @@ def run_events(alg, T, N, K, n_events, wl, thread_node, lock_node, *,
         interpret = default_interpret()
     repr32 = resolve_representation(representation, interpret) == "i32pair"
     B = wl.seed.shape[0]
+    R = wl.arr_fix.shape[-1]
     if n_events < 1:
         # degenerate run: match the XLA loop's 0-iteration outputs instead
         # of tracing a zero-size grid (which Pallas rejects obscurely)
-        return (jnp.zeros((B, T), I32),
+        base = (jnp.zeros((B, T), I32),
                 jnp.full((B, lat_samples), -1, I64), jnp.zeros(B, I32),
                 jnp.zeros(B, I64), jnp.zeros(B, I32), jnp.zeros(B, I32))
+        if R:
+            aplan = jax.vmap(lambda w: arrival_plan(w, n_events))(wl)
+            arr = jax.vmap(arrival_times_i64)(aplan.gaps)
+            return base + (arr, jnp.full((B, R), -1, I64),
+                           jnp.full((B, R), -1, I64),
+                           jnp.zeros((B, R), I32))
+        return base
     out = _pallas_events(alg, T, N, K, n_events, wl, thread_node,
                          lock_node, tile=tile, ev_chunk=ev_chunk,
                          interpret=interpret, repr32=repr32,
                          lat_samples=lat_samples, vmem_budget=vmem_budget)
     if repr32:
-        done, lat, lat_n, t_end, nreacq, npass = out
-        return (done, p32.pack(lat), lat_n, p32.pack(t_end), nreacq, npass)
+        done, lat, lat_n, t_end, nreacq, npass = out[:6]
+        base = (done, p32.pack(lat), lat_n, p32.pack(t_end), nreacq, npass)
+        if R:
+            arr, wq, soj, rstat = out[6:]
+            return base + (p32.pack(arr), p32.pack(wq), p32.pack(soj),
+                           rstat)
+        return base
     return out
 
 
@@ -333,16 +394,25 @@ def run_events_pairs(alg, T, N, K, n_events, wl, thread_node, lock_node, *,
     Returns (done (B,T) i32, (lat_hi, lat_lo) (B,lat_samples) i32 each,
     lat_n (B,) i32, (t_end_hi, t_end_lo) (B,) i32 each, nreacq (B,) i32,
     npass (B,) i32); combine pairs host-side with ``i32pair.pack_np``.
+    Open-loop workloads append (arr, wq, soj) as (hi, lo) pairs of
+    (B,R) i32 each plus rstat (B,R) i32.
     """
     if interpret is None:
         interpret = default_interpret()
     B = wl.seed.shape[0]
+    R = wl.arr_fix.shape[-1]
     if n_events < 1:
         z1 = jnp.zeros(B, I32)
-        return (jnp.zeros((B, T), I32),
+        base = (jnp.zeros((B, T), I32),
                 (jnp.full((B, lat_samples), -1, I32),
                  jnp.full((B, lat_samples), -1, I32)),
                 z1, (z1, z1), z1, z1)
+        if R:
+            aplan = jax.vmap(lambda w: arrival_plan(w, n_events))(wl)
+            arr = jax.vmap(arrival_times_pairs)(aplan.gaps)
+            m1 = p32.pfull((B, R), -1)
+            return base + (arr, m1, m1, jnp.zeros((B, R), I32))
+        return base
     return _pallas_events(alg, T, N, K, n_events, wl, thread_node,
                           lock_node, tile=tile, ev_chunk=ev_chunk,
                           interpret=interpret, repr32=True,

@@ -81,12 +81,15 @@ def _clock_entries(name, shape, repr32: bool):
 
 
 def buffer_table(tile: int, ev_chunk: int, T: int, N: int, K: int, P: int,
-                 lat_samples: int, repr32: bool) -> dict:
+                 lat_samples: int, repr32: bool, R: int = 0) -> dict:
     """name -> (block shape, bytes) for every VMEM buffer of one grid step.
 
     Mirrors the ``in_specs`` / ``out_specs`` / ``scratch_shapes`` that
     ``ops.run_events`` builds — ``tests/test_vmem_planner.py`` asserts the
-    two stay in sync.
+    two stay in sync. ``R > 0`` adds the open-loop request buffers (the
+    arrival rows, the per-request wait/sojourn/status outputs and the
+    dispatch scratch) in their exact binding positions; ``R == 0`` is the
+    closed loop and reproduces the pre-traffic table unchanged.
     """
     rows: list[tuple] = [
         # streamed draw inputs (STREAMED_INPUTS — double-buffered along
@@ -104,6 +107,11 @@ def buffer_table(tile: int, ev_chunk: int, T: int, N: int, K: int, P: int,
         _entries("in.node_mult", (tile, P * N), _F32),
         _entries("in.thread_node", (1, T), _I32),
         _entries("in.lock_node", (1, K), _I32),
+        # open-loop arrival rows (same block every chunk)
+        *([*_clock_entries("in.arr", (tile, R), repr32),
+           _entries("in.tok", (tile, R), _I32),
+           _entries("in.tokcum", (tile, R), _I32),
+           _entries("in.qcap", (tile, R), _I32)] if R else []),
         # outputs (flushed when the replica tile changes)
         _entries("out.done", (tile, T), _I32),
         *_clock_entries("out.lat", (tile, lat_samples), repr32),
@@ -111,6 +119,10 @@ def buffer_table(tile: int, ev_chunk: int, T: int, N: int, K: int, P: int,
         *_clock_entries("out.t_end", (tile, 1), repr32),
         _entries("out.reacq", (tile, 1), _I32),
         _entries("out.npass", (tile, 1), _I32),
+        # open-loop per-request outputs
+        *([*_clock_entries("out.wq", (tile, R), repr32),
+           *_clock_entries("out.soj", (tile, R), repr32),
+           _entries("out.rstat", (tile, R), _I32)] if R else []),
         # semantic scratch (int32 in every representation)
         _entries("scr.tail0", (tile, K), _I32),
         _entries("scr.tail1", (tile, K), _I32),
@@ -125,6 +137,10 @@ def buffer_table(tile: int, ev_chunk: int, T: int, N: int, K: int, P: int,
         *_clock_entries("scr.ready", (tile, T), repr32),
         *_clock_entries("scr.busy", (tile, N), repr32),
         *_clock_entries("scr.op_start", (tile, T), repr32),
+        # open-loop dispatch scratch
+        *([_entries("scr.curreq", (tile, T), _I32),
+           _entries("scr.arrptr", (tile, 1), _I32),
+           _entries("scr.qlen", (tile, 1), _I32)] if R else []),
     ]
     return dict(rows)
 
@@ -156,7 +172,7 @@ class VmemPlan:
 
 
 def plan_vmem(*, tile: int, ev_chunk: int, T: int, N: int, K: int, P: int,
-              lat_samples: int, repr32: bool,
+              lat_samples: int, repr32: bool, R: int = 0,
               budget: int | None = None) -> VmemPlan:
     """Compute the byte table; halve ``tile`` until ``budget`` fits.
 
@@ -174,7 +190,8 @@ def plan_vmem(*, tile: int, ev_chunk: int, T: int, N: int, K: int, P: int,
     requested = tile
     t = tile
     while True:
-        table = buffer_table(t, ev_chunk, T, N, K, P, lat_samples, repr32)
+        table = buffer_table(t, ev_chunk, T, N, K, P, lat_samples, repr32,
+                             R)
         total = sum(b for _, b in table.values())
         if budget is None or total <= budget or t == 1:
             break

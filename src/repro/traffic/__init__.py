@@ -1,0 +1,24 @@
+"""Open-loop traffic engine: arrival streams, queueing, serving metrics.
+
+``repro.traffic`` turns the closed-loop lock simulator into a lock
+*service* under offered load: ``repro.workloads.Arrivals`` specs lower to
+traced operands, :mod:`repro.traffic.stream` precomputes the per-request
+arrival plan both engines consume, and :mod:`repro.traffic.metrics`
+reduces the per-request outputs (arrival / wait / sojourn / status) to
+goodput, latency percentiles, drop accounting and saturation knees.
+See ``docs/serving.md`` for the model and ``benchmarks/serving_curves.py``
+for the headline curves.
+"""
+from repro.traffic.metrics import (COMPLETED, DROPPED, IN_SERVICE, PENDING,
+                                   detect_knee, serving_summary)
+from repro.traffic.stream import (ArrivalPlan, arrival_gaps, arrival_plan,
+                                  arrival_times_i64, arrival_times_pairs,
+                                  per_request, request_phase_onehot,
+                                  token_admit)
+
+__all__ = [
+    "ArrivalPlan", "COMPLETED", "DROPPED", "IN_SERVICE", "PENDING",
+    "arrival_gaps", "arrival_plan", "arrival_times_i64",
+    "arrival_times_pairs", "detect_knee", "per_request",
+    "request_phase_onehot", "serving_summary", "token_admit",
+]

@@ -17,7 +17,7 @@ and the ALock **budget pair** — a piecewise program over the run:
 >>> lw.operands.cost_rows.shape, lw.operands.b_init.shape
 ((2, 8), (2, 2))
 >>> lw.shape_key                          # the compile bucket
-('alock', 4, 2, 8, 1000)
+('alock', 4, 2, 8, 1000, 0)
 
 Run a spec with ``repro.experiments.Experiment`` (batched, labeled, with
 error bars) or directly with ``repro.core.sim.simulate(w)``. Everything
@@ -30,14 +30,16 @@ from repro.core.cost_model import (COST_PROFILES, CostModel, CostProfile,
 from repro.workloads.lower import (Lowered, N_COST_ROWS, WorkloadOperands,
                                    as_workload, from_simconfig, lower,
                                    pad_phases, resolve_locality, zipf_cdf)
-from repro.workloads.spec import (ALGS, Mixed, NODE_MULT_PROFILES, Phase,
-                                  THINK_CLASSES, Workload, freeze_node_mult,
-                                  mixed, node_mult_pairs, resolve_node_mult)
+from repro.workloads.spec import (ALGS, Arrivals, Mixed, NODE_MULT_PROFILES,
+                                  Phase, THINK_CLASSES, Workload,
+                                  freeze_node_mult, mixed, node_mult_pairs,
+                                  resolve_node_mult)
 
 __all__ = [
-    "ALGS", "COST_PROFILES", "CostModel", "CostProfile", "Lowered",
-    "Mixed", "NODE_MULT_PROFILES", "N_COST_ROWS", "Phase", "THINK_CLASSES",
-    "Workload", "WorkloadOperands", "as_workload", "freeze_node_mult",
-    "from_simconfig", "lower", "mixed", "node_mult_pairs", "pad_phases",
-    "resolve_cost", "resolve_locality", "resolve_node_mult", "zipf_cdf",
+    "ALGS", "Arrivals", "COST_PROFILES", "CostModel", "CostProfile",
+    "Lowered", "Mixed", "NODE_MULT_PROFILES", "N_COST_ROWS", "Phase",
+    "THINK_CLASSES", "Workload", "WorkloadOperands", "as_workload",
+    "freeze_node_mult", "from_simconfig", "lower", "mixed",
+    "node_mult_pairs", "pad_phases", "resolve_cost", "resolve_locality",
+    "resolve_node_mult", "zipf_cdf",
 ]

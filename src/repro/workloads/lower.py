@@ -3,26 +3,39 @@
 ``lower()`` turns a spec into a :class:`WorkloadOperands` — plain arrays,
 *all of them traced operands* of the event-loop engines:
 
-  ========= ========== ===================================================
-  field     shape      meaning
-  ========= ========== ===================================================
-  locality  (P, T) f32 per-phase per-thread P(target lock is local)
-  zcdf      (P, kpn)   per-phase inclusive Zipf CDF of the within-node draw
-  edges     (P,) i32   first event index of each phase (edges[0] == 0)
-  think_ns  (P,) i32   per-phase think time between critical sections
-  active    (P, T) i32 1 = schedulable; 0 = thread's node is down
-  b_init    (P, 2) i32 per-phase (local, remote) ALock budgets
-  cost_rows (P, 8) i32 per-phase cost-model rows (CostModel.cost_rows)
-  seed      () i32     replica PRNG seed
-  node_mult (P, N) f32 per-phase per-node fail-slow cost multipliers
-  ========= ========== ===================================================
+  ========== ========== ===================================================
+  field      shape      meaning
+  ========== ========== ===================================================
+  locality   (P, T) f32 per-phase per-thread P(target lock is local)
+  zcdf       (P, kpn)   per-phase inclusive Zipf CDF of the within-node draw
+  edges      (P,) i32   first event index of each phase (edges[0] == 0)
+  think_ns   (P,) i32   per-phase think time between critical sections
+  active     (P, T) i32 1 = schedulable; 0 = thread's node is down
+  b_init     (P, 2) i32 per-phase (local, remote) ALock budgets
+  cost_rows  (P, 8) i32 per-phase cost-model rows (CostModel.cost_rows)
+  seed       () i32     replica PRNG seed
+  node_mult  (P, N) f32 per-phase per-node fail-slow cost multipliers
+  arr_gap_ns (P,) f32   per-phase mean Poisson inter-arrival gap (0 = none)
+  arr_edges  (P,) i32   first *request* index of each phase
+  arr_qcap   (P,) i32   per-phase wait-queue bound (INT32_MAX = unbounded)
+  arr_token  (P, 2) f32 per-phase token bucket (refill/ns, burst)
+  arr_fix    (R,) i32   deterministic base inter-arrival gaps (trace replay)
+  ========== ========== ===================================================
 
-Only ``(alg, T, N, K, n_events)`` — plus the phase-count P via the operand
-*shapes* — is static, so a sweep mixing scenarios (different localities,
-skews, phase programs, cost profiles, budget programs) shares one compiled
-executable per shape bucket; ``pad_phases`` extends any replica to a
-bucket's max P with unreachable phases (``edges = INT32_MAX``), which
-provably never alters the per-event phase selection.
+Only ``(alg, T, N, K, n_events, R)`` — plus the phase-count P via the
+operand *shapes* — is static, so a sweep mixing scenarios (different
+localities, skews, phase programs, cost profiles, budget programs) shares
+one compiled executable per shape bucket; ``pad_phases`` extends any
+replica to a bucket's max P with unreachable phases (``edges =
+INT32_MAX``), which provably never alters the per-event phase selection.
+
+Open-loop arrival streams (``Workload.arrivals``) lower to the ``arr_*``
+rows; ``R`` is the static request-slot count (``arr_fix.shape[-1]``) and
+``R == 0`` *is* the closed loop — the arrival rows collapse to zero-work
+placeholders and the engines trace the identical closed-loop program
+(bitwise inertness, asserted in ``tests/test_traffic.py``). A request's
+phase is its *index* interval (``arr_edges``), mirroring how events map to
+phases, so rate programs modulate the stream without any in-loop coupling.
 
 Cost and budget *programs*: every phase row carries its own 8-entry cost
 table (resolved through :func:`~repro.core.cost_model.resolve_cost` from
@@ -76,10 +89,20 @@ class WorkloadOperands(NamedTuple):
     seed: Any       # () i32
     cost_rows: Any  # (P, 8) i32
     node_mult: Any  # (P, N) f32
+    arr_gap_ns: Any  # (P,) f32
+    arr_edges: Any   # (P,) i32
+    arr_qcap: Any    # (P,) i32
+    arr_token: Any   # (P, 2) f32
+    arr_fix: Any     # (R,) i32 — R == 0 means closed loop
 
     @property
     def n_phases(self) -> int:
         return self.edges.shape[-1]
+
+    @property
+    def n_requests(self) -> int:
+        """Static request-slot count R (0 = closed loop)."""
+        return self.arr_fix.shape[-1]
 
 
 class Lowered(NamedTuple):
@@ -99,7 +122,7 @@ class Lowered(NamedTuple):
     def shape_key(self) -> tuple:
         """The static-argument tuple that determines a compile bucket."""
         return (self.alg, self.n_threads, self.n_nodes, self.n_locks,
-                self.n_events)
+                self.n_events, self.operands.n_requests)
 
 
 def zipf_cdf(kpn: int, s: float) -> np.ndarray:
@@ -165,6 +188,9 @@ def lower(w: Workload, n_events: int,
     P = len(phases)
     base_cm = resolve_cost(w.cost, cm)
 
+    arr = w.arrivals
+    R = 0 if arr is None else arr.n_requests
+
     locality = np.empty((P, T), np.float32)
     zcdf = np.empty((P, kpn), np.float32)
     edges = np.empty(P, np.int32)
@@ -173,9 +199,25 @@ def lower(w: Workload, n_events: int,
     b_init = np.empty((P, 2), np.int32)
     cost_rows = np.empty((P, N_COST_ROWS), np.int32)
     node_mult = np.empty((P, N), np.float32)
+    arr_gap_ns = np.zeros(P, np.float32)
+    arr_edges = np.zeros(P, np.int32)
+    arr_qcap = np.full(P, _I32_MAX, np.int32)
+    arr_token = np.zeros((P, 2), np.float32)
     cum = 0.0
     for p, ph in enumerate(phases):
         edges[p] = int(round(cum * n_events))
+        if arr is not None:
+            # request index intervals mirror the event-phase mapping: the
+            # phase's fraction of the run is its fraction of the stream
+            arr_edges[p] = int(round(cum * R))
+            rate = arr.rate_per_us if ph.rate_per_us is None \
+                else ph.rate_per_us
+            arr_gap_ns[p] = np.float32(1000.0 / rate) if rate > 0.0 else 0.0
+            if arr.queue_cap is not None:
+                arr_qcap[p] = arr.queue_cap
+            if arr.token_rate_per_us > 0.0:
+                arr_token[p] = (np.float32(arr.token_rate_per_us / 1000.0),
+                                np.float32(arr.token_burst))
         cum += ph.frac
         loc = w.locality if ph.locality is None else ph.locality
         locality[p] = resolve_locality(loc, N, tpn)
@@ -193,6 +235,20 @@ def lower(w: Workload, n_events: int,
         for node in ph.down_nodes:
             active[p, node * tpn:(node + 1) * tpn] = 0
     edges[0] = 0
+    if arr is not None:
+        arr_edges[0] = 0
+    if arr is None:
+        arr_fix = np.zeros(0, np.int32)
+    elif arr.trace_ns:
+        # absolute recorded times -> per-request base gaps (the additive
+        # form lets a trace carry optional Poisson jitter on top)
+        ts = np.asarray(arr.trace_ns, np.int64)
+        gaps = np.diff(ts, prepend=0)
+        if (gaps > _I32_MAX).any():
+            raise ValueError("trace_ns inter-arrival gap overflows int32 ns")
+        arr_fix = gaps.astype(np.int32)
+    else:
+        arr_fix = np.zeros(R, np.int32)
     if P == 1 and (active == 0).any():
         # the engines take a fast path (no phase/active machinery) for
         # single-phase operands, which is only sound when every thread is
@@ -209,6 +265,10 @@ def lower(w: Workload, n_events: int,
         cost_rows = np.repeat(cost_rows, 2, axis=0)
         node_mult = np.repeat(node_mult, 2, axis=0)
         edges = np.asarray([0, n_events // 2], np.int32)
+        arr_gap_ns = np.repeat(arr_gap_ns, 2, axis=0)
+        arr_qcap = np.repeat(arr_qcap, 2, axis=0)
+        arr_token = np.repeat(arr_token, 2, axis=0)
+        arr_edges = np.asarray([0, R // 2], np.int32)
     if P > 1 and np.any(np.diff(edges) <= 0):
         # a zero-event phase would silently vanish AND misdirect the
         # rejoin bump at its boundary (was_act would read the dropped
@@ -221,7 +281,9 @@ def lower(w: Workload, n_events: int,
     ops = WorkloadOperands(
         locality=locality, zcdf=zcdf, edges=edges, think_ns=think_ns,
         active=active, b_init=b_init, seed=np.int32(w.seed),
-        cost_rows=cost_rows, node_mult=node_mult)
+        cost_rows=cost_rows, node_mult=node_mult,
+        arr_gap_ns=arr_gap_ns, arr_edges=arr_edges, arr_qcap=arr_qcap,
+        arr_token=arr_token, arr_fix=arr_fix)
     return Lowered(w.alg, N, tpn, K, int(n_events), ops)
 
 
@@ -252,7 +314,14 @@ def pad_phases(ops: WorkloadOperands, n_phases: int) -> WorkloadOperands:
                               np.full(extra, _I32_MAX, np.int32)]),
         think_ns=rep(ops.think_ns), active=rep(ops.active),
         b_init=rep(ops.b_init), cost_rows=rep(ops.cost_rows),
-        node_mult=rep(ops.node_mult))
+        node_mult=rep(ops.node_mult),
+        # padded phases own no request-index interval, so their arrival
+        # rows are unreachable by construction (arr_edges = INT32_MAX >
+        # any request index); arr_fix is per-request, not per-phase
+        arr_gap_ns=rep(ops.arr_gap_ns),
+        arr_edges=np.concatenate([ops.arr_edges,
+                                  np.full(extra, _I32_MAX, np.int32)]),
+        arr_qcap=rep(ops.arr_qcap), arr_token=rep(ops.arr_token))
 
 
 def from_simconfig(cfg) -> Workload:

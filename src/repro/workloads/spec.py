@@ -180,6 +180,79 @@ def resolve_node_mult(nm, n_nodes: int) -> tuple:
 
 
 @dataclass(frozen=True)
+class Arrivals:
+    """Open-loop arrival stream: requests arrive, queue, acquire once and
+    depart — instead of the closed loop's fixed thread pool re-acquiring
+    forever (see ``docs/serving.md``).
+
+    The stream is the *sum* of a deterministic base trace and a Poisson
+    jitter term, which unifies the three spec shapes:
+
+      * ``rate_per_us > 0`` with an empty trace — a Poisson process at the
+        offered rate (phase-modulated via :attr:`Phase.rate_per_us`);
+      * ``trace_ns`` non-empty with ``rate_per_us == 0`` — exact
+        deterministic replay of recorded arrival times;
+      * both — replay with Poisson-distributed per-request jitter.
+
+    ``max_requests`` is the static request-slot count ``R`` (a shape, so
+    it keys the compile bucket); a non-empty trace pins ``R`` to its
+    length. Two admission policies lower to traced operands:
+    ``queue_cap`` bounds the wait queue (tail drop, counted), and
+    ``token_rate_per_us``/``token_burst`` gate admission through a token
+    bucket (debit-on-arrival; a request entering with no token is
+    dropped). ``None``/``0.0`` disables each policy.
+
+    >>> Arrivals(rate_per_us=2.0, max_requests=64).n_requests
+    64
+    >>> Arrivals(trace_ns=(0, 500, 900)).n_requests
+    3
+    """
+    rate_per_us: float = 0.0
+    max_requests: int = 256
+    trace_ns: tuple = ()
+    queue_cap: int | None = None
+    token_rate_per_us: float = 0.0
+    token_burst: float = 8.0
+
+    def __post_init__(self):
+        r = float(self.rate_per_us)
+        if not math.isfinite(r) or r < 0.0:
+            raise ValueError(f"rate_per_us must be finite and >= 0, got {r}")
+        object.__setattr__(self, "rate_per_us", r)
+        mr = int(self.max_requests)
+        if mr < 1:
+            raise ValueError(f"max_requests must be >= 1, got {mr}")
+        object.__setattr__(self, "max_requests", mr)
+        tr = tuple(int(t) for t in self.trace_ns)
+        if any(t < 0 for t in tr):
+            raise ValueError("trace_ns times must be >= 0")
+        if any(b < a for a, b in zip(tr, tr[1:])):
+            raise ValueError("trace_ns must be non-decreasing")
+        object.__setattr__(self, "trace_ns", tr)
+        if r == 0.0 and not tr:
+            raise ValueError("Arrivals needs rate_per_us > 0 or a trace_ns")
+        if self.queue_cap is not None:
+            qc = int(self.queue_cap)
+            if qc < 0:
+                raise ValueError(f"queue_cap must be >= 0, got {qc}")
+            object.__setattr__(self, "queue_cap", qc)
+        tkr = float(self.token_rate_per_us)
+        if not math.isfinite(tkr) or tkr < 0.0:
+            raise ValueError(
+                f"token_rate_per_us must be finite and >= 0, got {tkr}")
+        object.__setattr__(self, "token_rate_per_us", tkr)
+        tkb = float(self.token_burst)
+        if not math.isfinite(tkb) or tkb < 1.0:
+            raise ValueError(f"token_burst must be >= 1, got {tkb}")
+        object.__setattr__(self, "token_burst", tkb)
+
+    @property
+    def n_requests(self) -> int:
+        """The static request-slot count ``R`` (trace length wins)."""
+        return len(self.trace_ns) if self.trace_ns else self.max_requests
+
+
+@dataclass(frozen=True)
 class Phase:
     """One piecewise regime over the event axis.
 
@@ -207,12 +280,20 @@ class Phase:
     b_init: tuple | None = None      # (local, remote) | None (inherit)
     node_mult: object = None         # NODE_MULT_PROFILES name |
     #                                  {node: mult} mapping | None (inherit)
+    rate_per_us: float | None = None  # open-loop arrival rate override
+    #                                   (needs Workload.arrivals) | inherit
 
     def __post_init__(self):
         f = float(self.frac)
         if not math.isfinite(f) or f <= 0.0 or f > 1.0:
             raise ValueError(f"Phase.frac must be in (0, 1], got {self.frac}")
         object.__setattr__(self, "frac", f)
+        if self.rate_per_us is not None:
+            r = float(self.rate_per_us)
+            if not math.isfinite(r) or r < 0.0:
+                raise ValueError(
+                    f"Phase.rate_per_us must be finite and >= 0, got {r}")
+            object.__setattr__(self, "rate_per_us", r)
         if self.locality is not None:
             object.__setattr__(self, "locality",
                                _freeze_locality(self.locality))
@@ -249,6 +330,8 @@ class Workload:
     #                                  override mapping | None (sweep default)
     node_mult: object = None         # NODE_MULT_PROFILES name |
     #                                  {node: mult} mapping | None (uniform)
+    arrivals: Arrivals | None = None  # open-loop request stream | None
+    #                                   (closed loop — threads re-acquire)
 
     def __post_init__(self):
         if self.alg not in ALGS:
@@ -308,6 +391,17 @@ class Workload:
             if bad:
                 raise ValueError(f"{what} node ids {bad} outside "
                                  f"[0, {self.n_nodes})")
+        if self.arrivals is not None and \
+                not isinstance(self.arrivals, Arrivals):
+            raise TypeError(f"arrivals must be an Arrivals or None, "
+                            f"got {type(self.arrivals)!r}")
+        if self.arrivals is None:
+            bad_ph = [i for i, p in enumerate(phases)
+                      if p.rate_per_us is not None]
+            if bad_ph:
+                raise ValueError(
+                    f"phases {bad_ph} set rate_per_us but the workload has "
+                    f"no arrivals= stream (closed loop has no rate)")
 
     @property
     def n_threads(self) -> int:

@@ -153,9 +153,9 @@ def test_cli_imports_gate_clean_with_quarantine():
     r = _cli("--imports")
     assert r.returncode == 0, r.stdout + r.stderr
     assert "unreachable" in r.stdout
-    # the training stack is real dead weight from the simulator's roots,
-    # parked under an explicit quarantine entry rather than deleted
-    assert "repro.train.loop" in r.stdout, r.stdout
+    # the superseded tick kernel is real dead weight from the simulator's
+    # roots, parked under an explicit quarantine entry rather than deleted
+    assert "repro.kernels.alock_tick.kernel" in r.stdout, r.stdout
     assert "quarantined" in r.stdout, r.stdout
     assert "0 unexpected" in r.stdout, r.stdout
     assert "imports gate: clean." in r.stdout, r.stdout
@@ -170,12 +170,12 @@ def test_imports_gate_flags_unexpected_and_stale():
     assert quarantined and not unexpected and not stale
     # drop one entry -> its modules become unexpected
     trimmed = {k: v for k, v in imp.QUARANTINED.items()
-               if k != "repro.train"}
+               if k != "repro.kernels.alock_tick"}
     orig = imp.QUARANTINED
     try:
         imp.QUARANTINED = trimmed
         _, unexpected, _ = imp.classify()
-        assert "repro.train.loop" in unexpected
+        assert "repro.kernels.alock_tick.kernel" in unexpected
         text, rc = imp.report()
         assert rc == 1 and "UNEXPECTED" in text
         # add a prefix covering nothing -> stale

@@ -73,7 +73,13 @@ def test_kernel_ragged_tile_and_chunk_bitwise():
         active=jnp.asarray(active),
         b_init=jnp.asarray(np.tile(np.int32([[2, 3], [1, 5]]), (B, 1, 1))),
         seed=jnp.arange(B, dtype=jnp.int32) + 11,
-        cost_rows=jnp.asarray(cst), node_mult=jnp.asarray(nm))
+        cost_rows=jnp.asarray(cst), node_mult=jnp.asarray(nm),
+        # closed-loop placeholders: R == 0 arrival rows
+        arr_gap_ns=jnp.zeros((B, P), jnp.float32),
+        arr_edges=jnp.zeros((B, P), jnp.int32),
+        arr_qcap=jnp.full((B, P), np.iinfo(np.int32).max, jnp.int32),
+        arr_token=jnp.zeros((B, P, 2), jnp.float32),
+        arr_fix=jnp.zeros((B, 0), jnp.int32))
     with enable_x64():
         ref = run_events_ref(alg, T, N, K, ev, wl, tn, ln)
         out = run_events(alg, T, N, K, ev, wl, tn, ln,

@@ -10,7 +10,9 @@ engine:
     boundaries;
   * **every simulator scenario in the registry** (uniform-grid,
     hot-key-storm, mixed-locality, node-churn, paper-fig5, congested-nic,
-    budget-ramp, limping-node, fail-slow-cascade) via
+    budget-ramp, limping-node, fail-slow-cascade, plus the open-loop
+    open-loop-ramp and burst-storm, whose buckets carry R request slots
+    and four extra per-request outputs) via
     ``repro.experiments.scenario_workloads``;
   * latency-ring overflow (``latn`` wrapping past ``lat_samples``) across
     all three engines: XLA, i64-pallas, i32-pair-pallas.
@@ -36,19 +38,36 @@ from repro.workloads import (Phase, Workload, WorkloadOperands, lower,
 EV = 1100
 
 
+#: engine output order; the last four rows only exist on open-loop (R > 0)
+#: buckets — arr/wq/soj are clock-typed ((hi, lo) pairs on the pairs path)
+#: and rstat is plain i32
+OUT_NAMES = ("done", "lat", "lat_n", "t_end", "nreacq", "npass",
+             "arr", "wq", "soj", "rstat")
+
+
+def _pk(p):
+    """(hi, lo) i32 pair -> np int64."""
+    return p32.pack_np(np.asarray(p[0]), np.asarray(p[1]))
+
+
 def _pack_outputs(out):
-    """(done, (lat_hi, lat_lo), lat_n, (te_hi, te_lo), ...) -> np int64."""
-    done, lat_p, lat_n, te_p, nreacq, npass = out
-    return (np.asarray(done),
-            p32.pack_np(np.asarray(lat_p[0]), np.asarray(lat_p[1])),
-            np.asarray(lat_n),
-            p32.pack_np(np.asarray(te_p[0]), np.asarray(te_p[1])),
+    """(done, (lat_hi, lat_lo), lat_n, (te_hi, te_lo), ...) -> np int64.
+
+    Handles both the 6-output closed loop and the 10-output open loop
+    (arr/wq/soj pairs packed, rstat passed through).
+    """
+    done, lat_p, lat_n, te_p, nreacq, npass, *extra = out
+    base = (np.asarray(done), _pk(lat_p), np.asarray(lat_n), _pk(te_p),
             np.asarray(nreacq), np.asarray(npass))
+    if extra:
+        arr_p, wq_p, soj_p, rstat = extra
+        base += (_pk(arr_p), _pk(wq_p), _pk(soj_p), np.asarray(rstat))
+    return base
 
 
 def _assert_bitwise(ref, got):
-    for name, a, b in zip(("done", "lat", "lat_n", "t_end", "nreacq",
-                           "npass"), ref, got):
+    assert len(ref) == len(got), (len(ref), len(got))
+    for name, a, b in zip(OUT_NAMES, ref, got):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
                                       err_msg=f"mismatch in {name}")
 
@@ -94,7 +113,13 @@ def test_native_repr_bitwise_phased_zipf_churn(alg):
         active=jnp.asarray(active),
         b_init=jnp.asarray(np.tile(np.int32([[2, 3], [1, 5]]), (B, 1, 1))),
         seed=jnp.arange(B, dtype=jnp.int32) + 11,
-        cost_rows=jnp.asarray(cst), node_mult=jnp.asarray(nm))
+        cost_rows=jnp.asarray(cst), node_mult=jnp.asarray(nm),
+        # closed-loop placeholders: R == 0 arrival rows
+        arr_gap_ns=jnp.zeros((B, P), jnp.float32),
+        arr_edges=jnp.zeros((B, P), jnp.int32),
+        arr_qcap=jnp.full((B, P), np.iinfo(np.int32).max, jnp.int32),
+        arr_token=jnp.zeros((B, P, 2), jnp.float32),
+        arr_fix=jnp.zeros((B, 0), jnp.int32))
     with enable_x64():
         ref = [np.asarray(r) for r in
                run_events_ref(alg, T, N, K, EV, wl, tn, ln)]
@@ -115,7 +140,7 @@ def test_node_mult_phase_edge_mid_chunk_bitwise():
                  phases=(Phase(frac=0.55),
                          Phase(frac=0.45, node_mult="limp-node0-4x")))
     lw = lower(w, EV)
-    alg, T, N, K, _ = lw.shape_key
+    alg, T, N, K, _, _ = lw.shape_key
     tn, ln, _ = topology(alg, N, T // N, K)
     wl = WorkloadOperands(*(jnp.asarray(a)[None] for a in lw.operands))
     with enable_x64():
@@ -152,7 +177,9 @@ def test_registry_scenarios_bitwise_i32pair():
     assert set(sim_scenarios) == {
         "uniform-grid", "hot-key-storm", "mixed-locality", "node-churn",
         "paper-fig5", "congested-nic", "budget-ramp", "limping-node",
-        "fail-slow-cascade"}
+        "fail-slow-cascade", "open-loop-ramp", "burst-storm"}
+    assert any(w.arrivals is not None
+               for ws in sim_scenarios.values() for w in ws)
 
     buckets: dict[tuple, list] = {}
     for name, ws in sim_scenarios.items():
@@ -160,7 +187,7 @@ def test_registry_scenarios_bitwise_i32pair():
             buckets.setdefault(lower(w, ev).shape_key, []).append((name, w))
 
     for key, items in buckets.items():
-        alg, T, N, K, _ = key
+        alg, T, N, K, _, R = key
         tn, ln, _ = topology(alg, N, T // N, K)
         _, wl = _stack_operands([w for _, w in items], ev)
         with enable_x64():
@@ -173,9 +200,9 @@ def test_registry_scenarios_bitwise_i32pair():
                                ev_chunk=192, interpret=True,
                                lat_samples=lat_samples)
         got = _pack_outputs(out)
+        assert len(ref) == len(got) == (10 if R else 6), key
         for i, (name, w) in enumerate(items):
-            for fname, a, b in zip(("done", "lat", "lat_n", "t_end",
-                                    "nreacq", "npass"), ref, got):
+            for fname, a, b in zip(OUT_NAMES, ref, got):
                 np.testing.assert_array_equal(
                     a[i], b[i],
                     err_msg=f"scenario {name} workload {i} ({w.alg}): "

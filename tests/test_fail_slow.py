@@ -72,7 +72,7 @@ def _node_p50(node, mult, seed, ev=800, lat_samples=512):
                  node_mult={node: float(mult)},
                  phases=(Phase(frac=1.0, down_nodes=others),))
     lw = lower(w, ev)
-    alg, T, N_, K_, _ = lw.shape_key
+    alg, T, N_, K_, _, _ = lw.shape_key
     tn, ln, _ = topology(alg, N_, tpn, K_)
     wl = WorkloadOperands(*(jnp.asarray(a)[None] for a in lw.operands))
     with enable_x64():

@@ -1,0 +1,195 @@
+"""Acceptance tests for the open-loop traffic engine (``repro.traffic``).
+
+The contracts the serving benchmarks lean on:
+
+  * **Little's law** — on a stable Poisson stream the time-average number
+    in system equals arrival rate x mean sojourn, cross-checked against an
+    independent sampled estimate of N(t);
+  * **deterministic trace replay** — an ``Arrivals(trace_ns=...)`` stream
+    reproduces the recorded arrival times exactly, bitwise-identically
+    across repeat runs, seeds, and both engines;
+  * **drop-accounting conservation** — across phase edges and under both
+    admission policies (bounded queue tail drop, token bucket):
+    ``arrived == completed + dropped + in_service + queued``, with every
+    per-slot status consistent with its wait/sojourn stamps;
+  * **closed-loop inertness** — a spec without ``arrivals`` lowers to
+    ``R == 0`` and carries no per-request arrays anywhere.
+"""
+import numpy as np
+import pytest
+
+from repro.core import batch
+from repro.core.sim import simulate
+from repro.traffic.metrics import (COMPLETED, DROPPED, IN_SERVICE, PENDING,
+                                   serving_summary)
+from repro.workloads import Arrivals, Phase, Workload, lower
+
+
+def _summary(r):
+    return serving_summary(r.arr_ns, r.wait_ns, r.sojourn_ns, r.rstat,
+                           r.sim_ns)
+
+
+# -- Little's law -----------------------------------------------------------
+
+
+def test_littles_law_on_stable_poisson():
+    """L = lambda x W on a Poisson stream well under the service capacity.
+
+    ``mean_concurrency`` integrates completed sojourns over the window;
+    the product of the goodput rate and the mean sojourn must match it
+    (the law), and an *independent* estimate — sampling N(t) on a time
+    grid — must land on the same value, which checks the integral against
+    the actual arrival/departure interval structure rather than the same
+    arithmetic twice.
+    """
+    w = Workload("alock", 2, 2, 8, locality=0.9, seed=1,
+                 arrivals=Arrivals(rate_per_us=0.5, max_requests=128))
+    r = simulate(w, n_events=4000, backend="xla")
+    s = _summary(r)
+    assert s["dropped"] == 0                    # no admission policy armed
+    assert s["completed"] > 32                  # enough mass to average
+    lam_ns = s["goodput_per_us"] / 1e3          # completions per ns
+    assert s["mean_concurrency"] == pytest.approx(
+        lam_ns * s["mean_sojourn_ns"], rel=1e-9)
+    # independent N(t) estimate: count requests in system on a time grid
+    arr = np.asarray(r.arr_ns)
+    soj = np.asarray(r.sojourn_ns)
+    comp = np.asarray(r.rstat) == COMPLETED
+    dep = np.where(comp, arr + soj, -1)
+    t = np.linspace(0, r.sim_ns, 4001)
+    n_t = ((arr[None, :] <= t[:, None]) & (dep[None, :] > t[:, None])
+           & comp[None, :]).sum(axis=1)
+    assert float(n_t.mean()) == pytest.approx(s["mean_concurrency"],
+                                              rel=0.05, abs=0.05)
+    # stable regime: the service keeps up with the offered load
+    assert s["goodput_per_us"] >= 0.8 * s["offered_per_us"]
+
+
+# -- deterministic trace replay ---------------------------------------------
+
+
+def test_trace_replay_bitwise_deterministic():
+    """A pure trace (``rate_per_us == 0``) replays the recorded arrival
+    times exactly — across repeat runs, across the replica seed (the
+    Poisson jitter term is identically zero), and bitwise across both
+    engines."""
+    trace = tuple(range(0, 12000, 800))         # 15 arrivals, 0.8us apart
+    w = Workload("mcs", 2, 2, 8, locality=0.9, seed=7,
+                 arrivals=Arrivals(trace_ns=trace))
+    r1 = simulate(w, n_events=900, backend="xla")
+    r2 = simulate(w, n_events=900, backend="xla")
+    np.testing.assert_array_equal(np.asarray(r1.arr_ns), np.int64(trace))
+    for a, b in zip((r1.arr_ns, r1.wait_ns, r1.sojourn_ns, r1.rstat),
+                    (r2.arr_ns, r2.wait_ns, r2.sojourn_ns, r2.rstat)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the seed re-draws the event stream but never the replayed arrivals
+    r3 = simulate(w.replace(seed=8), n_events=900, backend="xla")
+    np.testing.assert_array_equal(np.asarray(r3.arr_ns),
+                                  np.asarray(r1.arr_ns))
+    # engine cross-check: the Pallas kernel replays the same trace bitwise
+    rp = simulate(w, n_events=900, backend="pallas")
+    for name, a, b in (("arr", r1.arr_ns, rp.arr_ns),
+                       ("wq", r1.wait_ns, rp.wait_ns),
+                       ("soj", r1.sojourn_ns, rp.sojourn_ns),
+                       ("rstat", r1.rstat, rp.rstat)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"trace replay: {name}")
+
+
+# -- drop-accounting conservation -------------------------------------------
+
+_BURST = (Phase(frac=0.4), Phase(frac=0.2, rate_per_us=16.0),
+          Phase(frac=0.4))
+
+_POLICIES = {
+    "queue": Arrivals(rate_per_us=1.0, max_requests=160, queue_cap=4),
+    "token": Arrivals(rate_per_us=1.0, max_requests=160,
+                      token_rate_per_us=1.0, token_burst=2.0),
+}
+
+
+@pytest.mark.parametrize("policy", sorted(_POLICIES))
+def test_drop_conservation_across_phase_edges(policy):
+    """A 16x mid-run burst against each admission policy: requests really
+    drop, and every arrival inside the window is accounted for exactly
+    once — ``arrived == completed + dropped + in_service + queued`` — with
+    per-slot stamps consistent with the status codes."""
+    w = Workload("alock", 2, 2, 8, locality=0.9, seed=3, phases=_BURST,
+                 arrivals=_POLICIES[policy])
+    r = simulate(w, n_events=4000, backend="xla")
+    s = _summary(r)
+    assert s["dropped"] > 0, s
+    assert s["arrived"] == (s["completed"] + s["dropped"]
+                            + s["in_service"] + s["queued"])
+    assert s["queued"] >= 0 and s["in_service"] >= 0
+    arr = np.asarray(r.arr_ns)
+    wq = np.asarray(r.wait_ns)
+    soj = np.asarray(r.sojourn_ns)
+    st = np.asarray(r.rstat)
+    inside = arr <= r.sim_ns
+    # the residual really is the pending-inside-window population
+    assert int(((st == PENDING) & inside).sum()) == s["queued"]
+    # completions carry both stamps, and service time is non-negative
+    np.testing.assert_array_equal(st == COMPLETED, soj >= 0)
+    assert (wq[st == COMPLETED] >= 0).all()
+    assert (soj[st == COMPLETED] >= wq[st == COMPLETED]).all()
+    # drops never got dispatched: no wait, no sojourn
+    assert (wq[st == DROPPED] == -1).all()
+    assert (soj[st == DROPPED] == -1).all()
+    # in-service requests were dispatched but never finished
+    assert (wq[st == IN_SERVICE] >= 0).all()
+    assert (soj[st == IN_SERVICE] == -1).all()
+    # slots past the window never materialize (event-bounded run)
+    assert (st[~inside] == PENDING).all()
+
+
+def test_unbounded_queue_never_drops():
+    """The same burst with no admission policy: zero drops, backlog only
+    (the control the burst-storm scenario reports ratios against)."""
+    w = Workload("alock", 2, 2, 8, locality=0.9, seed=3, phases=_BURST,
+                 arrivals=Arrivals(rate_per_us=1.0, max_requests=160))
+    s = _summary(simulate(w, n_events=4000, backend="xla"))
+    assert s["dropped"] == 0
+    assert s["arrived"] == s["completed"] + s["in_service"] + s["queued"]
+
+
+# -- batch plumbing ---------------------------------------------------------
+
+
+def test_sweep_carries_serving_arrays_and_matches_pallas():
+    """``batch.sweep`` surfaces the per-request arrays per seed and both
+    backends agree bitwise through the full sweep path (bucketing,
+    padding, chunked dispatch)."""
+    ws = [Workload("alock", 2, 2, 8, locality=0.9,
+                   arrivals=Arrivals(rate_per_us=1.0, max_requests=48,
+                                     queue_cap=8)),
+          Workload("alock", 2, 2, 8, locality=0.5,
+                   arrivals=Arrivals(rate_per_us=2.0, max_requests=48))]
+    rx = batch.sweep(ws, n_seeds=2, n_events=1200, backend="xla")
+    rp = batch.sweep(ws, n_seeds=2, n_events=1200, backend="pallas")
+    for bx, bp in zip(rx, rp):
+        assert bx.open_loop and bp.open_loop
+        assert bx.arr_ns.shape == (2, 48)
+        for f in ("arr_ns", "wait_ns", "sojourn_ns", "rstat"):
+            np.testing.assert_array_equal(getattr(bx, f), getattr(bp, f),
+                                          err_msg=f"sweep {f}")
+        sm = bx.serving_mean()
+        assert sm["arrived"] > 0 and np.isfinite(sm["goodput_per_us"])
+
+
+# -- closed-loop inertness --------------------------------------------------
+
+
+def test_closed_loop_stays_inert():
+    """No ``arrivals`` -> ``R == 0`` in the compile bucket, no per-request
+    outputs anywhere, and ``serving()`` refuses cleanly."""
+    w = Workload("alock", 2, 2, 8, locality=0.9)
+    assert lower(w, 500).shape_key[-1] == 0
+    r = simulate(w, n_events=500, backend="xla")
+    assert r.arr_ns is None and r.wait_ns is None
+    assert r.sojourn_ns is None and r.rstat is None
+    br = batch.sweep([w], n_seeds=1, n_events=500, backend="xla")[0]
+    assert not br.open_loop
+    with pytest.raises(ValueError, match="open-loop"):
+        br.serving(0)

@@ -15,7 +15,7 @@ from repro.core.sim import LAT_SAMPLES, topology
 from repro.kernels.event_loop import vmem
 from repro.kernels.event_loop.ops import run_events, run_events_pairs
 from repro.kernels.event_loop.ref import run_events_ref
-from repro.workloads import Workload, WorkloadOperands, lower
+from repro.workloads import Arrivals, Workload, WorkloadOperands, lower
 
 ARGS = dict(tile=4, ev_chunk=256, T=12, N=3, K=6, P=2,
             lat_samples=LAT_SAMPLES)
@@ -97,6 +97,52 @@ def test_plan_matches_measured_pallas_buffers(monkeypatch):
         factor = (vmem.PIPELINE_FACTOR
                   if k in ("in.u1", "in.r2", "in.r3") else 1)
         assert nbytes == int(np.prod(shape)) * 4 * factor, k
+
+
+def test_open_loop_plan_matches_measured_pallas_buffers(monkeypatch):
+    """Same measurement, open loop: an ``R > 0`` run must surface the
+    arrival rows, the per-request outputs and the dispatch scratch in the
+    planner's table at their exact binding positions (the vmem-consistency
+    lint diffs traced kernels against this order)."""
+    from repro.kernels.event_loop import ops as el_ops
+    captured = {}
+    real = el_ops.pl.pallas_call
+
+    def spy(kernel, **kw):
+        captured.update(kw)
+        return real(kernel, **kw)
+
+    monkeypatch.setattr(el_ops.pl, "pallas_call", spy)
+    arr = Arrivals(rate_per_us=2.0, max_requests=24, queue_cap=8,
+                   token_rate_per_us=1.0, token_burst=4.0)
+    ev = 300
+    ws = [lower(Workload("alock", 2, 2, 8, locality=0.9, seed=4 + s,
+                         arrivals=arr), ev) for s in range(3)]
+    wl = WorkloadOperands(
+        *(jnp.asarray(np.stack([np.asarray(getattr(w.operands, f))
+                                for w in ws]))
+          for f in WorkloadOperands._fields))
+    tn, ln, _ = topology("alock", 2, 2, 8)
+    run_events_pairs("alock", 4, 2, 8, ev, wl, tn, ln, interpret=True,
+                     tile=2, ev_chunk=128, lat_samples=512)
+    plan = vmem.last_plan()
+    t = plan.breakdown
+    for k in ("in.arr.hi", "in.arr.lo", "in.tok", "in.tokcum", "in.qcap",
+              "out.wq.hi", "out.wq.lo", "out.soj.hi", "out.soj.lo",
+              "out.rstat", "scr.curreq", "scr.arrptr", "scr.qlen"):
+        assert k in t, k
+    assert t["in.arr.hi"][0] == (2, 24)
+    assert t["out.rstat"][0] == (2, 24)
+
+    def names(prefix):
+        return [k for k in t if k.startswith(prefix)]
+
+    assert [t[k][0] for k in names("in.")] == \
+        [s.block_shape for s in captured["in_specs"]]
+    assert [t[k][0] for k in names("out.")] == \
+        [s.block_shape for s in captured["out_specs"]]
+    assert [t[k][0] for k in names("scr.")] == \
+        [tuple(s.shape) for s in captured["scratch_shapes"]]
 
 
 def test_plan_representations_cost_identical_bytes():

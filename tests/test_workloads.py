@@ -74,7 +74,7 @@ def test_lower_edges_and_overrides():
     assert o.think_ns[1] == 16 * o.think_ns[0]   # long(4.0) vs short(0.25)
     np.testing.assert_array_equal(o.active[1], [1, 1, 0, 0])
     np.testing.assert_array_equal(o.active[0], [1, 1, 1, 1])
-    assert lw.shape_key == ("alock", 4, 2, 8, 1000)
+    assert lw.shape_key == ("alock", 4, 2, 8, 1000, 0)
 
 
 def test_lower_rejects_uneven_partition():
