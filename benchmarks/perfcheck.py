@@ -15,6 +15,13 @@ Measured quantities:
     achieved request rate and the harness events/sec of the open-loop
     code path — so the arrival-ingestion lanes show up in the perf
     trajectory, not only in the scenario JSONs;
+  * a cross-algorithm leaderboard leg: all five registered algorithms
+    (alock, spinlock, mcs, hlock with a 2-rack topology, alock-rw at a
+    0.9 read mix) swept on one shared grid and ranked by simulated
+    throughput — each algorithm's mean Mops is its own tracked trajectory
+    row, so kernel-path regressions in the hierarchical or reader-writer
+    designs trip the ``--baseline`` gate even though the Fig.5 grid never
+    dispatches them;
   * dispatch/compile counts from ``batch.exec_stats`` — the chunked layout
     must show one dispatch per chunk per mesh (vs one per bucket) while
     reusing a single compile per shape key, which is the CPU-visible half
@@ -49,7 +56,7 @@ import numpy as np
 from benchmarks.common import EVENTS
 from repro.core import batch
 from repro.experiments import fig5_workloads
-from repro.workloads import Arrivals, Workload
+from repro.workloads import Arrivals, Workload, racks_of
 
 LOCALITY = (0.85, 0.95, 1.0)
 
@@ -60,6 +67,30 @@ OPEN_RATE_PER_US = 4.0
 OPEN_REQS = 256
 OPEN_QCAP = 32
 OPEN_ALGS = ("alock", "mcs")
+
+# the leaderboard leg: all five registered algorithms on one shared
+# topology (2 racks x 2 nodes for hlock's tiering, a 0.9 read mix for
+# alock-rw's shared section) — every algorithm's simulated throughput is
+# its own trajectory row, so a perf regression in the hlock or alock-rw
+# kernel paths trips the --baseline gate even though paper-fig5 never
+# dispatches them
+LB_ALGS = ("alock", "spinlock", "mcs", "hlock", "alock-rw")
+LB_READ_FRAC = 0.9
+LB_LOCALITY = 0.95
+
+
+def _leaderboard_grid():
+    racks = racks_of(4, 2)
+    out = []
+    for alg in LB_ALGS:
+        kw = {}
+        if alg == "hlock":
+            kw["topology"] = racks
+        if alg == "alock-rw":
+            kw["read_frac"] = LB_READ_FRAC
+        out.append(Workload(alg, n_nodes=4, threads_per_node=4, n_locks=16,
+                            locality=LB_LOCALITY, **kw))
+    return out
 
 
 def _open_grid():
@@ -99,6 +130,13 @@ def _tracked_rates(report: dict) -> dict:
         rates["sharding"] = report["sharding"].get("events_per_sec", 0.0)
     if "open_loop" in report:
         rates["open_loop"] = report["open_loop"].get("events_per_sec", 0.0)
+    if "leaderboard" in report:
+        lb = report["leaderboard"]
+        rates["leaderboard"] = lb.get("events_per_sec", 0.0)
+        for alg, row in lb.get("algorithms", {}).items():
+            # simulated Mops, not harness ev/s — still a per-row trajectory
+            # figure the same ratio gate applies to
+            rates[f"leaderboard.{alg}"] = row.get("mean_mops", 0.0)
     return rates
 
 
@@ -127,7 +165,8 @@ def _check_baseline(report: dict, path: str, tolerance: float) -> bool:
         ratio = fresh / ref
         verdict = "ok" if ratio >= 1.0 - tolerance else "REGRESSION"
         ok = ok and verdict == "ok"
-        print(f"# baseline {name}: {fresh:,.1f} vs {ref:,.1f} ev/s "
+        unit = "Mops" if name.startswith("leaderboard.") else "ev/s"
+        print(f"# baseline {name}: {fresh:,.1f} vs {ref:,.1f} {unit} "
               f"({ratio:.3f}x) {verdict}", flush=True)
     if not ok:
         print(f"# perfcheck: events/sec regressed more than "
@@ -247,6 +286,32 @@ def main() -> None:
               f"offered={sm['offered_per_us']:.3f}/us,"
               f"goodput={sm['goodput_per_us']:.3f}/us,"
               f"drop={sm['drop_rate']:.3f}", flush=True)
+
+    # leaderboard leg: one sweep over all five algorithms, ranked by
+    # simulated throughput — each algorithm's mean_mops is a tracked
+    # trajectory row (the only leg that exercises hlock and alock-rw)
+    lb_cfgs = _leaderboard_grid()
+    res_l, wall_l, st_l = _timed_sweep(lb_cfgs, args.seeds, args.events,
+                                       backend="xla")
+    lb_events = len(lb_cfgs) * args.seeds * args.events
+    report["leaderboard"] = {
+        "locality": LB_LOCALITY, "read_frac": LB_READ_FRAC,
+        "wall_s": round(wall_l, 4),
+        "events_per_sec": round(lb_events / max(wall_l, 1e-9), 1),
+        "dispatches": st_l["dispatches"], "compiles": st_l["compiles"],
+        "algorithms": {},
+    }
+    ranked = sorted(zip(lb_cfgs, res_l), key=lambda p: -p[1].mean_mops)
+    for rank, (w, br) in enumerate(ranked, 1):
+        report["leaderboard"]["algorithms"][w.alg] = {
+            "rank": rank,
+            "mean_mops": round(br.mean_mops, 4),
+            "p99_lat_ns": round(br.p99_lat_ns, 1),
+        }
+        print(f"perfcheck.leaderboard.r{rank}.{w.alg},"
+              f"{wall_l * 1e6 / len(lb_cfgs):.1f},"
+              f"{br.mean_mops:.3f}Mops,p99={br.p99_lat_ns:.0f}ns",
+              flush=True)
 
     bk = report["backends"]
     if "xla" in bk and "pallas" in bk:

@@ -12,6 +12,10 @@ workload program from the registry (``repro.experiments.registry``) — the
 same single entry point ``perfcheck.py`` and CI use. ``--scenario all``
 runs every registered scenario; ``--scenario-out FILE`` additionally
 writes the scenario rows as JSON with the scenario name recorded per row.
+Running more than one scenario appends a cross-algorithm leaderboard:
+per scenario, every algorithm that ran is ranked by its best workload
+row's throughput (simulated p99 alongside) as
+``leaderboard.<scenario>.r<rank>.<alg>`` rows.
 
 --seeds N runs every simulator workload with N independent seeds (batched
 in one vmapped dispatch per shape bucket — no extra compiles) and turns
@@ -85,6 +89,43 @@ def _emit_scenario(name: str, n_seeds: int, options: ExecOptions) -> list:
               f"->{vp['tile']}, {vp['total_bytes']:,}B "
               f"({vp['representation']})", flush=True)
     return rows + [summary]
+
+
+def _leaderboard(all_rows: list) -> list:
+    """Cross-algorithm leaderboard over every scenario that just ran.
+
+    Per scenario, each algorithm is represented by its best-throughput
+    workload row (rows carry ``alg`` since the registry labels them) and
+    ranked by ``mean_mops``; the row's simulated p99 rides along so the
+    table reads as throughput *and* tail latency per algorithm. Emitted
+    as ``leaderboard.<scenario>.r<rank>.<alg>`` CSV rows and appended to
+    the JSON artifact under scenario name ``leaderboard``.
+    """
+    best: dict = {}
+    for r in all_rows:
+        alg = r.get("alg")
+        if alg is None or "mean_mops" not in r:
+            continue
+        key = (r["scenario"], alg)
+        if key not in best or r["mean_mops"] > best[key]["mean_mops"]:
+            best[key] = r
+    rows = []
+    for scen in sorted({s for s, _ in best}):
+        ranked = sorted((kv for kv in best.items() if kv[0][0] == scen),
+                        key=lambda kv: -kv[1]["mean_mops"])
+        for rank, ((_, alg), r) in enumerate(ranked, 1):
+            name = f"leaderboard.{scen}.r{rank}.{alg}"
+            derived = (f"{r['mean_mops']:.3f}Mops "
+                       f"p99={r['p99_lat_ns']:.0f}ns ({r['name']})")
+            common.emit(name, 0.0, derived)
+            rows.append({"scenario": "leaderboard", "name": name,
+                         "us_per_call": 0.0, "derived": derived,
+                         "rank": rank, "alg": alg,
+                         "ranked_scenario": scen,
+                         "best_row": r["name"],
+                         "best_mean_mops": r["mean_mops"],
+                         "best_p99_lat_ns": r["p99_lat_ns"]})
+    return rows
 
 
 def main() -> None:
@@ -165,6 +206,8 @@ def main() -> None:
     all_rows = []
     for name in scen:
         all_rows += _emit_scenario(name, args.seeds, options)
+    if len(scen) > 1:
+        all_rows += _leaderboard(all_rows)
     if args.scenario_out and scen:
         with open(args.scenario_out, "w") as f:
             json.dump(all_rows, f, indent=2, sort_keys=True, default=str)
@@ -183,7 +226,8 @@ def main() -> None:
                             else slo.p99_ns if slo else None),
                     min_events_per_sec=(
                         args.slo_min_eps if args.slo_min_eps is not None
-                        else slo.min_events_per_sec if slo else None))
+                        else slo.min_events_per_sec if slo else None),
+                    per_label=slo.per_label if slo else ())
             if slo is None:
                 print(f"# slo {name}: none registered, skipped",
                       flush=True)

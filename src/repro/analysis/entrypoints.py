@@ -139,7 +139,10 @@ def trace_entrypoints(scenarios: Iterable[str] | None = None,
         alg, T, N, K, ne, R = key
         B, P = wl.seed.shape[0], bmeta["n_phases"]
         thread_node, lock_node, _ = topology(alg, N, T // N, K)
-        dims = {"T": T, "N": N, "K": K, "P": P, "R": R}
+        # hl/rw ride in dims so the vmem rule prices the alg-gated buffers
+        # (rack row, read coin/probability rows, reader-count scratch)
+        dims = {"T": T, "N": N, "K": K, "P": P, "R": R,
+                "hl": alg == "hlock", "rw": alg == "alock-rw"}
         meta = dict(bmeta, shape_key=key, B=B, dims=dims,
                     open_loop=R > 0)
 
@@ -167,6 +170,7 @@ def trace_entrypoints(scenarios: Iterable[str] | None = None,
         # (tile, ev_chunk) the traced pallas_call actually bound
         if "pallas-native" in want:
             plan = el_ops.plan_for_run(B, P, ne, T, N, K, R=R,
+                                       hl=dims["hl"], rw=dims["rw"],
                                        interpret=False,
                                        representation="i32pair")
             with enable_x64():
@@ -178,6 +182,7 @@ def trace_entrypoints(scenarios: Iterable[str] | None = None,
                                   meta=dict(meta, plan=plan)))
         if "pallas-pairs" in want:
             plan = el_ops.plan_for_run(B, P, ne, T, N, K, R=R,
+                                       hl=dims["hl"], rw=dims["rw"],
                                        interpret=False,
                                        representation="i32pair")
             with disable_x64():

@@ -13,6 +13,10 @@ Offenders:
     int64 math (M001), a dynamic per-row scatter (M002) and a 1-D iota
     (M003): the exact three hazards PR 5 hand-audited out of the event
     kernel;
+  * ``rack_offender`` — the hlock topology hazard: a rack-index operand
+    held as int64 flowing into the kernel's same-rack tier compare
+    (M001) — the exact widening the engine's i32-pinned ``rack`` operand
+    exists to prevent;
   * ``x64_offender`` — a trace that manufactures an int64 on a path
     declared x64-off (X001);
   * ``weak_offender`` — a python scalar fed straight into a trace, leaving
@@ -50,9 +54,10 @@ from repro.analysis.rules import (RULES, _stamp, check_bucket_signatures,
                                   check_env_resolution,
                                   check_vmem_consistency, run_rules)
 
-__all__ = ["run_corpus", "mosaic_offender", "x64_offender",
-           "weak_offender", "lazy_resolver", "bucket_offender",
-           "corrupt_buffer_table", "corrupt_open_buffer_table"]
+__all__ = ["run_corpus", "mosaic_offender", "rack_offender",
+           "x64_offender", "weak_offender", "lazy_resolver",
+           "bucket_offender", "corrupt_buffer_table",
+           "corrupt_open_buffer_table"]
 
 
 def mosaic_offender() -> Entrypoint:
@@ -80,6 +85,36 @@ def mosaic_offender() -> Entrypoint:
     with enable_x64():
         jx = jax.make_jaxpr(call)(np.zeros((8, 8), np.int32))
     return Entrypoint("corpus:mosaic-offender", "pallas-native", jx,
+                      repr32=True, x64_off=False)
+
+
+def rack_offender() -> Entrypoint:
+    """A 64-bit rack index reaching the hlock tier compare.
+
+    The engine pins the topology assignment to i32 at lowering
+    (``WorkloadOperands.rack``); this fixture is the counterfactual — an
+    un-pinned ``np.asarray(racks)`` widening to int64 under x64 and
+    flowing into the kernel's same-rack comparison, which Mosaic cannot
+    lower (no 64-bit vector registers → M001)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+    from jax.experimental import pallas as pl
+
+    def bad_kernel(rack_ref, o_ref):
+        rack = rack_ref[...].astype(jnp.int64)        # M001: wide rack ids
+        same_rack = rack[:, :1] == rack               # the tier compare
+        o_ref[...] = same_rack.astype(jnp.int32)
+
+    def call(r):
+        return pl.pallas_call(
+            bad_kernel,
+            out_shape=jax.ShapeDtypeStruct((1, 8), jnp.int32),
+            interpret=True)(r)
+
+    with enable_x64():
+        jx = jax.make_jaxpr(call)(np.zeros((1, 8), np.int32))
+    return Entrypoint("corpus:rack-offender", "pallas-native", jx,
                       repr32=True, x64_off=False)
 
 
@@ -175,7 +210,8 @@ def run_corpus() -> dict:
     """
     out: dict = {}
     out["mosaic-lowerability"] = run_rules(
-        [mosaic_offender()], rules=["M001", "M002", "M003"])
+        [mosaic_offender(), rack_offender()],
+        rules=["M001", "M002", "M003"])
     out["x64-cleanliness"] = run_rules([x64_offender()], rules=["X001"])
     retrace = run_rules([weak_offender()], rules=["R001"])
     retrace += _stamp(RULES["R002"], check_env_resolution(lazy_resolver))

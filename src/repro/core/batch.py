@@ -315,7 +315,8 @@ def _exec_bucket(key, thread_node, lock_node, wl: WorkloadOperands,
                 # re-record the VMEM plan per dispatch: planning inside
                 # run_events is trace-time only, so a cached executable
                 # would otherwise leave exec_stats()["vmem_plan"] stale
-                plan_for_run(B, n_phases, n_events, T, N, K, R=R)
+                plan_for_run(B, n_phases, n_events, T, N, K, R=R,
+                             hl=alg == "hlock", rw=alg == "alock-rw")
                 out = run_events_jit(alg, T, N, K, n_events, wj,
                                      thread_node, lock_node)
             else:
@@ -341,7 +342,8 @@ def _exec_bucket(key, thread_node, lock_node, wl: WorkloadOperands,
         # each shard's kernel sees `rows` replicas (same trace-time-only
         # caveat as the unsharded branch above)
         from repro.kernels.event_loop.ops import plan_for_run
-        plan_for_run(rows, n_phases, n_events, T, N, K, R=R)
+        plan_for_run(rows, n_phases, n_events, T, N, K, R=R,
+                     hl=alg == "hlock", rw=alg == "alock-rw")
     outs = []
     with enable_x64():
         for c in range(n_chunks):
@@ -419,6 +421,8 @@ def sweep(configs: Sequence[SimConfig | Workload], n_seeds: int = 1,
         aq = np.empty((C, S, Pmax), np.int32)
         at = np.empty((C, S, Pmax, 2), np.float32)
         af = np.empty((C, S, R), np.int32)
+        rk = np.empty((C, S, N), np.int32)
+        rf = np.empty((C, S, Pmax, T), np.float32)
         for row, i in enumerate(idxs):
             o = pad_phases(lowered[i].operands, Pmax)
             loc[row], zc[row], ed[row] = o.locality, o.zcdf, o.edges
@@ -427,6 +431,7 @@ def sweep(configs: Sequence[SimConfig | Workload], n_seeds: int = 1,
             ag[row], ae[row], aq[row] = (o.arr_gap_ns, o.arr_edges,
                                          o.arr_qcap)
             at[row], af[row] = o.arr_token, o.arr_fix
+            rk[row], rf[row] = o.rack, o.read_frac
             sd[row] = int(o.seed) + np.arange(S, dtype=np.int32)
 
         def flat(a):
@@ -435,7 +440,7 @@ def sweep(configs: Sequence[SimConfig | Workload], n_seeds: int = 1,
         wl = WorkloadOperands(flat(loc), flat(zc), flat(ed), flat(th),
                               flat(ac), flat(bi), flat(sd), flat(cr),
                               flat(nm), flat(ag), flat(ae), flat(aq),
-                              flat(at), flat(af))
+                              flat(at), flat(af), flat(rk), flat(rf))
         outs = _exec_bucket(
             key, thread_node, lock_node, wl, backend, devices, chunk)
         done, lat, _lat_n, t_end, nreacq, npass = outs[:6]

@@ -44,6 +44,11 @@ PASS = 11        # release: write successor budget (budget - 1)
 # spinlock-only
 SL_CAS = 12      # spin: CAS word 0 -> tid
 SL_REL = 13      # write word back to 0
+# reader-writer ALock only (alock-rw)
+RD_TRY = 14      # reader: enter + word++ iff both tails empty
+RD_CS = 15       # reader critical section (shared)
+RD_REL = 16      # reader release: word--
+WR_DRAIN = 17    # writer: wait for reader count (word) to drain to 0
 
 PC_NAMES = {v: k for k, v in list(globals().items()) if isinstance(v, int)}
 
@@ -57,7 +62,7 @@ class LockState(NamedTuple):
     next: tuple            # per-thread descriptor next pointer (tid+1)
     pc: tuple              # per-thread program counter
     prev: tuple            # per-thread remembered predecessor (tid+1)
-    word: int = 0          # spinlock / plain-MCS lock word (tid+1)
+    word: int = 0          # spinlock/MCS lock word (tid+1); rw reader count
 
 
 class Op(NamedTuple):
@@ -251,12 +256,88 @@ def mcs_step(st: LockState, tid: int, cohort: int,
     raise AssertionError(f"bad pc {pc}")
 
 
-MACHINES = {"alock": alock_step, "spinlock": spinlock_step, "mcs": mcs_step}
+# ---------------------------------------------------------------------------
+# Hierarchical topology-aware lock (hlock): the ALock protocol verbatim —
+# the generalization lives entirely in how the *caller* derives `cohort`
+# (rack-of-thread vs rack-of-lock instead of node-of-thread vs
+# node-of-lock) and in the cost tiers charged per op (same node / same
+# rack / cross rack). Keeping the PC-level protocol identical to
+# `alock_step` is what makes the trivial topology (every node its own
+# rack) bitwise-equal to the flat ALock — the regression anchor the
+# simulator tests pin.
+
+
+def hlock_step(st: LockState, tid: int, cohort: int,
+               b_init: tuple[int, int]) -> tuple[LockState, Op]:
+    return alock_step(st, tid, cohort, b_init)
+
+
+# ---------------------------------------------------------------------------
+# Reader-writer ALock (alock-rw): writers run the full ALock protocol but
+# drain the shared reader count (kept in `word`, unused by the plain
+# ALock) before entering the CS; readers bypass the MCS/Peterson machinery
+# entirely — they increment `word` iff both cohort tails are empty
+# (writer preference: any queued writer blocks new readers) and share the
+# CS among themselves. A reader holds from the successful RD_TRY until
+# its RD_REL decrement executes.
+
+
+def alock_rw_step(st: LockState, tid: int, cohort: int,
+                  b_init: tuple[int, int],
+                  is_read: bool = False) -> tuple[LockState, Op]:
+    pc = st.pc[tid]
+
+    if pc == NCS and is_read:
+        # descriptor reset mirrors the writer arm (and the jnp engine's
+        # unconditional NCS re-arm) even though readers never queue
+        st = st._replace(budget=_set(st.budget, tid, -1),
+                         next=_set(st.next, tid, 0),
+                         pc=_set(st.pc, tid, RD_TRY))
+        return st, Op("desc_init", "local", True)
+
+    if pc == RD_TRY:
+        if st.tail[0] == 0 and st.tail[1] == 0:
+            st = st._replace(word=st.word + 1,
+                             pc=_set(st.pc, tid, RD_CS))
+            return st, Op("rd_enter", _opk(cohort), True)
+        return st, Op("rd_blocked", _opk(cohort), False)
+
+    if pc == RD_CS:
+        st = st._replace(pc=_set(st.pc, tid, RD_REL))
+        return st, Op("rd_cs", "none", True)
+
+    if pc == RD_REL:
+        st = st._replace(word=st.word - 1, pc=_set(st.pc, tid, NCS))
+        return st, Op("rd_rel", _opk(cohort), True)
+
+    if pc == WR_DRAIN:
+        if st.word == 0:
+            st = st._replace(pc=_set(st.pc, tid, CS))
+            return st, Op("wr_drained", _opk(cohort), True)
+        return st, Op("wr_drain", _opk(cohort), False)
+
+    # writer path: the plain ALock, with every CS entry rerouted through
+    # the reader drain
+    nst, op = alock_step(st, tid, cohort, b_init)
+    if nst.pc[tid] == CS and pc != WR_DRAIN:
+        nst = nst._replace(pc=_set(nst.pc, tid, WR_DRAIN))
+    return nst, op
+
+
+MACHINES = {"alock": alock_step, "spinlock": spinlock_step, "mcs": mcs_step,
+            "hlock": hlock_step, "alock-rw": alock_rw_step}
 
 
 def in_cs(st: LockState, tid: int) -> bool:
     return st.pc[tid] == CS
 
 
+def in_read_cs(st: LockState, tid: int) -> bool:
+    """Reader holds the shared CS from rd_enter until its RD_REL
+    decrement has executed (pc back at NCS)."""
+    return st.pc[tid] in (RD_CS, RD_REL)
+
+
 def wants_lock(st: LockState, tid: int) -> bool:
-    return st.pc[tid] not in (NCS, CS, REL_CAS, SPIN_NEXT, PASS, SL_REL)
+    return st.pc[tid] not in (NCS, CS, REL_CAS, SPIN_NEXT, PASS, SL_REL,
+                              RD_CS, RD_REL)

@@ -116,22 +116,46 @@ def init_sem(n_threads: int, n_locks: int, targets=None,
     )
 
 
-def _step_fns(alg: str, b_init, thread_node, lock_node):
-    """Build per-PC branch functions: (sem, tid, new_target, new_cohort)
-    -> (sem', opcode, node). Semantics mirror machine.py exactly."""
+def _step_fns(alg: str, b_init, thread_node, lock_node, rack=None):
+    """Build per-PC branch functions: (sem, tid, new_target, new_cohort,
+    new_read) -> (sem', opcode, node). Semantics mirror machine.py exactly.
+
+    ``rack`` is the per-node rack-id vector driving hlock's cost tiers
+    (same node / same rack / cross rack); ``None`` is the trivial
+    topology — every node its own rack — under which the tiers collapse
+    to the flat ALock's local/RDMA split.
+    """
     b_init = jnp.asarray(b_init, I32)
     thread_node = jnp.asarray(thread_node, I32)
     lock_node = jnp.asarray(lock_node, I32)
-    is_alock = alg == "alock"
+    is_hl = alg == "hlock"
+    is_rw = alg == "alock-rw"
+    # hlock and alock-rw run the ALock tail/victim/budget machinery
+    is_alock = alg in ("alock", "hlock", "alock-rw")
     is_mcs = alg == "mcs"
     is_spin = alg == "spinlock"
+    if rack is not None:
+        rack = jnp.asarray(rack, I32)
+
+    def _rack_of(node_ids):
+        return node_ids if rack is None else rack[node_ids]
+
+    def _tiered(node, tid):
+        """hlock cost tier: own node -> shared memory, same rack -> the
+        cheap loopback/rack fabric, cross rack -> full RDMA."""
+        same_rack = _rack_of(node) == _rack_of(thread_node[tid])
+        return jnp.where(node == thread_node[tid], OP_LOCAL,
+                         jnp.where(same_rack, OP_LOOP, OP_RDMA))
 
     def lock_op_cost(s, tid):
         """RDMA unless (alock AND local-cohort). Loopback when the RDMA
-        target is the caller's own node (competitors only)."""
+        target is the caller's own node (competitors only); hlock charges
+        the three-tier node/rack/remote split."""
         k = s.target[tid]
         node = lock_node[k]
-        if is_alock:
+        if is_hl:
+            code = _tiered(node, tid)
+        elif is_alock:
             code = jnp.where(s.cohort[tid] == 0, OP_LOCAL, OP_RDMA)
         else:
             code = jnp.where(node == thread_node[tid], OP_LOOP, OP_RDMA)
@@ -140,14 +164,19 @@ def _step_fns(alg: str, b_init, thread_node, lock_node):
     def peer_op_cost(s, tid, peer):
         """Write to another thread's descriptor (lives on its node)."""
         node = thread_node[peer]
-        if is_alock:
+        if is_hl:
+            code = _tiered(node, tid)
+        elif is_alock:
             code = jnp.where(node == thread_node[tid], OP_LOCAL, OP_RDMA)
         else:
             code = jnp.where(node == thread_node[tid], OP_LOOP, OP_RDMA)
         return code.astype(I32), node
 
-    def f_ncs(s, tid, new_t, new_c):
-        first = mc.SL_CAS if is_spin else mc.SWAP
+    def f_ncs(s, tid, new_t, new_c, new_r):
+        if is_rw:
+            first = jnp.where(new_r != 0, mc.RD_TRY, mc.SWAP)
+        else:
+            first = mc.SL_CAS if is_spin else mc.SWAP
         s = s._replace(budget=s.budget.at[tid].set(-1),
                        nxt=s.nxt.at[tid].set(0),
                        target=s.target.at[tid].set(new_t),
@@ -183,11 +212,14 @@ def _step_fns(alg: str, b_init, thread_node, lock_node):
         code, node = peer_op_cost(s, tid, p)
         return s, code, node
 
+    # a writer's every CS entry detours through the reader drain (rw only)
+    enter_cs = mc.WR_DRAIN if is_rw else mc.CS
+
     def f_spin_budget(s, tid, *_):
         b = s.budget[tid]
         if is_alock:
             nxt_pc = jnp.where(b == -1, mc.SPIN_BUDGET,
-                               jnp.where(b == 0, mc.SET_VICTIM_R, mc.CS))
+                               jnp.where(b == 0, mc.SET_VICTIM_R, enter_cs))
         else:
             nxt_pc = jnp.where(b == -1, mc.SPIN_BUDGET, mc.CS)
         s = s._replace(pc=s.pc.at[tid].set(nxt_pc))
@@ -216,7 +248,7 @@ def _step_fns(alg: str, b_init, thread_node, lock_node):
             s = s._replace(budget=s.budget.at[tid].set(
                 jnp.where(can, b_init[c], s.budget[tid])))
         stay = mc.PET_WAIT_R if reacq else mc.PET_WAIT
-        s = s._replace(pc=s.pc.at[tid].set(jnp.where(can, mc.CS, stay)))
+        s = s._replace(pc=s.pc.at[tid].set(jnp.where(can, enter_cs, stay)))
         code, node = lock_op_cost(s, tid)
         return s, code, node
 
@@ -278,19 +310,59 @@ def _step_fns(alg: str, b_init, thread_node, lock_node):
         code, node = lock_op_cost(s, tid)
         return s, code, node
 
-    return [f_ncs, f_swap, f_write_next, f_spin_budget, f_set_victim,
-            f_pet_wait, f_set_victim_r, f_pet_wait_r, f_cs, f_rel_cas,
-            f_spin_next, f_pass, f_sl_cas, f_sl_rel]
+    # --- reader-writer branches (alock-rw only; PCs 14..17) --------------
+    def f_rd_try(s, tid, *_):
+        # reader entry with writer preference: both cohort tails empty
+        # means no writer holds or wants the lock; the shared reader
+        # count lives in `word` (unused by the plain ALock)
+        k = s.target[tid]
+        can = (s.tail[k, 0] == 0) & (s.tail[k, 1] == 0)
+        s = s._replace(word=s.word.at[k].add(can.astype(I32)),
+                       pc=s.pc.at[tid].set(
+                           jnp.where(can, mc.RD_CS, mc.RD_TRY)))
+        code, node = lock_op_cost(s, tid)
+        return s, code, node
+
+    def f_rd_cs(s, tid, *_):
+        s = s._replace(pc=s.pc.at[tid].set(mc.RD_REL))
+        return s, jnp.int32(OP_CS), jnp.int32(0)
+
+    def f_rd_rel(s, tid, *_):
+        k = s.target[tid]
+        s = s._replace(word=s.word.at[k].add(-1),
+                       pc=s.pc.at[tid].set(mc.NCS))
+        code, node = lock_op_cost(s, tid)
+        return s, code, node
+
+    def f_wr_drain(s, tid, *_):
+        k = s.target[tid]
+        can = s.word[k] == 0
+        s = s._replace(pc=s.pc.at[tid].set(
+            jnp.where(can, mc.CS, mc.WR_DRAIN)))
+        code, node = lock_op_cost(s, tid)
+        return s, code, node
+
+    fns = [f_ncs, f_swap, f_write_next, f_spin_budget, f_set_victim,
+           f_pet_wait, f_set_victim_r, f_pet_wait_r, f_cs, f_rel_cas,
+           f_spin_next, f_pass, f_sl_cas, f_sl_rel]
+    if is_rw:
+        # the rw PCs are unreachable for every other machine — gating them
+        # out python-level keeps the other algorithms' traces identical
+        fns += [f_rd_try, f_rd_cs, f_rd_rel, f_wr_drain]
+    return fns
 
 
 def sem_step(alg, sem: Sem, tid, b_init, thread_node, lock_node,
-             new_target=None, new_cohort=None):
+             new_target=None, new_cohort=None, new_read=None, rack=None):
     """One semantic step of thread `tid` — used by the event loop and by the
-    schedule-driven cross-validation runner."""
-    fns = _step_fns(alg, b_init, thread_node, lock_node)
+    schedule-driven cross-validation runner. ``new_read`` routes the
+    NCS re-arm to the reader path (alock-rw); ``rack`` is the per-node
+    rack-id vector hlock's cost tiers consume."""
+    fns = _step_fns(alg, b_init, thread_node, lock_node, rack)
     nt = sem.target[tid] if new_target is None else new_target
     nc = sem.cohort[tid] if new_cohort is None else new_cohort
-    return lax.switch(sem.pc[tid], fns, sem, tid, nt, nc)
+    nr = jnp.int32(0) if new_read is None else new_read
+    return lax.switch(sem.pc[tid], fns, sem, tid, nt, nc, nr)
 
 
 def run_schedule(alg, cohorts, b_init, schedule, n_locks: int = 1):
@@ -416,6 +488,12 @@ def _run_events(alg, T, N, K, n_events, wl: WorkloadOperands, thread_node,
     # phase is lowered as two identical halves).
     multi_phase = wl.edges.shape[0] > 1
 
+    # static alg gates: the hierarchical cohort test and the read-draw
+    # dispatch are python-dead for every other machine, so the existing
+    # algorithms trace the exact pre-change program
+    is_hl = alg == "hlock"
+    is_rw = alg == "alock-rw"
+
     # static via the arr_fix shape: R == 0 is the closed loop and traces
     # the exact pre-traffic program (every `if open_loop` block below is
     # python-level dead code then — bitwise inertness by construction)
@@ -483,7 +561,14 @@ def _run_events(alg, T, N, K, n_events, wl: WorkloadOperands, thread_node,
                                                 cst[7])
         b_init = wl.b_init[ph]
         now = elig[tid]            # == ready[tid] on the closed-loop path
-        k1, k2, k3 = jax.random.split(jax.random.fold_in(key, i), 3)
+        if is_rw:
+            # the reader/writer coin rides the same counter stream as the
+            # other draws (4-way split; state-independent, so the kernel
+            # precomputes it identically)
+            k1, k2, k3, k4 = jax.random.split(
+                jax.random.fold_in(key, i), 4)
+        else:
+            k1, k2, k3 = jax.random.split(jax.random.fold_in(key, i), 3)
         # workload draw (used only when this step is the NCS re-arm);
         # dtypes pinned so enabling x64 does not change the draws
         mynode = thread_node[tid]
@@ -497,7 +582,18 @@ def _run_events(alg, T, N, K, n_events, wl: WorkloadOperands, thread_node,
         # clamp guards the cumsum's final float32 ulp falling short of 1.0
         off = jnp.minimum(jnp.sum(u3 >= wl.zcdf[ph]).astype(I32), kpn - 1)
         new_t = node * kpn + off
-        new_c = (node != mynode).astype(I32)
+        if is_hl:
+            # hierarchical cohort: LOCAL means same *rack*, not same node.
+            # The trivial topology (rack = arange(N)) makes this bitwise
+            # the flat test — hlock's regression anchor against alock.
+            new_c = (wl.rack[node] != wl.rack[mynode]).astype(I32)
+        else:
+            new_c = (node != mynode).astype(I32)
+        if is_rw:
+            u4 = jax.random.uniform(k4, dtype=jnp.float32)
+            new_r = (u4 < wl.read_frac[ph, tid]).astype(I32)
+        else:
+            new_r = None
 
         if open_loop:
             live = now != never
@@ -531,9 +627,14 @@ def _run_events(alg, T, N, K, n_events, wl: WorkloadOperands, thread_node,
 
         was_ncs_bound = (sem.pc[tid] == mc.REL_CAS) | (sem.pc[tid] == mc.PASS) \
             | (sem.pc[tid] == mc.SL_REL)
+        if is_rw:
+            # a reader's RD_REL decrement is its release — it completes an
+            # acquisition exactly like a writer's REL_CAS/PASS
+            was_ncs_bound = was_ncs_bound | (sem.pc[tid] == mc.RD_REL)
         pre_pc = sem.pc[tid]
         sem2, code, tnode = sem_step(alg, sem, tid, b_init, thread_node,
-                                     lock_node, new_t, new_c)
+                                     lock_node, new_t, new_c, new_r,
+                                     rack=wl.rack)
         finished = was_ncs_bound & (sem2.pc[tid] == mc.NCS)
         reacq = (pre_pc == mc.SPIN_BUDGET) & (sem2.pc[tid] == mc.SET_VICTIM_R)
         passed = pre_pc == mc.PASS

@@ -28,7 +28,7 @@ from repro.experiments.options import ExecOptions
 from repro.experiments.slo import Slo
 from repro.traffic.metrics import detect_knee
 from repro.workloads import Arrivals, Phase, Workload, mixed, \
-    resolve_node_mult
+    racks_of, resolve_node_mult
 
 _SCENARIOS: dict[str, "Scenario"] = {}
 
@@ -108,6 +108,7 @@ def _rows(result) -> list[dict]:
         out.append({
             "name": lbl, "us_per_call": br.mean_lat_us,
             "derived": f"{br.mean_mops:.3f}±{br.ci95_mops:.3f}Mops",
+            "alg": w.alg,
             "mean_mops": br.mean_mops, "ci95_mops": br.ci95_mops,
             "p99_lat_ns": br.p99_lat_ns,
             "ops": int(br.ops.sum()),
@@ -184,6 +185,20 @@ _BURST_POLICIES = (
     ("token", Arrivals(rate_per_us=1.0, max_requests=_RAMP_REQS,
                        token_rate_per_us=2.0, token_burst=16.0)),
 )
+# read-heavy: alock-rw at increasing read mixes against the writer-only
+# alock control on the identical spec — readers share the CS, so the
+# throughput ratio should grow with the read fraction and dominate by 0.9
+_READ_FRACS = (0.5, 0.9, 0.99)
+# rack-locality: two racks of two nodes each (racks_of(4, 2)); hlock's
+# rack cohort merges each rack into one Peterson side, discounting
+# in-rack remote traffic (loopback-priced) at the cost of coarser lease
+# handoffs — the sweep brackets where each effect wins
+_RACKS = racks_of(_BASE.n_nodes, 2)
+_RACK_LOCS = (0.5, 0.75, 0.95)
+
+
+def _rw_label(rf: float) -> str:
+    return f"alock-rw.rf{int(rf * 100)}"
 
 
 def _uniform_grid_workloads():
@@ -244,6 +259,17 @@ def _open_loop_ramp_workloads():
 def _burst_storm_workloads():
     return [_BASE.replace(alg=alg, phases=_BURST_PH, arrivals=arr)
             for alg in ("alock", "mcs") for _, arr in _BURST_POLICIES]
+
+
+def _read_heavy_workloads():
+    return [_BASE] + [_BASE.replace(alg="alock-rw", read_frac=rf)
+                      for rf in _READ_FRACS]
+
+
+def _rack_locality_workloads():
+    return [_BASE.replace(alg=alg, locality=loc,
+                          topology=_RACKS if alg == "hlock" else None)
+            for alg in ("alock", "hlock", "mcs") for loc in _RACK_LOCS]
 
 
 def _serving_rows(label: str, br) -> dict:
@@ -519,6 +545,73 @@ def _burst_storm(n_seeds, n_events, options):
                             f"drop {sm['drop_rate']:.3f}"),
                 "goodput_ratio": ratio, "drop_rate": sm["drop_rate"],
             })
+    return rows
+
+
+@scenario("read-heavy",
+          "alock-rw read mixes (0.5/0.9/0.99) vs writer-only alock; "
+          "SLO-gated per label",
+          slo=Slo(p99_ns=500_000, min_events_per_sec=10.0,
+                  per_label={"alock-rw.rf99": Slo(p99_ns=100_000)}),
+          workloads=_read_heavy_workloads)
+def _read_heavy(n_seeds, n_events, options):
+    """The reader/writer split under increasing read mixes: the same spec
+    runs writer-only under plain ``alock`` and under ``alock-rw`` with
+    read fractions 0.5 / 0.9 / 0.99. Readers share the critical section
+    (writers drain them first and keep exclusivity), so throughput climbs
+    with the read mix and should dominate the writer-only control by
+    read_frac >= 0.9 — the vs_alock ratio rows state the claim directly,
+    and the per-label SLO pins the near-read-only latency tail.
+    """
+    exp = Experiment("read-heavy", n_seeds=n_seeds, n_events=n_events,
+                     options=options)
+    exp.add(_BASE, label="alock.writer-only")
+    for rf in _READ_FRACS:
+        exp.add(_BASE.replace(alg="alock-rw", read_frac=rf),
+                label=_rw_label(rf))
+    res = exp.run()
+    rows = _rows(res)
+    base = max(res["alock.writer-only"].mean_mops, 1e-9)
+    for rf in _READ_FRACS:
+        hit = res[_rw_label(rf)].mean_mops / base
+        rows.append({"name": f"rf{int(rf * 100)}.vs_alock_ratio",
+                     "us_per_call": 0.0, "derived": f"{hit:.3f}x",
+                     "ratio": hit, "read_frac": rf})
+    return rows
+
+
+@scenario("rack-locality",
+          "hlock's rack cohorts vs flat alock across a locality sweep; "
+          "SLO-gated per label",
+          slo=Slo(p99_ns=500_000, min_events_per_sec=10.0,
+                  per_label={"hlock.loc50": Slo(p99_ns=200_000)}),
+          workloads=_rack_locality_workloads)
+def _rack_locality(n_seeds, n_events, options):
+    """The hierarchical cohort trade-off, swept over locality on a
+    two-rack topology (``racks_of(4, 2)``). hlock prices same-rack remote
+    traffic as loopback instead of full RDMA but merges each rack into
+    one Peterson cohort, so half its "local"-side lease handoffs ride the
+    NIC (loopback serializes on the card) where flat alock's stay on the
+    CPU. Against mcs the ALock-family advantage *widens* as locality
+    deepens (the hlock_vs_mcs ratio rows); against flat alock the merged
+    cohort is a measured cost that shrinks with locality (hlock_vs_alock
+    rises toward 1.0) — both trade-offs stated as ratio rows.
+    """
+    exp = Experiment("rack-locality", n_seeds=n_seeds, n_events=n_events,
+                     options=options)
+    for w in _rack_locality_workloads():
+        loc = w.locality if isinstance(w.locality, float) else w.locality[0]
+        exp.add(w, label=f"{w.alg}.loc{int(float(loc) * 100)}")
+    res = exp.run()
+    rows = _rows(res)
+    for loc in _RACK_LOCS:
+        tag = int(loc * 100)
+        hl = res[f"hlock.loc{tag}"].mean_mops
+        for ref in ("alock", "mcs"):
+            hit = hl / max(res[f"{ref}.loc{tag}"].mean_mops, 1e-9)
+            rows.append({"name": f"loc{tag}.hlock_vs_{ref}_ratio",
+                         "us_per_call": 0.0, "derived": f"{hit:.3f}x",
+                         "ratio": hit, "locality": loc})
     return rows
 
 

@@ -19,6 +19,13 @@ The two bounds deliberately live on different clocks:
     this floor loose enough for CI smoke runs and let perfcheck carry the
     fine-grained trajectory.
 
+Beyond the scenario-wide bounds, ``per_label`` attaches a *sub-contract*
+to individual result rows by name: ``Slo(per_label={"alock-rw.rf99":
+Slo(p99_ns=2e5)})`` gates only the row named ``alock-rw.rf99``, with its
+own (usually tighter) bounds. A per-label entry whose row never appears
+is a violation, exactly like a scenario-wide bound matching nothing —
+renaming a workload label cannot silently un-gate it.
+
 >>> from repro.experiments.slo import Slo, check_slo
 >>> slo = Slo(p99_ns=5e6, min_events_per_sec=1.0)
 >>> rows = [{"name": "a", "p99_lat_ns": 4e6},
@@ -28,6 +35,14 @@ True
 >>> rep = check_slo(Slo(p99_ns=1.0), rows)
 >>> rep.ok, len(rep.violations)
 (False, 1)
+>>> tiered = Slo(p99_ns=5e6, per_label={"a": Slo(p99_ns=4.5e6)})
+>>> check_slo(tiered, rows).ok
+True
+>>> rep = check_slo(Slo(p99_ns=5e6,
+...                     per_label={"a": Slo(p99_ns=1e6),
+...                                "gone": Slo(p99_ns=1e6)}), rows)
+>>> rep.ok, len(rep.violations)
+(False, 2)
 """
 from __future__ import annotations
 
@@ -47,6 +62,10 @@ class Slo:
     """
     p99_ns: float | None = None
     min_events_per_sec: float | None = None
+    #: per-row sub-contracts: ``{row name: Slo}`` (or a pair tuple) —
+    #: each applies its own bounds to exactly the row of that name, on
+    #: top of the scenario-wide bounds above. One level only.
+    per_label: object = ()
 
     def __post_init__(self):
         for name in ("p99_ns", "min_events_per_sec"):
@@ -58,7 +77,19 @@ class Slo:
                 raise ValueError(
                     f"Slo.{name} must be finite and > 0, got {v}")
             object.__setattr__(self, name, v)
-        if self.p99_ns is None and self.min_events_per_sec is None:
+        pl = self.per_label
+        pl = tuple(sorted(pl.items())) if isinstance(pl, dict) \
+            else tuple(tuple(p) for p in pl)
+        for label, sub in pl:
+            if not isinstance(sub, Slo):
+                raise TypeError(f"per_label[{label!r}] must be an Slo, "
+                                f"got {type(sub).__name__}")
+            if sub.per_label:
+                raise ValueError(f"per_label[{label!r}] may not nest its "
+                                 f"own per_label bounds")
+        object.__setattr__(self, "per_label", pl)
+        if self.p99_ns is None and self.min_events_per_sec is None \
+                and not pl:
             raise ValueError("an Slo needs at least one bound")
 
 
@@ -82,7 +113,9 @@ def check_slo(slo: Slo, rows) -> SloReport:
     carries that bound's key — rows without latency/rate keys (ratio
     rows, coord-plane rows) pass through unexamined. A bound that
     matched *no* row at all is itself a violation: an SLO that silently
-    checks nothing would gate nothing.
+    checks nothing would gate nothing. ``per_label`` sub-contracts are
+    evaluated against exactly the rows bearing their name, with the same
+    matched-nothing rule per entry.
     """
     violations = []
     checked = 0
@@ -110,4 +143,9 @@ def check_slo(slo: Slo, rows) -> SloReport:
             violations.append(
                 f"slo bound {bound} matched no result row — nothing was "
                 f"checked")
+    for label, sub in slo.per_label:
+        sub_rows = [r for r in rows if r.get("name") == label]
+        rep = check_slo(sub, sub_rows)
+        checked += rep.checked
+        violations.extend(f"[{label}] {v}" for v in rep.violations)
     return SloReport(slo=slo, checked=checked, violations=tuple(violations))

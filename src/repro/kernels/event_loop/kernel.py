@@ -221,21 +221,45 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
     """One (replica_tile, event_chunk) grid step.
 
     ``refs`` arrive flat from ``pl.pallas_call`` — 12 inputs (plus the
-    open-loop arrival rows when ``R > 0``), then the outputs and scratch
-    whose *count* depends on the clock representation (one ref per clock
-    buffer for i64, an (hi, lo) pair for i32) — and are regrouped here
-    from the static ``repr32`` / ``R`` flags. ``R == 0`` is the closed
-    loop and parses/traces exactly the pre-traffic program (every
-    ``if R > 0`` block below is python-level dead code then).
+    open-loop arrival rows when ``R > 0``, the read coin/probability rows
+    for ``alock-rw`` and the rack row for ``hlock``), then the outputs and
+    scratch whose *count* depends on the clock representation (one ref per
+    clock buffer for i64, an (hi, lo) pair for i32) — and are regrouped
+    here from the static ``repr32`` / ``R`` / alg flags. ``R == 0`` is the
+    closed loop and parses/traces exactly the pre-traffic program (every
+    ``if R > 0`` block below is python-level dead code then); likewise the
+    ``is_hl`` / ``is_rw`` blocks are dead for every other algorithm, so
+    alock/mcs/spinlock trace the exact pre-topology program.
 
-    s_t0/s_t1 are the two cohort tails for alock; for mcs/spinlock s_t0 is
-    the lock word and s_t1/s_vic stay zero (those PCs are unreachable).
+    s_t0/s_t1 are the two cohort tails for alock (and its hlock/alock-rw
+    variants); for mcs/spinlock s_t0 is the lock word and s_t1/s_vic stay
+    zero (those PCs are unreachable). alock-rw adds an s_word scratch
+    holding per-lock reader counts.
     """
     C = _PairClocks if repr32 else _I64Clocks
     nc = C.nrefs
-    (u1_ref, r2_ref, r3_ref, edges_ref, think_ref, locp_ref, actp_ref,
-     binit_ref, costs_ref, nmult_ref, tn_ref, ln_ref) = refs[:12]
-    pos = 12
+    is_hl = alg == "hlock"
+    is_rw = alg == "alock-rw"
+    # hlock and alock-rw run the full ALock tail/victim/budget machinery;
+    # their extra refs (read coin + read_frac row, rack row, reader-count
+    # scratch) are python-gated so every other algorithm's ref layout —
+    # and traced program — is byte-identical to the pre-topology kernel
+    (u1_ref, r2_ref, r3_ref) = refs[:3]
+    pos = 3
+    if is_rw:
+        u4_ref = refs[pos]                  # reader/writer coin stream
+        pos += 1
+    (edges_ref, think_ref, locp_ref) = refs[pos:pos + 3]
+    pos += 3
+    if is_rw:
+        readf_ref = refs[pos]               # per-phase read probabilities
+        pos += 1
+    (actp_ref, binit_ref, costs_ref, nmult_ref, tn_ref,
+     ln_ref) = refs[pos:pos + 6]
+    pos += 6
+    if is_hl:
+        rack_ref = refs[pos]                # per-node rack ids
+        pos += 1
     if R > 0:
         arr_refs = refs[pos:pos + nc]
         tok_ref, tokcum_ref, qcap_ref = refs[pos + nc:pos + nc + 3]
@@ -254,13 +278,17 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
         pos += 2 * nc + 1
     scr = rest[pos:]
     (s_t0, s_t1, s_vic, s_pc, s_bud, s_nxt, s_prev, s_tgt, s_coh) = scr[:9]
-    ready_refs = scr[9:9 + nc]
-    busy_refs = scr[9 + nc:9 + 2 * nc]
-    opst_refs = scr[9 + 2 * nc:9 + 3 * nc]
+    pos = 9
+    if is_rw:
+        s_word = scr[pos]                   # per-lock reader counts
+        pos += 1
+    ready_refs = scr[pos:pos + nc]
+    busy_refs = scr[pos + nc:pos + 2 * nc]
+    opst_refs = scr[pos + 2 * nc:pos + 3 * nc]
     if R > 0:
-        s_curreq, s_arrptr, s_qlen = scr[9 + 3 * nc:12 + 3 * nc]
+        s_curreq, s_arrptr, s_qlen = scr[pos + 3 * nc:pos + 3 * nc + 3]
 
-    is_alock = alg == "alock"
+    is_alock = alg in ("alock", "hlock", "alock-rw")
     is_spin = alg == "spinlock"
     j = pl.program_id(1)
     tile = s_pc.shape[0]
@@ -271,6 +299,8 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
         # fresh replicas == sim.init_sem + zeroed clocks/accounting
         zrefs = (s_t0, s_t1, s_vic, s_nxt, s_prev, s_tgt, s_coh,
                  done_ref, latn_ref, reacq_ref, npass_ref)
+        if is_rw:
+            zrefs = zrefs + (s_word,)
         if R > 0:
             zrefs = zrefs + (rstat_ref, s_arrptr, s_qlen)
         for ref in zrefs:
@@ -299,6 +329,11 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
     nmp = nmult_ref[...].reshape(tile, P, N)        # f32 fail-slow mults
     tn = jnp.broadcast_to(tn_ref[...].astype(I32), (tile, T))
     ln = jnp.broadcast_to(ln_ref[...].astype(I32), (tile, K))
+    if is_rw:
+        u4s = u4_ref[...]                           # (tile, ev_chunk) f32
+        readfp = readf_ref[...].reshape(tile, P, T)  # f32 read probs
+    if is_hl:
+        rk = rack_ref[...].astype(I32)              # (tile, N) rack ids
     if R > 0:
         # open-loop arrival rows: times (clock), token admit mask +
         # exclusive prefix count, per-request queue bound (all (tile, R))
@@ -344,8 +379,16 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
         state = state + (rstat_ref[...], s_curreq[...],
                          s_arrptr[...][:, 0], s_qlen[...][:, 0],
                          C.read(wq_refs), C.read(soj_refs))
+    if is_rw:
+        # reader counts ride at the tail of the carry so every existing
+        # unpack position stays fixed for the other algorithms
+        state = state + (s_word[...],)
 
     def step(e, st):
+        if is_rw:
+            st_wrd = st[-1]
+            wrd = st_wrd
+            st = st[:-1]
         if R > 0:
             (t0, t1, vic, pc, bud, nxt, prv, tgt, coh, ready, busy, opst,
              done, lat, latn, reacq, npass,
@@ -376,6 +419,10 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
                           dtype=I32)                 # (tile, 8)
             nm_row = jnp.sum(jnp.where(ohP[:, :, None], nmp, np.float32(0)),
                              axis=1, dtype=jnp.float32)   # (tile, N)
+            if is_rw:
+                rf_row = jnp.sum(jnp.where(ohP[:, :, None], readfp,
+                                           np.float32(0)),
+                                 axis=1, dtype=jnp.float32)   # (tile, T)
 
             # phase boundary: rejoining threads resume from the cluster's
             # current clock (mirror of the XLA loop's rejoin bump)
@@ -399,6 +446,8 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
             binit = binitp[:, 0]
             cst = cstp[:, 0]
             nm_row = nmp[:, 0, :]
+            if is_rw:
+                rf_row = readfp[:, 0, :]
             actm = None
         if R > 0:
             # idle threads (NCS, no request bound) wake at the earliest
@@ -438,7 +487,23 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
         other = (mynode + _I(1) + r2e) % _I(N)
         node_w = jnp.where(ge, mynode, other).astype(I32)
         new_t = node_w * kpn + r3e
-        new_c = (node_w != mynode).astype(I32)
+        if is_hl:
+            # hierarchical cohort: LOCAL means same *rack*, not same node
+            # (one-hot rack gathers of the XLA loop's wl.rack[] compares)
+            rk_w = jnp.sum(jnp.where(nio == node_w[:, None], rk, _I(0)),
+                           axis=1, dtype=I32)
+            rk_me = jnp.sum(jnp.where(nio == mynode[:, None], rk, _I(0)),
+                            axis=1, dtype=I32)
+            new_c = (rk_w != rk_me).astype(I32)
+        else:
+            new_c = (node_w != mynode).astype(I32)
+        if is_rw:
+            # reader/writer coin: same f32 compare as the XLA loop's
+            # uniform(k4) < read_frac[ph, tid]
+            u4e = lax.dynamic_index_in_dim(u4s, e, 1, keepdims=False)
+            rf_t = jnp.sum(jnp.where(ohT, rf_row, np.float32(0)), axis=1,
+                           dtype=jnp.float32)
+            new_r = u4e < rf_t
 
         if R > 0:
             live = jnp.logical_not(C.is_never(now))
@@ -492,6 +557,11 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
         is_ps = p == mc.PASS
         is_slc = p == mc.SL_CAS
         is_slr = p == mc.SL_REL
+        if is_rw:
+            is_rdt = p == mc.RD_TRY
+            is_rdc = p == mc.RD_CS
+            is_rdr = p == mc.RD_REL
+            is_wd = p == mc.WR_DRAIN
 
         Bc = jnp.where(ch == 0, binit[:, 0], binit[:, 1])
         tail_c = jnp.where(ch == 0, gat_k(t0, tg), gat_k(t1, tg))
@@ -509,6 +579,12 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
         free = wv == 0
         can = (tail_o == 0) | (vk != ch)
         newb = (bd - 1) if is_alock else jnp.ones_like(bd)
+        if is_rw:
+            # reader entry with writer preference: both cohort tails empty
+            # (mirror of machine.f_rd_try); drain waits for the reader
+            # count at the target to reach zero
+            can_rd = (tail_c == 0) & (tail_o == 0)
+            wdv = gat_k(wrd, tg)
 
         # -- lock word / tails / victim ------------------------------------
         if is_alock:
@@ -527,6 +603,12 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
             t0 = jnp.where((is_rc & solo)[:, None] & ohK, _I(0), t0)
             t0 = jnp.where((is_slc & free)[:, None] & ohK, me[:, None], t0)
             t0 = jnp.where(is_slr[:, None] & ohK, _I(0), t0)
+        if is_rw:
+            # reader count at the target: +1 on a successful RD_TRY, -1 on
+            # RD_REL (one-hot forms of word.at[k].add)
+            wrd = wrd + jnp.where((is_rdt & can_rd)[:, None] & ohK, _I(1),
+                                  _I(0))
+            wrd = wrd - jnp.where(is_rdr[:, None] & ohK, _I(1), _I(0))
 
         # -- per-thread descriptors ----------------------------------------
         prv = jnp.where(is_swap[:, None] & ohT, prev_val[:, None], prv)
@@ -542,30 +624,41 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
         coh = jnp.where(is_ncs[:, None] & ohT, new_c[:, None], coh)
 
         # -- next PC (the lax.switch, as one select over PC classes) -------
-        first = mc.SL_CAS if is_spin else mc.SWAP
+        # a writer's every CS entry detours through the reader drain (rw)
+        ecs = mc.WR_DRAIN if is_rw else mc.CS
+        if is_rw:
+            first_val = jnp.where(new_r, _I(mc.RD_TRY), _I(mc.SWAP))
+        else:
+            first_val = jnp.full_like(p, mc.SL_CAS if is_spin else mc.SWAP)
         if is_alock:
             pc_swap = jnp.where(empty, _I(mc.SET_VICTIM), _I(mc.WRITE_NEXT))
             pc_sb = jnp.where(bd == -1, _I(mc.SPIN_BUDGET),
                               jnp.where(bd == 0, _I(mc.SET_VICTIM_R),
-                                        _I(mc.CS)))
+                                        _I(ecs)))
         else:
             pc_swap = jnp.where(empty, _I(mc.CS), _I(mc.WRITE_NEXT))
             pc_sb = jnp.where(bd == -1, _I(mc.SPIN_BUDGET), _I(mc.CS))
-        new_pc = _select(
-            [is_ncs, is_swap, is_wn, is_sb, is_sv, is_svr, is_pw, is_pwr,
-             is_cs, is_rc, is_sn, is_ps, is_slc, is_slr],
-            [jnp.full_like(p, first), pc_swap,
-             jnp.full_like(p, mc.SPIN_BUDGET), pc_sb,
-             jnp.full_like(p, mc.PET_WAIT), jnp.full_like(p, mc.PET_WAIT_R),
-             jnp.where(can, _I(mc.CS), _I(mc.PET_WAIT)),
-             jnp.where(can, _I(mc.CS), _I(mc.PET_WAIT_R)),
-             jnp.full_like(p, mc.SL_REL if is_spin else mc.REL_CAS),
-             jnp.where(solo, _I(mc.NCS), _I(mc.SPIN_NEXT)),
-             jnp.where(has_succ, _I(mc.PASS), _I(mc.SPIN_NEXT)),
-             jnp.full_like(p, mc.NCS),
-             jnp.where(free, _I(mc.CS), _I(mc.SL_CAS)),
-             jnp.full_like(p, mc.NCS)],
-            p).astype(I32)
+        pc_conds = [is_ncs, is_swap, is_wn, is_sb, is_sv, is_svr, is_pw,
+                    is_pwr, is_cs, is_rc, is_sn, is_ps, is_slc, is_slr]
+        pc_vals = [first_val, pc_swap,
+                   jnp.full_like(p, mc.SPIN_BUDGET), pc_sb,
+                   jnp.full_like(p, mc.PET_WAIT),
+                   jnp.full_like(p, mc.PET_WAIT_R),
+                   jnp.where(can, _I(ecs), _I(mc.PET_WAIT)),
+                   jnp.where(can, _I(ecs), _I(mc.PET_WAIT_R)),
+                   jnp.full_like(p, mc.SL_REL if is_spin else mc.REL_CAS),
+                   jnp.where(solo, _I(mc.NCS), _I(mc.SPIN_NEXT)),
+                   jnp.where(has_succ, _I(mc.PASS), _I(mc.SPIN_NEXT)),
+                   jnp.full_like(p, mc.NCS),
+                   jnp.where(free, _I(mc.CS), _I(mc.SL_CAS)),
+                   jnp.full_like(p, mc.NCS)]
+        if is_rw:
+            pc_conds += [is_rdt, is_rdc, is_rdr, is_wd]
+            pc_vals += [jnp.where(can_rd, _I(mc.RD_CS), _I(mc.RD_TRY)),
+                        jnp.full_like(p, mc.RD_REL),
+                        jnp.full_like(p, mc.NCS),
+                        jnp.where(wdv == 0, _I(mc.CS), _I(mc.WR_DRAIN))]
+        new_pc = _select(pc_conds, pc_vals, p).astype(I32)
         pc = jnp.where(ohT, new_pc[:, None], pc)
         if R > 0:
             # no-op events (drained stream / idle thread with an empty
@@ -575,27 +668,55 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
             (t0, t1, vic, pc, bud, nxt, prv, tgt, coh) = tuple(
                 jnp.where(sm, n, o) for n, o in
                 zip((t0, t1, vic, pc, bud, nxt, prv, tgt, coh), sem_old))
+            if is_rw:
+                wrd = jnp.where(sm, wrd, st_wrd)
 
         # -- cost opcode + RNIC node (sim._step_fns' cost functions) -------
         lnode = gat_k(ln, tg)
         pred_node = gat_t(tn, pred)
         succ_node = gat_t(tn, succ)
-        if is_alock:
+        if is_hl:
+            # three-tier cost: own node -> shared memory, same rack -> the
+            # cheap loopback/rack fabric, cross rack -> full RDMA (mirror
+            # of sim._step_fns._tiered, one-hot rack gathers)
+            def tiered(nd):
+                rk_n = jnp.sum(jnp.where(nio == nd[:, None], rk, _I(0)),
+                               axis=1, dtype=I32)
+                return jnp.where(nd == mynode, _I(OP_LOCAL),
+                                 jnp.where(rk_n == rk_me, _I(OP_LOOP),
+                                           _I(OP_RDMA)))
+
+            lock_code = tiered(lnode)
+            wn_code = tiered(pred_node)
+            ps_code = tiered(succ_node)
+        elif is_alock:
             lock_code = jnp.where(ch == 0, _I(OP_LOCAL), _I(OP_RDMA))
-            peer_local = _I(OP_LOCAL)
+            wn_code = jnp.where(pred_node == mynode, _I(OP_LOCAL),
+                                _I(OP_RDMA))
+            ps_code = jnp.where(succ_node == mynode, _I(OP_LOCAL),
+                                _I(OP_RDMA))
         else:
             lock_code = jnp.where(lnode == mynode, _I(OP_LOOP), _I(OP_RDMA))
-            peer_local = _I(OP_LOOP)
+            wn_code = jnp.where(pred_node == mynode, _I(OP_LOOP),
+                                _I(OP_RDMA))
+            ps_code = jnp.where(succ_node == mynode, _I(OP_LOOP),
+                                _I(OP_RDMA))
         lock_m = (is_swap | is_sv | is_svr | is_pw | is_pwr | is_rc
                   | is_slc | is_slr)
+        cs_m = is_cs
+        if is_rw:
+            # reader entry/release and the writer drain are lock-word ops;
+            # the reader CS is an OP_CS like the writer's
+            lock_m = lock_m | is_rdt | is_rdr | is_wd
+            cs_m = cs_m | is_rdc
         code = _select(
-            [is_ncs, is_wn, is_sb, is_cs, is_sn, is_ps, lock_m],
+            [is_ncs, is_wn, is_sb, cs_m, is_sn, is_ps, lock_m],
             [jnp.full_like(p, OP_THINK),
-             jnp.where(pred_node == mynode, peer_local, _I(OP_RDMA)),
+             wn_code,
              jnp.where(bd == -1, _I(OP_POLL), _I(OP_LOCAL)),
              jnp.full_like(p, OP_CS),
              jnp.where(has_succ, _I(OP_LOCAL), _I(OP_POLL)),
-             jnp.where(succ_node == mynode, peer_local, _I(OP_RDMA)),
+             ps_code,
              lock_code], jnp.full_like(p, 0)).astype(I32)
         tnode = _select([is_wn, is_ps, lock_m],
                         [pred_node, succ_node, lnode],
@@ -636,7 +757,12 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
             ready = C.where(ohT, C.col(new_ready), ready)
 
         # -- completion accounting (latency ring, counters) ----------------
-        finished = (is_rc | is_ps | is_slr) & (new_pc == mc.NCS)
+        fin_m = is_rc | is_ps | is_slr
+        if is_rw:
+            # a reader's RD_REL decrement is its release — it completes an
+            # acquisition exactly like a writer's REL_CAS/PASS
+            fin_m = fin_m | is_rdr
+        finished = fin_m & (new_pc == mc.NCS)
         if R > 0:
             finished = finished & step_ok
         lat_val = C.sub(now, C.gather(ohT, opst))
@@ -681,6 +807,9 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
             npass = npass + is_ps.astype(I32)
             new_st = (t0, t1, vic, pc, bud, nxt, prv, tgt, coh, ready,
                       busy, opst, done, lat, latn, reacq, npass)
+        if is_rw:
+            new_st = new_st + (wrd,)
+            st = st + (st_wrd,)
         # ragged final chunk: events past n_events are masked no-ops
         valid = gi < n_events
         return jax.tree_util.tree_map(
@@ -697,6 +826,9 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
         state = carry[1]
     else:
         state = lax.fori_loop(0, ev_chunk, step, state)
+    if is_rw:
+        s_word[...] = state[-1]
+        state = state[:-1]
     (t0, t1, vic, pc, bud, nxt, prv, tgt, coh, ready, busy, opst,
      done, lat, latn, reacq, npass) = state[:17]
 

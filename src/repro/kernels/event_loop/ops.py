@@ -111,7 +111,8 @@ def resolve_representation(representation: str, interpret: bool) -> str:
     return representation
 
 
-def precompute_draws(seed, edges, zcdf, n_events: int, N: int, kpn: int):
+def precompute_draws(seed, edges, zcdf, n_events: int, N: int, kpn: int,
+                     rw: bool = False):
     """The state-independent per-event draw stream, replica-batched.
 
     Returns (B, n_events) arrays (loc_uniform f32, remote_offset i32,
@@ -119,18 +120,27 @@ def precompute_draws(seed, edges, zcdf, n_events: int, N: int, kpn: int):
     event i from ``split(fold_in(key, i), 3)``. The Zipf inverse-CDF is
     resolved against the phase active at event i (phases are a pure
     function of the event index), so consuming the stream in-kernel
-    reproduces the XLA path bit for bit.
+    reproduces the XLA path bit for bit. ``rw=True`` mirrors the
+    alock-rw engine's 4-way split and appends the reader/writer coin
+    uniform (f32) as a fourth stream.
     """
     def one(sd, ed, cdf):
         key = jax.random.key(sd)
 
         def ev(i):
-            k1, k2, k3 = jax.random.split(jax.random.fold_in(key, i), 3)
+            if rw:
+                k1, k2, k3, k4 = jax.random.split(
+                    jax.random.fold_in(key, i), 4)
+            else:
+                k1, k2, k3 = jax.random.split(jax.random.fold_in(key, i), 3)
             u1 = jax.random.uniform(k1, dtype=jnp.float32)
             r2 = jax.random.randint(k2, (), 0, max(N - 1, 1), dtype=I32)
             u3 = jax.random.uniform(k3, dtype=jnp.float32)
             ph = jnp.sum(i >= ed) - 1
             r3 = jnp.minimum(jnp.sum(u3 >= cdf[ph]).astype(I32), kpn - 1)
+            if rw:
+                u4 = jax.random.uniform(k4, dtype=jnp.float32)
+                return u1, r2, r3, u4
             return u1, r2, r3
 
         return jax.vmap(ev)(jnp.arange(n_events))
@@ -143,7 +153,8 @@ def plan_for_run(B, P, n_events, T, N, K, *, R: int = 0,
                  ev_chunk: int = DEFAULT_EV_CHUNK, interpret=None,
                  representation: str = "auto",
                  lat_samples: int = LAT_SAMPLES,
-                 vmem_budget: int | None = None) -> vmem.VmemPlan:
+                 vmem_budget: int | None = None,
+                 hl: bool = False, rw: bool = False) -> vmem.VmemPlan:
     """Resolve representation/budget, clamp (tile, ev_chunk) exactly like
     ``run_events`` will, and record the resulting VMEM plan.
 
@@ -164,7 +175,7 @@ def plan_for_run(B, P, n_events, T, N, K, *, R: int = 0,
     # the budget (or raise actionably) instead of dying inside Mosaic
     plan = vmem.plan_vmem(tile=tile, ev_chunk=ev_chunk, T=T, N=N, K=K, P=P,
                           lat_samples=lat_samples, repr32=repr32, R=R,
-                          budget=vmem_budget)
+                          hl=hl, rw=rw, budget=vmem_budget)
     vmem.note_plan(plan)
     return plan
 
@@ -178,13 +189,16 @@ def _pallas_events(alg, T, N, K, n_events, wl, thread_node, lock_node, *,
     P = wl.edges.shape[1]
     R = wl.arr_fix.shape[-1]
     kpn = K // N
-    u1, r2, r3 = precompute_draws(wl.seed, wl.edges, wl.zcdf, n_events, N,
-                                  kpn)
+    is_hl = alg == "hlock"
+    is_rw = alg == "alock-rw"
+    streams = list(precompute_draws(wl.seed, wl.edges, wl.zcdf, n_events,
+                                    N, kpn, rw=is_rw))
 
     plan = plan_for_run(B, P, n_events, T, N, K, R=R, tile=tile,
                         ev_chunk=ev_chunk, interpret=interpret,
                         representation="i32pair" if repr32 else "i64",
-                        lat_samples=lat_samples, vmem_budget=vmem_budget)
+                        lat_samples=lat_samples, vmem_budget=vmem_budget,
+                        hl=is_hl, rw=is_rw)
     tile, ev_chunk = plan.tile, plan.ev_chunk
     pad_b = -B % tile
     pad_e = -n_events % ev_chunk
@@ -194,8 +208,8 @@ def _pallas_events(alg, T, N, K, n_events, wl, thread_node, lock_node, *,
         return jnp.pad(a, ((0, pad_b),) + ((0, 0),) * (a.ndim - 1),
                        mode="edge") if pad_b else a
 
-    u1, r2, r3 = (jnp.pad(prep(a), ((0, 0), (0, pad_e))) if pad_e
-                  else prep(a) for a in (u1, r2, r3))
+    streams = [jnp.pad(prep(a), ((0, 0), (0, pad_e))) if pad_e
+               else prep(a) for a in streams]
     # per-phase payloads ride flattened to 2D blocks (P*T / P*2 / P*8
     # lanes); the kernel reshapes them back — P is static via the shape
     locp = prep(wl.locality.reshape(B, P * T))
@@ -204,6 +218,11 @@ def _pallas_events(alg, T, N, K, n_events, wl, thread_node, lock_node, *,
     costp = prep(jnp.asarray(wl.cost_rows, I32).reshape(B, P * N_COST_ROWS))
     nmult = prep(jnp.asarray(wl.node_mult, jnp.float32).reshape(B, P * N))
     edges, think = (prep(a) for a in (wl.edges, wl.think_ns))
+    if is_rw:
+        readf = prep(jnp.asarray(wl.read_frac,
+                                 jnp.float32).reshape(B, P * T))
+    if is_hl:
+        rackp = prep(jnp.asarray(wl.rack, I32))
     if R:
         # open loop: the arrival plan is state-independent, so it is
         # precomputed here with the *same* shared repro.traffic.stream
@@ -262,26 +281,33 @@ def _pallas_events(alg, T, N, K, n_events, wl, thread_node, lock_node, *,
         pltpu.VMEM((tile, T), I32),   # prev
         pltpu.VMEM((tile, T), I32),   # target
         pltpu.VMEM((tile, T), I32),   # cohort
+        # alock-rw reader counts ride between the semantic and clock
+        # scratch (matching the kernel's unpack and vmem.buffer_table)
+        *([pltpu.VMEM((tile, K), I32)] if is_rw else []),
         *clock_scratch(T),            # ready
         *clock_scratch(N),            # busy
         *clock_scratch(T),            # op_start
     ]
-    in_specs = [
-        pl.BlockSpec((tile, ev_chunk), lambda i, j: (i, j)),
-        pl.BlockSpec((tile, ev_chunk), lambda i, j: (i, j)),
-        pl.BlockSpec((tile, ev_chunk), lambda i, j: (i, j)),
-        row(P), row(P), row(P * T), row(P * T),
-        row(P * 2), row(P * N_COST_ROWS), row(P * N),
-        pl.BlockSpec((1, T), lambda i, j: (0, 0)),
-        pl.BlockSpec((1, K), lambda i, j: (0, 0)),
-    ]
-    operands = [u1, r2, r3,
+    in_specs = (
+        [pl.BlockSpec((tile, ev_chunk), lambda i, j: (i, j))] * len(streams)
+        + [row(P), row(P), row(P * T)]
+        + ([row(P * T)] if is_rw else [])          # read_frac rows
+        + [row(P * T), row(P * 2), row(P * N_COST_ROWS), row(P * N),
+           pl.BlockSpec((1, T), lambda i, j: (0, 0)),
+           pl.BlockSpec((1, K), lambda i, j: (0, 0))]
+        + ([row(N)] if is_hl else []))             # rack row
+    operands = [*streams,
                 jnp.asarray(edges, I32), jnp.asarray(think, I32),
-                jnp.asarray(locp, jnp.float32), jnp.asarray(actp, I32),
-                jnp.asarray(binit, I32), jnp.asarray(costp, I32),
-                jnp.asarray(nmult, jnp.float32),
-                jnp.asarray(thread_node, I32)[None, :],
-                jnp.asarray(lock_node, I32)[None, :]]
+                jnp.asarray(locp, jnp.float32)]
+    if is_rw:
+        operands += [jnp.asarray(readf, jnp.float32)]
+    operands += [jnp.asarray(actp, I32),
+                 jnp.asarray(binit, I32), jnp.asarray(costp, I32),
+                 jnp.asarray(nmult, jnp.float32),
+                 jnp.asarray(thread_node, I32)[None, :],
+                 jnp.asarray(lock_node, I32)[None, :]]
+    if is_hl:
+        operands += [jnp.asarray(rackp, I32)]
     if R:
         in_specs += [row(R)] * (len(arr_in) + 3)
         operands += [*arr_in, tokp, tokcp, qcapp]

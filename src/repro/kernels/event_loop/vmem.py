@@ -60,8 +60,9 @@ _CLOCK = 8          # one i64 buffer, or an (hi, lo) i32 pair — same bytes
 PIPELINE_FACTOR = 2
 #: the table entries the pipeline factor applies to — `repro.analysis`'s
 #: vmem-consistency rule divides it back out when diffing the table
-#: against the traced kernel's buffer bindings
-STREAMED_INPUTS = ("in.u1", "in.r2", "in.r3")
+#: against the traced kernel's buffer bindings (in.u4 is the alock-rw
+#: reader/writer coin stream and only present when ``rw=True``)
+STREAMED_INPUTS = ("in.u1", "in.r2", "in.r3", "in.u4")
 
 
 def _entries(name, shape, itemsize, factor=1):
@@ -81,7 +82,8 @@ def _clock_entries(name, shape, repr32: bool):
 
 
 def buffer_table(tile: int, ev_chunk: int, T: int, N: int, K: int, P: int,
-                 lat_samples: int, repr32: bool, R: int = 0) -> dict:
+                 lat_samples: int, repr32: bool, R: int = 0,
+                 hl: bool = False, rw: bool = False) -> dict:
     """name -> (block shape, bytes) for every VMEM buffer of one grid step.
 
     Mirrors the ``in_specs`` / ``out_specs`` / ``scratch_shapes`` that
@@ -89,7 +91,11 @@ def buffer_table(tile: int, ev_chunk: int, T: int, N: int, K: int, P: int,
     two stay in sync. ``R > 0`` adds the open-loop request buffers (the
     arrival rows, the per-request wait/sojourn/status outputs and the
     dispatch scratch) in their exact binding positions; ``R == 0`` is the
-    closed loop and reproduces the pre-traffic table unchanged.
+    closed loop and reproduces the pre-traffic table unchanged. ``rw``
+    (alock-rw) adds the streamed reader/writer coin, the per-phase read
+    probabilities and the reader-count scratch; ``hl`` (hlock) adds the
+    per-node rack row — both in their exact binding positions, and both
+    inert for every other algorithm.
     """
     rows: list[tuple] = [
         # streamed draw inputs (STREAMED_INPUTS — double-buffered along
@@ -97,16 +103,20 @@ def buffer_table(tile: int, ev_chunk: int, T: int, N: int, K: int, P: int,
         _entries("in.u1", (tile, ev_chunk), _F32, PIPELINE_FACTOR),
         _entries("in.r2", (tile, ev_chunk), _I32, PIPELINE_FACTOR),
         _entries("in.r3", (tile, ev_chunk), _I32, PIPELINE_FACTOR),
+        *([_entries("in.u4", (tile, ev_chunk), _F32, PIPELINE_FACTOR)]
+          if rw else []),
         # per-phase workload rows (same block every chunk)
         _entries("in.edges", (tile, P), _I32),
         _entries("in.think", (tile, P), _I32),
         _entries("in.locality", (tile, P * T), _F32),
+        *([_entries("in.read_frac", (tile, P * T), _F32)] if rw else []),
         _entries("in.active", (tile, P * T), _I32),
         _entries("in.b_init", (tile, P * 2), _I32),
         _entries("in.cost_rows", (tile, P * N_COST_ROWS), _I32),
         _entries("in.node_mult", (tile, P * N), _F32),
         _entries("in.thread_node", (1, T), _I32),
         _entries("in.lock_node", (1, K), _I32),
+        *([_entries("in.rack", (tile, N), _I32)] if hl else []),
         # open-loop arrival rows (same block every chunk)
         *([*_clock_entries("in.arr", (tile, R), repr32),
            _entries("in.tok", (tile, R), _I32),
@@ -133,6 +143,8 @@ def buffer_table(tile: int, ev_chunk: int, T: int, N: int, K: int, P: int,
         _entries("scr.prev", (tile, T), _I32),
         _entries("scr.target", (tile, T), _I32),
         _entries("scr.cohort", (tile, T), _I32),
+        # alock-rw reader counts (between semantic and clock scratch)
+        *([_entries("scr.word", (tile, K), _I32)] if rw else []),
         # clock scratch
         *_clock_entries("scr.ready", (tile, T), repr32),
         *_clock_entries("scr.busy", (tile, N), repr32),
@@ -173,6 +185,7 @@ class VmemPlan:
 
 def plan_vmem(*, tile: int, ev_chunk: int, T: int, N: int, K: int, P: int,
               lat_samples: int, repr32: bool, R: int = 0,
+              hl: bool = False, rw: bool = False,
               budget: int | None = None) -> VmemPlan:
     """Compute the byte table; halve ``tile`` until ``budget`` fits.
 
@@ -191,7 +204,7 @@ def plan_vmem(*, tile: int, ev_chunk: int, T: int, N: int, K: int, P: int,
     t = tile
     while True:
         table = buffer_table(t, ev_chunk, T, N, K, P, lat_samples, repr32,
-                             R)
+                             R, hl, rw)
         total = sum(b for _, b in table.values())
         if budget is None or total <= budget or t == 1:
             break

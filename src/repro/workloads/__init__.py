@@ -29,17 +29,20 @@ from repro.core.cost_model import (COST_PROFILES, CostModel, CostProfile,
                                    resolve_cost)
 from repro.workloads.lower import (Lowered, N_COST_ROWS, WorkloadOperands,
                                    as_workload, from_simconfig, lower,
-                                   pad_phases, resolve_locality, zipf_cdf)
+                                   pad_phases, resolve_locality,
+                                   resolve_read_frac, zipf_cdf)
 from repro.workloads.spec import (ALGS, Arrivals, Mixed, NODE_MULT_PROFILES,
                                   Phase, THINK_CLASSES, Workload,
-                                  freeze_node_mult, mixed, node_mult_pairs,
+                                  freeze_node_mult, freeze_topology, mixed,
+                                  node_mult_pairs, racks_of,
                                   resolve_node_mult)
 
 __all__ = [
     "ALGS", "Arrivals", "COST_PROFILES", "CostModel", "CostProfile",
     "Lowered", "Mixed", "NODE_MULT_PROFILES", "N_COST_ROWS", "Phase",
     "THINK_CLASSES", "Workload", "WorkloadOperands", "as_workload",
-    "freeze_node_mult", "from_simconfig", "lower", "mixed",
-    "node_mult_pairs", "pad_phases", "resolve_cost", "resolve_locality",
-    "resolve_node_mult", "zipf_cdf",
+    "freeze_node_mult", "freeze_topology", "from_simconfig", "lower",
+    "mixed", "node_mult_pairs", "pad_phases", "racks_of", "resolve_cost",
+    "resolve_locality", "resolve_node_mult", "resolve_read_frac",
+    "zipf_cdf",
 ]

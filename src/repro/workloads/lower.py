@@ -20,6 +20,11 @@
   arr_qcap   (P,) i32   per-phase wait-queue bound (INT32_MAX = unbounded)
   arr_token  (P, 2) f32 per-phase token bucket (refill/ns, burst)
   arr_fix    (R,) i32   deterministic base inter-arrival gaps (trace replay)
+  rack       (N,) i32   per-node rack id (hlock cohort/cost tiers; the
+                        default ``arange(N)`` — every node its own rack —
+                        makes hlock degenerate to the flat ALock)
+  read_frac  (P, T) f32 per-phase per-thread P(request is a read) —
+                        branches the alock-rw dispatch only
   ========== ========== ===================================================
 
 Only ``(alg, T, N, K, n_events, R)`` — plus the phase-count P via the
@@ -94,6 +99,8 @@ class WorkloadOperands(NamedTuple):
     arr_qcap: Any    # (P,) i32
     arr_token: Any   # (P, 2) f32
     arr_fix: Any     # (R,) i32 — R == 0 means closed loop
+    rack: Any        # (N,) i32 — per-node rack id (no phase axis)
+    read_frac: Any   # (P, T) f32
 
     @property
     def n_phases(self) -> int:
@@ -169,6 +176,13 @@ def resolve_locality(loc, n_nodes: int, tpn: int) -> np.ndarray:
     return np.full(T, np.float32(loc))
 
 
+def resolve_read_frac(rf, n_threads: int) -> np.ndarray:
+    """Scalar | (T,) tuple -> the per-thread (T,) float32 read probability."""
+    if isinstance(rf, tuple):
+        return np.asarray(rf, np.float32)
+    return np.full(n_threads, np.float32(rf))
+
+
 def lower(w: Workload, n_events: int,
           cm: CostModel = CostModel()) -> Lowered:
     """Bind a spec to a run length and emit its traced operand struct.
@@ -203,6 +217,11 @@ def lower(w: Workload, n_events: int,
     arr_edges = np.zeros(P, np.int32)
     arr_qcap = np.full(P, _I32_MAX, np.int32)
     arr_token = np.zeros((P, 2), np.float32)
+    read_frac = np.empty((P, T), np.float32)
+    # trivial default (every node its own rack): same-rack == same-node,
+    # under which hlock is bitwise the flat ALock
+    rack = (np.arange(N, dtype=np.int32) if w.topology is None
+            else np.asarray(w.topology, np.int32))
     cum = 0.0
     for p, ph in enumerate(phases):
         edges[p] = int(round(cum * n_events))
@@ -232,6 +251,8 @@ def lower(w: Workload, n_events: int,
         think_ns[p] = int(round(mult * cm_p.think_ns))
         node_mult[p] = resolve_node_mult(
             w.node_mult if ph.node_mult is None else ph.node_mult, N)
+        read_frac[p] = resolve_read_frac(
+            w.read_frac if ph.read_frac is None else ph.read_frac, T)
         for node in ph.down_nodes:
             active[p, node * tpn:(node + 1) * tpn] = 0
     edges[0] = 0
@@ -269,6 +290,7 @@ def lower(w: Workload, n_events: int,
         arr_qcap = np.repeat(arr_qcap, 2, axis=0)
         arr_token = np.repeat(arr_token, 2, axis=0)
         arr_edges = np.asarray([0, R // 2], np.int32)
+        read_frac = np.repeat(read_frac, 2, axis=0)
     if P > 1 and np.any(np.diff(edges) <= 0):
         # a zero-event phase would silently vanish AND misdirect the
         # rejoin bump at its boundary (was_act would read the dropped
@@ -283,7 +305,8 @@ def lower(w: Workload, n_events: int,
         active=active, b_init=b_init, seed=np.int32(w.seed),
         cost_rows=cost_rows, node_mult=node_mult,
         arr_gap_ns=arr_gap_ns, arr_edges=arr_edges, arr_qcap=arr_qcap,
-        arr_token=arr_token, arr_fix=arr_fix)
+        arr_token=arr_token, arr_fix=arr_fix, rack=rack,
+        read_frac=read_frac)
     return Lowered(w.alg, N, tpn, K, int(n_events), ops)
 
 
@@ -321,7 +344,9 @@ def pad_phases(ops: WorkloadOperands, n_phases: int) -> WorkloadOperands:
         arr_gap_ns=rep(ops.arr_gap_ns),
         arr_edges=np.concatenate([ops.arr_edges,
                                   np.full(extra, _I32_MAX, np.int32)]),
-        arr_qcap=rep(ops.arr_qcap), arr_token=rep(ops.arr_token))
+        arr_qcap=rep(ops.arr_qcap), arr_token=rep(ops.arr_token),
+        # rack has no phase axis — pad-inert by construction
+        read_frac=rep(ops.read_frac))
 
 
 def from_simconfig(cfg) -> Workload:

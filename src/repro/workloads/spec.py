@@ -62,7 +62,7 @@ from dataclasses import dataclass
 
 from repro.core.cost_model import freeze_cost
 
-ALGS = ("alock", "spinlock", "mcs")
+ALGS = ("alock", "spinlock", "mcs", "hlock", "alock-rw")
 
 # Named think-time classes: multipliers of CostModel.think_ns. "default"
 # is exactly the cost model's value (1.0), which the SimConfig adapter
@@ -110,6 +110,54 @@ def _freeze_locality(loc):
     if isinstance(loc, (tuple, list)):
         return tuple(_check_prob(v, "locality[t]") for v in loc)
     return _check_prob(loc, "locality")
+
+
+def _freeze_read_frac(rf, what: str = "read_frac"):
+    """Scalar | (T,) sequence | None -> hashable canonical form. The
+    probability a request is a *read* — only the reader-writer machine
+    (``alock-rw``) branches on it; write-only machines ignore it, so a
+    leaderboard can hand every algorithm the same spec."""
+    if rf is None:
+        return None
+    if isinstance(rf, (tuple, list)):
+        return tuple(_check_prob(v, f"{what}[t]") for v in rf)
+    return _check_prob(rf, what)
+
+
+def freeze_topology(topo):
+    """Validate + canonicalize a ``topology`` value (per-node rack ids).
+
+    ``None`` means the trivial topology — every node its own rack — under
+    which ``hlock`` degenerates to the flat two-cohort ALock (same-node =
+    same-rack). A sequence gives one rack id per node; ids only need to
+    be ``>= 0`` (equality is all the cohort test uses).
+    """
+    if topo is None:
+        return None
+    t = tuple(int(r) for r in topo)
+    bad = [r for r in t if r < 0]
+    if bad:
+        raise ValueError(f"topology rack ids must be >= 0, got {bad}")
+    return t
+
+
+def racks_of(n_nodes: int, n_racks: int) -> tuple:
+    """Evenly partition ``n_nodes`` into ``n_racks`` contiguous racks —
+    the common cookbook shape for :attr:`Workload.topology`.
+
+    >>> racks_of(8, 2)
+    (0, 0, 0, 0, 1, 1, 1, 1)
+    >>> racks_of(6, 4)
+    (0, 0, 1, 1, 2, 3)
+    """
+    n_nodes, n_racks = int(n_nodes), int(n_racks)
+    if not 1 <= n_racks <= n_nodes:
+        raise ValueError(f"n_racks must be in [1, {n_nodes}], got {n_racks}")
+    per, extra = divmod(n_nodes, n_racks)
+    out = []
+    for r in range(n_racks):
+        out += [r] * (per + (1 if r < extra else 0))
+    return tuple(out)
 
 
 # Named fail-slow degradation profiles: {node: multiplier} patterns a
@@ -282,12 +330,17 @@ class Phase:
     #                                  {node: mult} mapping | None (inherit)
     rate_per_us: float | None = None  # open-loop arrival rate override
     #                                   (needs Workload.arrivals) | inherit
+    read_frac: object = None         # scalar | (T,) tuple | None (inherit)
+    #                                  P(request is a read) — alock-rw only
 
     def __post_init__(self):
         f = float(self.frac)
         if not math.isfinite(f) or f <= 0.0 or f > 1.0:
             raise ValueError(f"Phase.frac must be in (0, 1], got {self.frac}")
         object.__setattr__(self, "frac", f)
+        object.__setattr__(self, "read_frac",
+                           _freeze_read_frac(self.read_frac,
+                                             "Phase.read_frac"))
         if self.rate_per_us is not None:
             r = float(self.rate_per_us)
             if not math.isfinite(r) or r < 0.0:
@@ -332,6 +385,13 @@ class Workload:
     #                                  {node: mult} mapping | None (uniform)
     arrivals: Arrivals | None = None  # open-loop request stream | None
     #                                   (closed loop — threads re-acquire)
+    topology: tuple | None = None    # per-node rack ids (n_nodes,) | None
+    #                                  (trivial: every node its own rack).
+    #                                  Drives hlock's cohort test + cost
+    #                                  tiers; inert for the flat machines.
+    read_frac: object = 0.0          # scalar | (T,) tuple — P(read);
+    #                                  branches alock-rw only, inert
+    #                                  elsewhere (leaderboards share specs)
 
     def __post_init__(self):
         if self.alg not in ALGS:
@@ -353,6 +413,15 @@ class Workload:
         object.__setattr__(self, "node_mult",
                            freeze_node_mult(self.node_mult))
         object.__setattr__(self, "seed", int(self.seed))
+        topo = freeze_topology(self.topology)
+        if topo is not None and len(topo) != self.n_nodes:
+            raise ValueError(f"topology needs one rack id per node "
+                             f"({self.n_nodes}), got {len(topo)}")
+        object.__setattr__(self, "topology", topo)
+        rf = _freeze_read_frac(self.read_frac)
+        if rf is None:
+            rf = 0.0
+        object.__setattr__(self, "read_frac", rf)
         phases = tuple(self.phases)
         if phases:
             if not all(isinstance(p, Phase) for p in phases):
@@ -381,6 +450,17 @@ class Workload:
                 raise ValueError(
                     f"phase per-thread locality needs {self.n_threads} "
                     f"entries, got {len(p.locality)}")
+        if isinstance(self.read_frac, tuple) and \
+                len(self.read_frac) != self.n_threads:
+            raise ValueError(
+                f"per-thread read_frac needs {self.n_threads} entries, "
+                f"got {len(self.read_frac)}")
+        for p in phases:
+            if isinstance(p.read_frac, tuple) and \
+                    len(p.read_frac) != self.n_threads:
+                raise ValueError(
+                    f"phase per-thread read_frac needs {self.n_threads} "
+                    f"entries, got {len(p.read_frac)}")
         # node_mult node ids are validated here (not in Phase) because
         # only the workload knows the topology — same split as down_nodes
         for what, nm in [("node_mult", self.node_mult)] + \

@@ -12,8 +12,11 @@ Four gates, mirroring the CI lint leg:
   4. the pairs-path jaxpr matches its golden primitive-set snapshot
      (regenerate with ``REPRO_UPDATE_GOLDENS=1``).
 
-Tracing is scoped to one scenario (node-churn) to keep runtime modest;
-the full catalog runs in CI's lint leg via ``--strict``.
+Tracing is scoped to three scenarios — node-churn (the classic closed
+loop) plus read-heavy and rack-locality (the alock-rw / hlock buckets
+with their gated read-probability, coin-stream and rack operands) — to
+keep runtime modest; the full catalog runs in CI's lint leg via
+``--strict``.
 """
 import os
 import subprocess
@@ -44,7 +47,9 @@ _EPS = None
 def _eps():
     global _EPS
     if _EPS is None:
-        _EPS = trace_entrypoints(scenarios=["node-churn"], n_events=512)
+        _EPS = trace_entrypoints(
+            scenarios=["node-churn", "read-heavy", "rack-locality"],
+            n_events=512)
     return _EPS
 
 
@@ -62,14 +67,17 @@ def test_clean_entrypoints_zero_findings():
 
 
 def test_pairs_trace_has_no_wide_avals():
-    """Belt-and-braces on X001's premise: the x64-off pairs trace really
-    contains zero 64-bit avals, checked directly against the walker."""
+    """Belt-and-braces on X001's premise: the x64-off pairs traces really
+    contain zero 64-bit avals — across every bucket, so the hlock rack
+    operand and the alock-rw read-coin stream are covered too."""
     from repro.analysis import all_avals
     from repro.analysis.rules import _wide
-    ep = next(e for e in _eps() if e.kind == "pallas-pairs")
-    wide = [(str(a), w) for a, w in all_avals(ep.jaxpr)
-            if _wide(getattr(a, "dtype", None))]
-    assert wide == [], wide[:10]
+    eps = [e for e in _eps() if e.kind == "pallas-pairs"]
+    assert eps
+    for ep in eps:
+        wide = [(str(a), w) for a, w in all_avals(ep.jaxpr)
+                if _wide(getattr(a, "dtype", None))]
+        assert wide == [], (ep.name, wide[:10])
 
 
 # ---------------------------------------------------------------- gate 2
@@ -84,6 +92,16 @@ def test_corpus_fires_all_families():
     fired = {f.rule for fs in per_family.values() for f in fs}
     assert len(fired) >= 4, fired
     assert {RULES[r].family for r in fired} == set(per_family), fired
+
+
+def test_rack_offender_fires_m001():
+    """The topology counterfactual: an int64 rack index inside the tier
+    compare must trip the Mosaic-lowerability family (a widened rack
+    operand can never reach the shipped kernel unnoticed)."""
+    from repro.analysis.fixtures import rack_offender
+    fs = run_rules([rack_offender()], rules=["M001"])
+    assert fs, "M001 went blind on the 64-bit rack-index fixture"
+    assert all(f.rule == "M001" for f in fs), fs
 
 
 def test_every_finding_is_stamped():
@@ -137,7 +155,10 @@ def _cli(*args, timeout=560):
 
 
 def test_cli_strict_is_clean_on_this_repo():
-    r = _cli("--strict", "--scenarios", "node-churn", "--events", "512")
+    # read-heavy / rack-locality put the alock-rw and hlock buckets (rack
+    # operand, read-coin stream) under the same strict gate
+    r = _cli("--strict", "--scenarios",
+             "node-churn,read-heavy,rack-locality", "--events", "512")
     assert r.returncode == 0, r.stdout + r.stderr
     assert "lint-clean." in r.stdout, r.stdout
 
@@ -197,8 +218,13 @@ def test_cli_unknown_rule_id_exits_2():
 # ---------------------------------------------------------------- gate 4
 
 def _pairs_primitives():
-    ep = next(e for e in _eps() if e.kind == "pallas-pairs")
-    return sorted({s.eqn.primitive.name for s in walk_jaxpr(ep.jaxpr)})
+    # union over every pairs bucket: alock/spinlock/mcs plus the hlock and
+    # alock-rw op classes all contribute to the pinned set
+    prims = set()
+    for ep in _eps():
+        if ep.kind == "pallas-pairs":
+            prims |= {s.eqn.primitive.name for s in walk_jaxpr(ep.jaxpr)}
+    return sorted(prims)
 
 
 def test_pairs_golden_primitive_set():

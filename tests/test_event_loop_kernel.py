@@ -79,7 +79,9 @@ def test_kernel_ragged_tile_and_chunk_bitwise():
         arr_edges=jnp.zeros((B, P), jnp.int32),
         arr_qcap=jnp.full((B, P), np.iinfo(np.int32).max, jnp.int32),
         arr_token=jnp.zeros((B, P, 2), jnp.float32),
-        arr_fix=jnp.zeros((B, 0), jnp.int32))
+        arr_fix=jnp.zeros((B, 0), jnp.int32),
+        rack=jnp.tile(jnp.arange(N, dtype=jnp.int32), (B, 1)),
+        read_frac=jnp.zeros((B, P, T), jnp.float32))
     with enable_x64():
         ref = run_events_ref(alg, T, N, K, ev, wl, tn, ln)
         out = run_events(alg, T, N, K, ev, wl, tn, ln,

@@ -6,14 +6,16 @@ x64-off CI leg executes this file with ``JAX_ENABLE_X64=0`` to emulate the
 TPU i32-vector constraint) and asserts bitwise equality with the XLA
 engine:
 
-  * an alg x phased x zipf x churn operand matrix with mid-chunk phase
-    boundaries;
+  * an alg x phased x zipf x churn operand matrix covering **all five
+    algorithms** (alock, spinlock, mcs, the hierarchical hlock with a
+    non-trivial rack topology, and the reader-writer alock-rw with
+    non-uniform read mixes) with mid-chunk phase boundaries;
   * **every simulator scenario in the registry** (uniform-grid,
     hot-key-storm, mixed-locality, node-churn, paper-fig5, congested-nic,
-    budget-ramp, limping-node, fail-slow-cascade, plus the open-loop
-    open-loop-ramp and burst-storm, whose buckets carry R request slots
-    and four extra per-request outputs) via
-    ``repro.experiments.scenario_workloads``;
+    budget-ramp, limping-node, fail-slow-cascade, read-heavy,
+    rack-locality, plus the open-loop open-loop-ramp and burst-storm,
+    whose buckets carry R request slots and four extra per-request
+    outputs) via ``repro.experiments.scenario_workloads``;
   * latency-ring overflow (``latn`` wrapping past ``lat_samples``) across
     all three engines: XLA, i64-pallas, i32-pair-pallas.
 
@@ -85,12 +87,16 @@ def _stack_operands(workloads, n_events, **lower_kw):
     return lowered[0], WorkloadOperands(*(jnp.asarray(a) for a in leaves))
 
 
-@pytest.mark.parametrize("alg", ["alock", "spinlock", "mcs"])
+@pytest.mark.parametrize("alg", ["alock", "spinlock", "mcs", "hlock",
+                                 "alock-rw"])
 def test_native_repr_bitwise_phased_zipf_churn(alg):
-    """The tentpole contract on handcrafted operands: per-thread locality,
-    per-phase Zipf CDFs + cost rows + budgets, a downed node, and phase
-    edges that land mid event-chunk — i32-pair kernel (x64 off) vs the
-    int64 XLA loop, bitwise."""
+    """The tentpole contract on handcrafted operands, for all five
+    algorithms: per-thread locality, per-phase Zipf CDFs + cost rows +
+    budgets, a downed node, and phase edges that land mid event-chunk —
+    i32-pair kernel (x64 off) vs the int64 XLA loop, bitwise. hlock gets
+    a non-trivial two-rack topology and alock-rw a *non-uniform*
+    per-phase per-thread read_frac, so the new operands flip across the
+    mid-chunk phase boundary too."""
     N, tpn, K = 3, 4, 6
     T, B, P = N * tpn, 5, 2
     tn, ln, costs = topology(alg, N, tpn, K)
@@ -106,6 +112,19 @@ def test_native_repr_bitwise_phased_zipf_churn(alg):
     # degradation operand flips across the mid-chunk phase edge too
     nm = np.ones((B, P, N), np.float32)
     nm[:, 0, 1] = 3.0
+    # hlock: nodes 0+1 share a rack, node 2 is alone (non-trivial tiers);
+    # others get the trivial every-node-its-own-rack topology
+    rack = (np.int32([0, 0, 1]) if alg == "hlock"
+            else np.arange(N, dtype=np.int32))
+    # alock-rw: read-light first phase, read-heavy second, jittered per
+    # thread; inert zeros for every other algorithm
+    if alg == "alock-rw":
+        rf = np.concatenate([rng.uniform(0.1, 0.3, (1, T)),
+                             rng.uniform(0.8, 1.0, (1, T))]
+                            ).astype(np.float32)
+        rf = np.tile(rf, (B, 1, 1))
+    else:
+        rf = np.zeros((B, P, T), np.float32)
     wl = WorkloadOperands(
         locality=jnp.asarray(loc), zcdf=jnp.asarray(np.float32(zc)),
         edges=jnp.asarray(np.tile(np.int32([0, 600]), (B, 1))),
@@ -119,7 +138,9 @@ def test_native_repr_bitwise_phased_zipf_churn(alg):
         arr_edges=jnp.zeros((B, P), jnp.int32),
         arr_qcap=jnp.full((B, P), np.iinfo(np.int32).max, jnp.int32),
         arr_token=jnp.zeros((B, P, 2), jnp.float32),
-        arr_fix=jnp.zeros((B, 0), jnp.int32))
+        arr_fix=jnp.zeros((B, 0), jnp.int32),
+        rack=jnp.asarray(np.tile(rack, (B, 1))),
+        read_frac=jnp.asarray(rf))
     with enable_x64():
         ref = [np.asarray(r) for r in
                run_events_ref(alg, T, N, K, EV, wl, tn, ln)]
@@ -160,6 +181,47 @@ def test_node_mult_phase_edge_mid_chunk_bitwise():
     assert ref[3][0] > ref_h[3][0]      # t_end grows under the limp
 
 
+def test_read_frac_phase_edge_mid_chunk_bitwise():
+    """Reader-writer satellite: an alock-rw phase program whose read mix
+    flips from a scalar read-light phase to a *per-thread* read-heavy
+    tuple, with the edge landing mid event-chunk (605 % 256 != 0) —
+    i32-pair kernel (x64 off) vs the int64 XLA loop, bitwise, through the
+    full spec -> lower -> pad path."""
+    T = 12
+    heavy = tuple(0.7 + 0.02 * t for t in range(T))   # non-uniform row
+    w = Workload("alock-rw", n_nodes=4, threads_per_node=3, n_locks=8,
+                 locality=0.8, seed=9,
+                 phases=(Phase(frac=0.55, read_frac=0.15),
+                         Phase(frac=0.45, read_frac=heavy)))
+    lw = lower(w, EV)
+    alg, T, N, K, _, _ = lw.shape_key
+    tn, ln, _ = topology(alg, N, T // N, K)
+    wl = WorkloadOperands(*(jnp.asarray(a)[None] for a in lw.operands))
+    # the lowered operand really is non-uniform across the phase edge
+    rf = np.asarray(lw.operands.read_frac)
+    assert rf.shape == (2, T)
+    assert np.all(rf[0] == np.float32(0.15)) and len(set(rf[1])) == T
+    with enable_x64():
+        ref = [np.asarray(r) for r in
+               run_events_ref(alg, T, N, K, EV, wl, tn, ln)]
+    out = run_events_pairs(alg, T, N, K, EV, wl, tn, ln,
+                           tile=1, ev_chunk=256, interpret=True)
+    _assert_bitwise(ref, _pack_outputs(out))
+    # the mix is observable: a near-read-only clone of the same spec
+    # completes ops at a higher simulated rate than a writer-only clone
+    # (readers share the CS; sanity, not bitwise)
+    rates = {}
+    for tag, mix in (("rd", 0.99), ("wr", 0.0)):
+        lc = lower(w.replace(phases=(Phase(frac=0.55, read_frac=mix),
+                                     Phase(frac=0.45, read_frac=mix))), EV)
+        wl_c = WorkloadOperands(*(jnp.asarray(a)[None] for a in lc.operands))
+        with enable_x64():
+            ref_c = [np.asarray(r) for r in
+                     run_events_ref(alg, T, N, K, EV, wl_c, tn, ln)]
+        rates[tag] = ref_c[0].sum() / float(ref_c[3][0])
+    assert rates["rd"] > rates["wr"]
+
+
 def test_registry_scenarios_bitwise_i32pair():
     """Acceptance gate: every simulator scenario in the registry is
     bitwise-identical through the i32-pair kernel. Workloads are grouped
@@ -177,9 +239,19 @@ def test_registry_scenarios_bitwise_i32pair():
     assert set(sim_scenarios) == {
         "uniform-grid", "hot-key-storm", "mixed-locality", "node-churn",
         "paper-fig5", "congested-nic", "budget-ramp", "limping-node",
-        "fail-slow-cascade", "open-loop-ramp", "burst-storm"}
+        "fail-slow-cascade", "open-loop-ramp", "burst-storm",
+        "read-heavy", "rack-locality"}
     assert any(w.arrivals is not None
                for ws in sim_scenarios.values() for w in ws)
+    # the registry really sweeps all five algorithms, including the
+    # hierarchical lock (non-trivial topology) and the reader-writer
+    # variant (non-zero read mixes)
+    algs = {w.alg for ws in sim_scenarios.values() for w in ws}
+    assert algs == {"alock", "spinlock", "mcs", "hlock", "alock-rw"}
+    assert any(w.topology is not None
+               for w in sim_scenarios["rack-locality"])
+    assert any(w.alg == "alock-rw" and float(np.max(w.read_frac)) > 0
+               for w in sim_scenarios["read-heavy"])
 
     buckets: dict[tuple, list] = {}
     for name, ws in sim_scenarios.items():
