@@ -1,25 +1,45 @@
 """Lock-primitive microbenchmarks: operation counts + kernel wall time.
 
-Uncontended op counts per Lock()+Unlock() (measured on the machine, not
-assumed): ALock-local = 0 RDMA ops; ALock-remote = 4 RDMA (swap, victim,
-read, release-CAS); competitors pay RDMA/loopback on every access.
+Uncontended op counts per Lock()+Unlock() for **every** registered state
+machine (measured by stepping ``repro.core.machine``, not assumed).
+Table 1's headline — ALock-local issues **0 RDMA ops** — is a *checked*
+output: the process exits non-zero if the local path ever issues a
+remote op, so a machine regression fails ``benchmarks.run`` instead of
+silently changing a printed number. ``hlock`` shares ALock's machine
+(the caller derives the cohort from the rack topology) and is checked
+to the same local-path claim; ``alock-rw`` is counted on both the
+writer path (full ALock protocol + reader drain) and the reader path
+(queue bypass).
+
+Kernel wall time: one small bucket through the event-loop Pallas kernel
+(interpret mode — the CPU CI stand-in) vs the vmapped XLA oracle via
+``batch.sweep``. These are wall-us rows for eyeballing, not trajectory
+gates — ``benchmarks/perfcheck.py`` owns the gated trajectory.
 """
+import sys
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import EVENTS, emit
 from repro.core import machine as mc
 
+#: checked op-count claims: row name -> exact expected remote-op count.
+#: ALock/hlock local-cohort acquire+release must be RDMA-free (Table 1).
+CHECKED = {"alock.local": 0, "hlock.local": 0,
+           "alock-rw.writer.local": 0, "alock-rw.reader.local": 0}
 
-def count_ops(alg, cohort):
+
+def count_ops(alg, cohort, is_read=False):
+    """(remote, local) op counts for one uncontended Lock()+Unlock()."""
     st = mc.initial_state(1)
-    remote = local = 0
-    guard = 0
+    step = mc.MACHINES[alg]
+    remote = local = guard = 0
     while True:
-        st, op = mc.MACHINES[alg](st, 0, cohort, (5, 20))
+        if alg == "alock-rw":
+            st, op = step(st, 0, cohort, (5, 20), is_read=is_read)
+        else:
+            st, op = step(st, 0, cohort, (5, 20))
         if op.kind == "remote":
             remote += 1
         elif op.kind == "local":
@@ -39,50 +59,55 @@ def bench_wall(f, *args, iters=5):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+#: (alg, cohort, is_read, row name) — every machine in mc.MACHINES
+OPCOUNT_ROWS = (
+    ("alock", 0, False, "alock.local"),
+    ("alock", 1, False, "alock.remote"),
+    ("hlock", 0, False, "hlock.local"),
+    ("hlock", 1, False, "hlock.remote"),
+    ("alock-rw", 0, False, "alock-rw.writer.local"),
+    ("alock-rw", 1, False, "alock-rw.writer.remote"),
+    ("alock-rw", 0, True, "alock-rw.reader.local"),
+    ("alock-rw", 1, True, "alock-rw.reader.remote"),
+    ("mcs", 1, False, "mcs"),
+    ("spinlock", 1, False, "spinlock"),
+)
+
+
 def main() -> None:
-    for alg, cohort, name in (("alock", 0, "alock.local"),
-                              ("alock", 1, "alock.remote"),
-                              ("mcs", 1, "mcs"),
-                              ("spinlock", 1, "spinlock")):
-        r, l = count_ops(alg, cohort)
-        emit(f"micro.opcount.{name}", 0.0, f"remote_ops={r},local_ops={l}")
+    failed = []
+    for alg, cohort, is_read, name in OPCOUNT_ROWS:
+        r, l = count_ops(alg, cohort, is_read=is_read)
+        verdict = ""
+        if name in CHECKED:
+            ok = r == CHECKED[name]
+            verdict = f",checked={'ok' if ok else 'FAIL'}"
+            if not ok:
+                failed.append(f"{name}: expected {CHECKED[name]} remote "
+                              f"ops, measured {r}")
+        emit(f"micro.opcount.{name}", 0.0,
+             f"remote_ops={r},local_ops={l}{verdict}")
 
-    # jnp flash (model path) vs naive attention wall time on CPU
-    from repro.models.layers import _mask, _sdpa_h, blockwise_sdpa
-    B, S, K, R, hd = 1, 1024, 4, 1, 64
-    key = jax.random.key(0)
-    q = jax.random.normal(jax.random.fold_in(key, 1), (B, S, K, R, hd))
-    k = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, hd))
-    v = jax.random.normal(jax.random.fold_in(key, 3), (B, S, K, hd))
-    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    # event-loop kernel vs the XLA oracle on one small bucket (wall time;
+    # interpret mode is the CPU stand-in for the Pallas path)
+    from repro.core import batch
+    from repro.workloads import Workload
+    ev = min(EVENTS, 20_000)
+    cfgs = [Workload("alock", 2, 2, 8, locality=0.95)]
+    walls = {}
+    for backend in ("xla", "pallas"):
+        walls[backend] = bench_wall(
+            lambda b=backend: batch.sweep(cfgs, n_seeds=1, n_events=ev,
+                                          backend=b), iters=2)
+        emit(f"micro.kernel.{backend}.ev{ev}", walls[backend],
+             f"{ev / walls[backend]:.2f}Mev/s")
+    emit("micro.kernel.pallas_over_xla", 0.0,
+         f"{walls['xla'] / max(walls['pallas'], 1e-9):.2f}x")
 
-    f1 = jax.jit(lambda q, k, v: blockwise_sdpa(
-        q, k, v, pos, causal=True, window=None, kv_chunk=256))
-    us1 = bench_wall(f1, q, k, v)
-    emit("micro.attn.flash_jnp.s1024", us1, "blockwise")
-
-    def naive(q, k, v):
-        m = _mask(pos, jnp.arange(S), causal=True, window=None)
-        return _sdpa_h(q.reshape(B, S, K * R, hd), jnp.repeat(k, R, 2),
-                       jnp.repeat(v, R, 2), m)
-    us2 = bench_wall(jax.jit(naive), q, k, v)
-    emit("micro.attn.naive.s1024", us2, f"flash_speedup={us2/us1:.2f}x")
-
-    # batched lock-table transition throughput (jnp twin of the kernel)
-    from repro.kernels.alock_tick.ref import alock_tick_ref
-    Tab, T, steps = 512, 4, 256
-    rng = np.random.default_rng(0)
-    sched = jnp.asarray(rng.integers(0, T, (Tab, steps)), jnp.int32)
-    coh = jnp.asarray([0, 0, 1, 1], jnp.int32)
-    z = lambda: jnp.zeros((Tab, T), jnp.int32)
-    args = (jnp.zeros((Tab, 2), jnp.int32), jnp.zeros((Tab,), jnp.int32),
-            jnp.full((Tab, T), mc.NCS, jnp.int32),
-            jnp.full((Tab, T), -1, jnp.int32), z(), z())
-    f3 = jax.jit(lambda *a: alock_tick_ref(*a, sched, coh,
-                                           jnp.asarray((5, 20), jnp.int32)))
-    us3 = bench_wall(f3, *args, iters=3)
-    emit("micro.alock_tick.tables512.steps256", us3,
-         f"{Tab*steps/us3:.1f}Msteps_per_s")
+    if failed:
+        for msg in failed:
+            print(f"# microbench CHECK FAILED: {msg}", flush=True)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

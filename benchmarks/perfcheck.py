@@ -31,7 +31,18 @@ Measured quantities:
     via ``exec_stats()["vmem_plan"]``) for the pallas backend — replica
     tile chosen vs requested, total VMEM bytes, clock representation — so
     every PR records whether the kernel still fits the budget and whether
-    the planner had to shrink the tile.
+    the planner had to shrink the tile;
+  * a roofline row (``benchmarks.roofline``): the events/sec-per-byte
+    ceiling from the VMEM byte table and a *measured* host copy
+    bandwidth, plus the fraction of that roof the fastest backend
+    achieved — a tracked trajectory row, so an efficiency regression
+    trips the ``--baseline`` gate even if absolute ev/s drifts with the
+    runner.
+
+The sharded leg also records ``ratio_vs_unsharded`` (sharded ev/s over
+the unsharded XLA leg); ``--min-sharded-ratio`` turns that into a hard
+gate — superchunk dispatch coalescing keeps the chunked layout near the
+one-dispatch layout on CPU, and CI fails if it slides back.
 
 ``--baseline FILE`` compares the fresh report against a previous run's
 JSON (CI downloads the last ``BENCH_events_per_sec.json`` artifact and
@@ -53,6 +64,7 @@ import time
 
 import numpy as np
 
+from benchmarks import roofline
 from benchmarks.common import EVENTS
 from repro.core import batch
 from repro.experiments import fig5_workloads
@@ -128,6 +140,10 @@ def _tracked_rates(report: dict) -> dict:
         rates[f"backends.{b}"] = row.get("events_per_sec", 0.0)
     if "sharding" in report:
         rates["sharding"] = report["sharding"].get("events_per_sec", 0.0)
+    if "roofline" in report:
+        # achieved fraction of the memory roof: dimensionless, but the
+        # same bigger-is-better ratio gate applies
+        rates["roofline"] = report["roofline"].get("achieved_fraction", 0.0)
     if "open_loop" in report:
         rates["open_loop"] = report["open_loop"].get("events_per_sec", 0.0)
     if "leaderboard" in report:
@@ -165,7 +181,8 @@ def _check_baseline(report: dict, path: str, tolerance: float) -> bool:
         ratio = fresh / ref
         verdict = "ok" if ratio >= 1.0 - tolerance else "REGRESSION"
         ok = ok and verdict == "ok"
-        unit = "Mops" if name.startswith("leaderboard.") else "ev/s"
+        unit = ("Mops" if name.startswith("leaderboard.")
+                else "of-roof" if name == "roofline" else "ev/s")
         print(f"# baseline {name}: {fresh:,.1f} vs {ref:,.1f} {unit} "
               f"({ratio:.3f}x) {verdict}", flush=True)
     if not ok:
@@ -192,6 +209,10 @@ def main() -> None:
                     metavar="FRAC",
                     help="allowed fractional events/sec drop vs the "
                          "baseline (default 0.10)")
+    ap.add_argument("--min-sharded-ratio", type=float, default=0.0,
+                    metavar="FRAC",
+                    help="fail if sharded ev/s falls below FRAC x the "
+                         "unsharded XLA leg (default 0.0 = report only)")
     args = ap.parse_args()
     if args.baseline and not 0.0 < args.regression_tolerance < 1.0:
         ap.error(f"--regression-tolerance must be in (0, 1), got "
@@ -256,9 +277,17 @@ def main() -> None:
         "unsharded_dispatches_per_bucket": 1,
         "bitwise_equal_to_unsharded": bool(eq),
     }
+    ratio_vs_unsharded = None
+    if "xla" in report["backends"]:
+        ratio_vs_unsharded = report["sharding"]["events_per_sec"] / max(
+            report["backends"]["xla"]["events_per_sec"], 1e-9)
+        report["sharding"]["ratio_vs_unsharded"] = round(
+            ratio_vs_unsharded, 3)
     print(f"perfcheck.sharded.chunk{chunk},{wall_c*1e6/len(cfgs):.1f},"
           f"dispatches={st_c['dispatches']},compiles={st_c['compiles']},"
-          f"bitwise_ok={eq}", flush=True)
+          f"bitwise_ok={eq},ratio="
+          + (f"{ratio_vs_unsharded:.3f}" if ratio_vs_unsharded is not None
+             else "n/a"), flush=True)
 
     # open-loop leg: the arrival-ingestion code path is a different kernel
     # trace (R > 0 adds the request lanes), so its events/sec is tracked
@@ -313,6 +342,35 @@ def main() -> None:
               f"{br.mean_mops:.3f}Mops,p99={br.p99_lat_ns:.0f}ns",
               flush=True)
 
+    # roofline leg: the events/sec-per-byte ceiling for the fig5 kernel
+    # shape (byte table x measured copy bandwidth) and the fraction of it
+    # the fastest backend achieved — the fraction is its own tracked
+    # trajectory row, robust to absolute runner-speed drift
+    alg0, T0, N0, K0, _, R0 = batch.shape_key(cfgs[0], args.events)
+    vp = (report["backends"].get("pallas") or {}).get("vmem_plan") or {}
+    mkw = dict(T=T0, N=N0, K=K0, R=R0, hl=alg0 == "hlock",
+               rw=alg0 == "alock-rw")
+    if vp:
+        mkw.update(tile=vp["tile"], ev_chunk=vp["ev_chunk"],
+                   lat_samples=vp["lat_samples"],
+                   repr32=vp["representation"] == "i32pair")
+    m = roofline.model(**mkw)
+    bw = roofline.measure_bandwidth()
+    roof = roofline.roof_events_per_sec(bw, m)
+    best = max((row["events_per_sec"]
+                for row in report["backends"].values()), default=0.0)
+    report["roofline"] = {
+        "bandwidth_bytes_per_s": round(bw, 1),
+        "bytes_per_event": m["bytes_per_event"],
+        "roof_events_per_sec": round(roof, 1),
+        "best_backend_events_per_sec": best,
+        "achieved_fraction": round(best / max(roof, 1e-9), 5),
+    }
+    print(f"perfcheck.roofline,{m['bytes_per_event']:.1f},"
+          f"roof={roof / 1e6:.1f}Mev/s,"
+          f"achieved={report['roofline']['achieved_fraction']:.4f}",
+          flush=True)
+
     bk = report["backends"]
     if "xla" in bk and "pallas" in bk:
         report["pallas_over_xla"] = round(
@@ -322,8 +380,17 @@ def main() -> None:
         json.dump(report, f, indent=2, sort_keys=True)
     print(f"# wrote {args.out}", flush=True)
 
+    failed = False
+    if (args.min_sharded_ratio > 0.0 and ratio_vs_unsharded is not None
+            and ratio_vs_unsharded < args.min_sharded_ratio):
+        print(f"# perfcheck: sharded/unsharded ratio "
+              f"{ratio_vs_unsharded:.3f} below --min-sharded-ratio "
+              f"{args.min_sharded_ratio}", flush=True)
+        failed = True
     if args.baseline and not _check_baseline(report, args.baseline,
                                              args.regression_tolerance):
+        failed = True
+    if failed:
         sys.exit(1)
 
 

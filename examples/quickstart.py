@@ -2,21 +2,14 @@
 
   1. the ALock itself (threaded, real concurrency),
   2. the cluster simulator through the declarative Workload/Experiment
-     API — the paper's headline comparison plus a phased hot-key storm,
-  3. a model forward + loss through the public API.
+     API — the paper's headline comparison plus a phased hot-key storm.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
 import threading
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_config
 from repro.core.lock_table import LockTable
 from repro.experiments import Experiment, ExecOptions
-from repro.models import model as M
-from repro.models.params import init_tree, param_count
 from repro.workloads import Phase, Workload
 
 
@@ -54,18 +47,6 @@ def demo_simulator():
               f"(passes={r.passes}, reacquires={r.reacquires})")
 
 
-def demo_model():
-    print("== 3. model API (reduced gemma3-1b) ==")
-    cfg = get_config("gemma3-1b").tiny()
-    params = init_tree(M.model_specs(cfg), jax.random.key(0))
-    batch = {"tokens": jnp.ones((2, 32), jnp.int32),
-             "labels": jnp.ones((2, 32), jnp.int32)}
-    loss, metrics = M.loss_fn(cfg, params, batch)
-    print(f"  params={param_count(M.model_specs(cfg)):,} "
-          f"loss={float(loss):.3f}")
-
-
 if __name__ == "__main__":
     demo_lock_table()
     demo_simulator()
-    demo_model()

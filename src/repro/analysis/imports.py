@@ -5,8 +5,8 @@ imported or executed), resolves ``import``/``from``-imports — including
 relative and function-local ones — to edges between repo modules, and
 walks reachability from the engine's entry packages
 (:data:`ROOT_PACKAGES`). Modules no root can reach are *unreachable*:
-nothing the engine, the experiment registry, the coordinator or the
-serving layer runs can ever import them.
+nothing the engine, the experiment registry or the coordinator runs can
+ever import them.
 
 The report is *actionable*, not informational: every unreachable module
 must either be wired into an entry package or carry an explicit
@@ -41,12 +41,12 @@ __all__ = ["ROOT_PACKAGES", "QUARANTINED", "ImportGraph", "build_graph",
            "report", "classify"]
 
 #: reachability roots: the packages whose public surface the engine, the
-#: scenario registry, the coordinator and the serving layer expose. For a
-#: namespace package (no ``__init__.py``) the roots are its direct child
-#: modules. ``repro.analysis.__main__`` is the lint CLI itself — an
-#: executable entry, reached by ``python -m``, not by imports.
+#: scenario registry and the coordinator expose. For a namespace package
+#: (no ``__init__.py``) the roots are its direct child modules.
+#: ``repro.analysis.__main__`` is the lint CLI itself — an executable
+#: entry, reached by ``python -m``, not by imports.
 ROOT_PACKAGES = ("repro.core", "repro.kernels", "repro.workloads",
-                 "repro.experiments", "repro.coord", "repro.serve",
+                 "repro.experiments", "repro.coord",
                  "repro.analysis", "repro.analysis.__main__")
 
 #: Explicitly parked module trees: unreachable from every root *on
@@ -56,10 +56,10 @@ ROOT_PACKAGES = ("repro.core", "repro.kernels", "repro.workloads",
 #: module under the prefix anymore — delete the entry when the tree is
 #: wired in or removed).
 QUARANTINED: dict[str, str] = {
-    # the legacy training stack (repro.train / repro.launch and the
-    # parallel collectives/compression helpers) was deleted outright —
-    # repro.parallel.sharding survives because batch.sweep's chunked
-    # dispatch and the model layers import it
+    # the dead seed stack (repro.models / repro.configs / repro.serve,
+    # plus the empty repro.train / repro.launch dirs) was deleted
+    # outright — repro.parallel.sharding survives, slimmed to the
+    # shard_map wrapper batch.sweep's chunked dispatch imports
     "repro.core.tla": "TLA+ spec emitter — developer tooling invoked by "
                       "hand, deliberately outside the engine's import "
                       "surface",

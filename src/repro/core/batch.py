@@ -32,23 +32,35 @@ tiled across the Pallas grid). ``"auto"`` resolves per
 ``sim.resolve_backend``. Both produce bitwise-identical replicas.
 
 ``sweep(..., devices=, chunk=)`` turns on the sharded bucket layout: each
-bucket's flattened (workload x seed) axis is split into fixed-size chunks
-of ``chunk`` rows per device, each chunk edge-padded to exactly
-``chunk * n_devices`` rows and dispatched once through a cached
-``shard_map`` runner (``parallel/sharding.py``'s compat wrapper, mesh axis
-``"data"``). Fixed chunk sizes mean the executable is keyed by
-``(shape key, phases, chunk, devices, backend)`` alone — an arbitrarily
-large bucket reuses one compile and costs one dispatch per chunk, instead
-of one compile per bucket size. ``exec_stats()`` exposes the
-dispatch/compile counters so benchmarks (``benchmarks/perfcheck.py``) can
-record the dispatch-count reduction. ``repro.experiments.ExecOptions``
-carries (backend, devices, chunk) as one immutable object through the
-benchmark suite — there is no process-wide execution state.
+bucket's flattened (workload x seed) axis is measured in dispatch *units*
+of ``chunk`` rows per device (``chunk * n_devices`` rows each), and the
+unit count is greedily decomposed into power-of-two **superchunks** —
+each superchunk is ONE dispatch of ``2**k * chunk * n_devices`` rows
+through a cached ``shard_map`` runner (``parallel/sharding.py``'s compat
+wrapper, mesh axis ``"data"``). A bucket of ``u`` units therefore costs
+``popcount(u)`` dispatches against an executable family of at most
+``log2(u) + 1`` shapes, instead of ``u`` serialized unit dispatches: on
+hosts where every dispatch pays a full serial event loop regardless of
+its replica-row count (vmap rows are nearly free), this is what keeps
+the sharded layout's events/sec at parity with the unsharded
+single-dispatch layout. The dispatch loop never blocks — every
+superchunk is issued before the first result is touched, chunk operand
+buffers are donated, and the host-side aggregation of finished
+superchunks overlaps the still-in-flight ones. Edge padding is bounded
+below the mesh width (rows are only rounded up to a device-count
+multiple); the final superchunk is trimmed to the true remaining rows
+rather than padded to a full unit.
+``exec_stats()`` exposes the dispatch/compile counters so benchmarks
+(``benchmarks/perfcheck.py``) can record the dispatch-count reduction.
+``repro.experiments.ExecOptions`` carries (backend, devices, chunk) as
+one immutable object through the benchmark suite — there is no
+process-wide execution state.
 """
 from __future__ import annotations
 
 import functools
 import math
+import warnings
 from typing import NamedTuple, Sequence
 
 import jax
@@ -132,8 +144,16 @@ def _bucket_runner(key, n_phases: int, backend: str, mesh: Mesh):
 
     The wrapped function maps the flattened replica axis onto the mesh's
     ``data`` axis; inside each shard the local block runs through the
-    selected backend. Fixed chunk sizes upstream mean each runner compiles
-    once per chunk shape and is reused across chunks and buckets.
+    selected backend. One runner serves every superchunk size — jit keys
+    executables by input shape, so the power-of-two superchunk family
+    upstream compiles at most O(log units) shapes per runner, reused
+    across superchunks and buckets (``_note_call`` mirrors this by
+    including the superchunk row count in the compile-counter key). The
+    workload-operand arguments are donated: each dispatch transfers fresh
+    host slices, so their device buffers are dead on return and the
+    runtime may reuse them for the outputs; the broadcast
+    thread_node/lock_node args are shared across dispatches and are NOT
+    donated.
     """
     alg, T, N, K, n_events, R = key
     rep = None
@@ -163,7 +183,8 @@ def _bucket_runner(key, n_phases: int, backend: str, mesh: Mesh):
     fn = jax.jit(shard_map(
         local_block, mesh,
         in_specs=(P("data"),) * n_fields + (P(), P()),
-        out_specs=(P("data"),) * n_out, axis_names={"data"}))
+        out_specs=(P("data"),) * n_out, axis_names={"data"}),
+        donate_argnums=tuple(range(n_fields)))
     _RUNNER_CACHE[ck] = fn
     return fn, ck
 
@@ -299,9 +320,13 @@ def _exec_bucket(key, thread_node, lock_node, wl: WorkloadOperands,
     ``wl`` leaves carry the flattened (workload x seed) axis B — the
     per-phase cost rows and budgets included. Unsharded (devices/chunk
     both None): one dispatch for the whole bucket — the XLA leg is the
-    original ``_run_events_batch`` oracle. Sharded: the row axis is split
-    over the device mesh in fixed chunks of ``chunk`` rows per device, one
-    dispatch per chunk, executables shared across chunks.
+    original ``_run_events_batch`` oracle. Sharded: the row axis is
+    measured in units of ``chunk`` rows per device, the unit count is
+    decomposed into greedy power-of-two superchunks, and each superchunk
+    is one non-blocking dispatch over the device mesh (see the module
+    docstring); aggregation converts finished superchunks while later
+    ones are still in flight and only the final concatenate forces the
+    last dispatch.
     """
     alg, T, N, K, n_events, R = key
     B = wl.seed.shape[0]
@@ -331,25 +356,52 @@ def _exec_bucket(key, thread_node, lock_node, wl: WorkloadOperands,
     rows = int(chunk) if chunk is not None else math.ceil(B / D)
     if rows < 1:
         raise ValueError(f"chunk must be >= 1, got {chunk}")
-    step = rows * D
-    n_chunks = math.ceil(B / step)
-    pad = n_chunks * step - B
-    leaves = [_pad_rows(np.asarray(a), pad) for a in wl]
+    step = rows * D                       # rows per dispatch unit
+    # pad only to the mesh width: shard_map needs each dispatch's row
+    # count divisible by D, nothing more — per-replica edge padding is
+    # dead serial kernel work on every device, so the final superchunk is
+    # trimmed to the true remaining rows instead of a full unit
+    Bp = math.ceil(B / D) * D
+    n_units = math.ceil(Bp / step)
+    # greedy power-of-two decomposition of the unit count: one dispatch
+    # per superchunk (popcount(n_units) total), executable family bounded
+    # by log2(n_units) + 1 full-unit shapes plus at most one trimmed
+    # trailing shape
+    sizes, rem = [], n_units
+    while rem:
+        p = 1 << (rem.bit_length() - 1)
+        sizes.append(p)
+        rem -= p
+    leaves = [_pad_rows(np.asarray(a), Bp - B) for a in wl]
     tn = np.asarray(thread_node)
     ln = np.asarray(lock_node)
     runner, ck = _bucket_runner(key, n_phases, backend, mesh)
-    if backend == "pallas":
-        # each shard's kernel sees `rows` replicas (same trace-time-only
-        # caveat as the unsharded branch above)
-        from repro.kernels.event_loop.ops import plan_for_run
-        plan_for_run(rows, n_phases, n_events, T, N, K, R=R,
-                     hl=alg == "hlock", rw=alg == "alock-rw")
     outs = []
-    with enable_x64():
-        for c in range(n_chunks):
-            sl = slice(c * step, (c + 1) * step)
+    with enable_x64(), warnings.catch_warnings():
+        # donated operand buffers only help when an output can reuse one;
+        # most of this engine's outputs are clock-typed rings with no
+        # matching input shape, so XLA declines those donations with a
+        # per-dispatch warning — benign and suppressed here
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        off = 0
+        for sz in sizes:
+            nrows = min(sz * step, Bp - off)   # multiple of D by induction
+            if backend == "pallas":
+                # each shard's kernel sees nrows/D replicas (same
+                # trace-time-only caveat as the unsharded branch above)
+                from repro.kernels.event_loop.ops import plan_for_run
+                plan_for_run(nrows // D, n_phases, n_events, T, N, K, R=R,
+                             hl=alg == "hlock", rw=alg == "alock-rw")
+            sl = slice(off, off + nrows)
+            # async: the call returns device futures — every superchunk
+            # is issued before any result is forced below
             outs.append(runner(*(a[sl] for a in leaves), tn, ln))
-            _note_call((ck, step))
+            _note_call((ck, nrows))
+            off += nrows
+    # aggregation is the only blocking point: np.asarray forces the
+    # superchunks in dispatch order, so converting an early (large) one
+    # overlaps the later in-flight dispatches
     return tuple(np.concatenate([np.asarray(o[j]) for o in outs])[:B]
                  for j in range(10 if R else 6))
 
@@ -368,10 +420,12 @@ def sweep(configs: Sequence[SimConfig | Workload], n_seeds: int = 1,
     devices: device list to shard the flattened (workload x seed) axis over
       (mesh axis "data"); None with chunk=None keeps the single-dispatch
       layout.
-    chunk: rows per device per dispatch. Fixing it pins the executable
-      shape, so oversized buckets spill into extra dispatches of the SAME
-      compile instead of recompiling; chunk=None with devices set derives
-      one even chunk per device.
+    chunk: rows per device per dispatch *unit*. Units are coalesced into
+      greedy power-of-two superchunks — one dispatch each — so an
+      oversized bucket costs popcount(units) dispatches against at most
+      log2(units)+1 executable shapes instead of one serialized dispatch
+      per unit; chunk=None with devices set derives one even chunk per
+      device (a single superchunk).
 
     Returns BatchResults parallel to ``configs`` (duplicates are simulated
     twice — dedupe upstream if the grid overlaps; ``experiments.Experiment``

@@ -809,23 +809,24 @@ def event_loop_kernel(*refs, alg: str, T: int, N: int, K: int, P: int,
                       busy, opst, done, lat, latn, reacq, npass)
         if is_rw:
             new_st = new_st + (wrd,)
-            st = st + (st_wrd,)
-        # ragged final chunk: events past n_events are masked no-ops
-        valid = gi < n_events
-        return jax.tree_util.tree_map(
-            lambda n, o: jnp.where(valid, n, o), new_st, st)
+        return new_st
 
+    # ragged final chunk: bound the loop at the true remaining event count
+    # instead of running ev_chunk - (n_events % ev_chunk) masked no-op
+    # steps through the whole state tree
+    nev_here = jnp.minimum(_I(ev_chunk), _I(n_events) - j * _I(ev_chunk))
     if repr32:
         # explicit i32-counter while_loop: under x64, fori_loop's induction
         # variable is int64 — the one 64-bit aval Mosaic would still see in
-        # this kernel. The i64 fast path keeps the fori_loop below.
+        # this kernel. The i64 fast path keeps the fori_loop below (its
+        # traced i32 bound keeps the induction variable i32 there too).
         carry = lax.while_loop(
-            lambda c: c[0] < _I(ev_chunk),
+            lambda c: c[0] < nev_here,
             lambda c: (c[0] + _I(1), step(c[0], c[1])),
             (jnp.zeros((), I32), state))
         state = carry[1]
     else:
-        state = lax.fori_loop(0, ev_chunk, step, state)
+        state = lax.fori_loop(_I(0), nev_here, step, state)
     if is_rw:
         s_word[...] = state[-1]
         state = state[:-1]

@@ -170,6 +170,9 @@ def plan_for_run(B, P, n_events, T, N, K, *, R: int = 0,
     if vmem_budget is None and not interpret:
         vmem_budget = vmem.DEFAULT_VMEM_BUDGET
     tile = max(1, min(tile, B))
+    # same grid-dim count, minimal edge padding: B=9, tile=8 pads 7 rows
+    # of dead kernel work; tile=5 runs the same two tiles padding 1
+    tile = -(-B // -(-B // tile))
     ev_chunk = max(1, min(ev_chunk, max(n_events, 1)))
     # price the VMEM footprint up front: shrink the replica tile to fit
     # the budget (or raise actionably) instead of dying inside Mosaic

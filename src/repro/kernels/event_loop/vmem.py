@@ -24,6 +24,12 @@ clocks = 8 bytes, as one i64 buffer or an (hi, lo) i32 pair):
                     descriptors ``tile*T*4``; ready/op_start ``tile*T*8``;
                     busy ``tile*N*8``
 
+The ``tile`` this planner receives is already padding-minimized by
+``ops.plan_for_run`` (``ceil(B / ceil(B / tile))``: same grid-dim count,
+smallest edge pad), so the byte table prices the tile the kernel really
+runs, and the ragged event loop bounds itself at the true remaining
+event count per chunk instead of masking dead steps.
+
 ``plan_vmem`` is exercised by ``tests/test_vmem_planner.py`` with no TPU:
 the breakdown shapes are checked against the buffers ``ops.run_events``
 actually allocates in interpret mode. The chosen plan is recorded via

@@ -1,245 +1,18 @@
-"""Logical-axis sharding: map named tensor axes onto mesh axes.
+"""Mesh utilities for the sharded sweep path.
 
-Every parameter / activation / cache tensor in the framework is annotated
-with *logical* axis names ("embed", "ffn", "heads", ...). A ``Rules`` table
-maps logical names to mesh axes (or tuples of mesh axes, or None). The
-mapping is divisibility-checked per tensor: if a dimension does not divide
-by the mesh-axis size the axis falls back to replication and the event is
-recorded in an audit log (never a crash — GQA kv_heads < |model| is the
-canonical case).
-
-Train shapes use FSDP+TP rules (weight ``embed`` dims sharded on ``data``);
-serve shapes use TP-only rules (weights replicated over ``data``, KV cache
-sharded on batch/seq). See DESIGN.md §4.
+The one live export is :func:`shard_map` — the version-portable wrapper
+``repro.core.batch`` uses to split a bucket's flattened replica axis over
+a device mesh (axis name ``"data"``). The logical-axis rule tables,
+divisibility-checked pspec derivation and audit log that used to live
+here served the deleted model/serving stack and left with it; the sweep
+path only ever needed plain ``P("data")`` specs.
 """
 from __future__ import annotations
 
-import contextlib
-import threading
-from dataclasses import dataclass, field
-from typing import Any, Mapping, Sequence
-
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-# ---------------------------------------------------------------------------
-# Rules
-
-
-@dataclass(frozen=True)
-class Rules:
-    """Mapping from logical axis name -> mesh axis (str), tuple of mesh axes,
-    or None (replicated)."""
-
-    table: Mapping[str, Any]
-
-    def get(self, name: str | None):
-        if name is None:
-            return None
-        return self.table.get(name, None)
-
-    def override(self, **kw) -> "Rules":
-        t = dict(self.table)
-        t.update(kw)
-        return Rules(t)
-
-
-# Weight axes use FSDP ("data") on the embed dim + TP ("model") on the wide
-# dim; activations shard batch on (pod, data).
-TRAIN_RULES = Rules({
-    # --- weights ---
-    "embed": "data",          # FSDP / ZeRO-3 axis
-    "ffn": "model",
-    "heads": "model",
-    "kv_heads": "model",
-    "head_dim": None,
-    "vocab": "model",
-    "experts": None,          # expert count rarely divides; shard expert_ffn
-    "expert_ffn": "model",
-    "layers": None,           # stacked-scan leading dim
-    "mla_rank": None,
-    "ssm_heads": "model",
-    "ssm_inner": "model",
-    "ssm_state": None,
-    "conv": None,
-    # --- activations ---
-    "batch": ("pod", "data"),
-    "seq": None,
-    "act_vocab": "model",
-    "act_embed": None,
-    "act_heads": "model",
-    "act_ffn": "model",
-    "act_ssm_inner": "model",
-    # --- caches (not used in train) ---
-    "cache_batch": ("pod", "data"),
-    "cache_seq": None,
-    "cache_heads": "model",
-})
-
-# Serving: no FSDP (weights must not be re-gathered every decode step).
-SERVE_RULES = TRAIN_RULES.override(embed=None)
-
-
-def rules_for_shape(kind: str, *, kv_divisible: bool) -> Rules:
-    """Resolved rules for a workload shape kind.
-
-    kind: train | prefill | decode | long_decode
-    kv_divisible: whether cfg.n_kv_heads divides the model axis — decides
-      whether decode caches shard heads (preferred) or sequence.
-    """
-    if kind == "train":
-        return TRAIN_RULES
-    if kind == "prefill":
-        # prefill is serving: TP-only weights, cache sharded like decode
-        r = SERVE_RULES
-    elif kind == "decode":
-        r = SERVE_RULES
-    elif kind == "long_decode":
-        # global_batch=1: batch axes cannot shard; context-shard the cache
-        r = SERVE_RULES.override(
-            cache_batch=None, batch=None,
-            cache_seq=("data", "model"), cache_heads=None,
-        )
-        return r
-    else:
-        raise ValueError(f"unknown shape kind {kind!r}")
-    if not kv_divisible:
-        # GQA with kv_heads < |model|: shard the cache on sequence instead.
-        r = r.override(cache_heads=None, cache_seq="model")
-    return r
-
-
-# ---------------------------------------------------------------------------
-# Mesh context + audit log
-
-_ctx = threading.local()
-
-
-def _get_mesh() -> Mesh | None:
-    return getattr(_ctx, "mesh", None)
-
-
-def _get_rules() -> Rules | None:
-    return getattr(_ctx, "rules", None)
-
-
-@contextlib.contextmanager
-def sharding_ctx(mesh: Mesh | None, rules: Rules | None):
-    """Install (mesh, rules) so model code can emit sharding constraints.
-
-    With no context installed, ``constrain`` is a no-op — smoke tests and
-    single-device examples run unchanged.
-    """
-    old = (_get_mesh(), _get_rules())
-    _ctx.mesh, _ctx.rules = mesh, rules
-    try:
-        yield
-    finally:
-        _ctx.mesh, _ctx.rules = old
-
-
-@dataclass
-class AuditLog:
-    """Records every divisibility fallback, for DESIGN/EXPERIMENTS tables."""
-    events: list = field(default_factory=list)
-
-    def note(self, what: str):
-        if what not in self.events:
-            self.events.append(what)
-
-
-AUDIT = AuditLog()
-
-
-def _axis_size(mesh: Mesh, axis) -> int:
-    if axis is None:
-        return 1
-    if isinstance(axis, (tuple, list)):
-        s = 1
-        for a in axis:
-            s *= _axis_size(mesh, a)
-        return s
-    return mesh.shape[axis] if axis in mesh.shape else 1
-
-
-def _present(mesh: Mesh, axis):
-    """Drop mesh axes not present in this mesh (e.g. 'pod' on single-pod)."""
-    if axis is None:
-        return None
-    if isinstance(axis, (tuple, list)):
-        kept = tuple(a for a in axis if a in mesh.shape)
-        if not kept:
-            return None
-        return kept if len(kept) > 1 else kept[0]
-    return axis if axis in mesh.shape else None
-
-
-def pspec(shape: Sequence[int], axes: Sequence[str | None],
-          rules: Rules, mesh: Mesh, *, tensor: str = "?") -> P:
-    """Build a PartitionSpec for `shape` with logical `axes` under `rules`.
-
-    Any dim whose size does not divide the mapped mesh-axis size falls back
-    to replication (audited). Mesh axes may be consumed at most once per
-    tensor; later conflicting dims replicate (audited).
-    """
-    assert len(shape) == len(axes), (shape, axes, tensor)
-    used: set[str] = set()
-    out = []
-    for dim, name in zip(shape, axes):
-        axis = _present(mesh, rules.get(name))
-        if axis is None:
-            out.append(None)
-            continue
-        flat = axis if isinstance(axis, tuple) else (axis,)
-        if any(a in used for a in flat):
-            AUDIT.note(f"{tensor}: axis {name}->{axis} already used; replicated")
-            out.append(None)
-            continue
-        size = _axis_size(mesh, axis)
-        if dim % size != 0:
-            AUDIT.note(f"{tensor}: dim {name}={dim} !% mesh{axis}={size}; replicated")
-            out.append(None)
-            continue
-        used.update(flat)
-        out.append(axis)
-    # PartitionSpec wants trailing Nones trimmed-or-not; both fine.
-    return P(*out)
-
-
-def named_sharding(shape, axes, rules, mesh, *, tensor="?") -> NamedSharding:
-    return NamedSharding(mesh, pspec(shape, axes, rules, mesh, tensor=tensor))
-
-
-def constrain(x: jax.Array, *axes: str | None) -> jax.Array:
-    """Sharding constraint by logical axes; no-op outside sharding_ctx.
-
-    Inside a partial-manual shard_map (e.g. the budgeted cohort steps are
-    manual over 'pod'), constraints must be expressed on the ambient
-    abstract mesh with the manual axes dropped.
-    """
-    mesh, rules = _get_mesh(), _get_rules()
-    if mesh is None or rules is None:
-        return x
-    spec = pspec(x.shape, axes, rules, mesh, tensor="act")
-    try:
-        am = jax.sharding.get_abstract_mesh()
-    except Exception:
-        am = None
-    manual = set()
-    if am is not None and getattr(am, "axis_types", None):
-        manual = {n for n, t in zip(am.axis_names, am.axis_types)
-                  if "Manual" in str(t)}
-    if manual:
-        cleaned = []
-        for e in spec:
-            if isinstance(e, tuple):
-                kept = tuple(a for a in e if a not in manual)
-                cleaned.append(kept if kept else None)
-            else:
-                cleaned.append(None if e in manual else e)
-        return jax.lax.with_sharding_constraint(
-            x, NamedSharding(am, P(*cleaned)))
-    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+__all__ = ["shard_map"]
 
 
 def shard_map(f, mesh: Mesh, in_specs, out_specs, axis_names,
@@ -256,21 +29,3 @@ def shard_map(f, mesh: Mesh, in_specs, out_specs, axis_names,
     auto = frozenset(mesh.axis_names) - frozenset(axis_names)
     return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                       auto=auto, check_rep=check_vma)
-
-
-def tree_pspecs(spec_tree, rules: Rules, mesh: Mesh):
-    """Map a tree of ParamSpec (anything with .shape/.axes) to PartitionSpecs."""
-    from repro.models.params import ParamSpec  # local import, avoid cycle
-
-    def one(path, s):
-        name = "/".join(str(p) for p in path)
-        return pspec(s.shape, s.axes, rules, mesh, tensor=name)
-
-    return jax.tree_util.tree_map_with_path(
-        one, spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
-
-
-def tree_shardings(spec_tree, rules: Rules, mesh: Mesh):
-    specs = tree_pspecs(spec_tree, rules, mesh)
-    return jax.tree_util.tree_map(lambda p: NamedSharding(mesh, p), specs,
-                                  is_leaf=lambda x: isinstance(x, P))

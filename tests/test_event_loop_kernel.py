@@ -40,16 +40,13 @@ def test_pallas_bitwise_with_zipf_and_multi_node():
                  simulate(cfg, n_events=EV, backend="pallas"))
 
 
-def test_kernel_ragged_tile_and_chunk_bitwise():
-    """Replica count not a tile multiple + events not a chunk multiple must
-    pad internally and still match the vmapped XLA reference exactly —
-    including per-thread locality, a mid-stream phase switch (crossing a
-    chunk boundary) and a downed node."""
-    from repro.kernels.event_loop.ops import run_events
-    from repro.kernels.event_loop.ref import run_events_ref
+def _ragged_operands(B, ev):
+    """A B-replica, 2-phase operand set with per-thread locality, a downed
+    node, doubled phase-2 costs and fail-slow node multipliers — the
+    nastiest shape the kernel's ragged tiling has to survive."""
     from repro.workloads import WorkloadOperands
     alg, N, tpn, K = "alock", 3, 4, 6
-    T, B, ev, P = N * tpn, 5, 1100, 2
+    T, P = N * tpn, 2
     tn, ln, costs = topology(alg, N, tpn, K)
     rng = np.random.default_rng(0)
     loc = rng.uniform(0.3, 1.0, (B, P, T)).astype(np.float32)
@@ -82,6 +79,18 @@ def test_kernel_ragged_tile_and_chunk_bitwise():
         arr_fix=jnp.zeros((B, 0), jnp.int32),
         rack=jnp.tile(jnp.arange(N, dtype=jnp.int32), (B, 1)),
         read_frac=jnp.zeros((B, P, T), jnp.float32))
+    return alg, T, N, K, wl, tn, ln
+
+
+def test_kernel_ragged_tile_and_chunk_bitwise():
+    """Replica count not a tile multiple + events not a chunk multiple must
+    pad internally and still match the vmapped XLA reference exactly —
+    including per-thread locality, a mid-stream phase switch (crossing a
+    chunk boundary) and a downed node."""
+    from repro.kernels.event_loop.ops import run_events
+    from repro.kernels.event_loop.ref import run_events_ref
+    ev = 1100
+    alg, T, N, K, wl, tn, ln = _ragged_operands(5, ev)
     with enable_x64():
         ref = run_events_ref(alg, T, N, K, ev, wl, tn, ln)
         out = run_events(alg, T, N, K, ev, wl, tn, ln,
@@ -89,6 +98,26 @@ def test_kernel_ragged_tile_and_chunk_bitwise():
     for a, b in zip(ref, out):
         assert a.dtype == b.dtype
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_native_grid_matches_per_replica_runs():
+    """The replica axis folded into the Pallas grid (ragged tile) must be
+    bitwise-equal to running every replica alone (B=1, tile=1) — replicas
+    are independent lanes of one executable, and the grid fan-out may not
+    couple them (the pre-fold layout was a vmap of single-replica runs)."""
+    from repro.kernels.event_loop.ops import run_events
+    ev, B = 700, 5           # ev crosses the 600 phase edge, ragged chunk
+    alg, T, N, K, wl, tn, ln = _ragged_operands(B, ev)
+    with enable_x64():
+        out = run_events(alg, T, N, K, ev, wl, tn, ln,
+                         tile=2, ev_chunk=256, interpret=True)
+        singles = [run_events(
+            alg, T, N, K, ev,
+            jax.tree_util.tree_map(lambda a, i=i: a[i:i + 1], wl), tn, ln,
+            tile=1, ev_chunk=256, interpret=True) for i in range(B)]
+    for j, o in enumerate(out):
+        cat = np.concatenate([np.asarray(s[j]) for s in singles])
+        np.testing.assert_array_equal(np.asarray(o), cat)
 
 
 def test_sweep_pallas_backend_matches_xla():
@@ -104,26 +133,61 @@ def test_sweep_pallas_backend_matches_xla():
 
 
 def test_sweep_chunked_matches_unsharded_and_counts_dispatches():
-    """A bucket larger than the chunk spills into fixed-size dispatches of
-    one shared executable; results stay bitwise-equal to the one-dispatch
-    layout."""
+    """A bucket larger than the chunk spills into power-of-two superchunk
+    dispatches of one shared runner; results stay bitwise-equal to the
+    one-dispatch layout."""
     cfgs = [SimConfig("alock", 2, 2, 8, l, (2, 3), seed=s, zipf_s=z)
             for l, s, z in ((0.9, 7, 0.0), (0.5, 1, 1.2), (0.95, 3, 0.0))]
     base = batch.sweep(cfgs, n_seeds=2, n_events=EV)      # bucket B = 6
     batch.reset_exec_stats()
     ch = batch.sweep(cfgs, n_seeds=2, n_events=EV, chunk=2)
     st = batch.exec_stats()
-    assert st["dispatches"] == 3        # ceil(6 / (2 rows * 1 device))
+    # 3 units of 2 rows coalesce into superchunks [2, 1]: one dispatch
+    # of 4 rows + one of 2 rows (popcount(3)), not 3 unit dispatches
+    assert st["dispatches"] == 2
     for b, c in zip(base, ch):
         np.testing.assert_array_equal(b.ops, c.ops)
         np.testing.assert_array_equal(b.sim_ns, c.sim_ns)
         np.testing.assert_array_equal(b.lat_ns, c.lat_ns)
         np.testing.assert_array_equal(b.per_thread_ops, c.per_thread_ops)
-    # same chunk shape again: zero new compiles, only dispatches
+    # same chunk shapes again: zero new compiles, only dispatches
     batch.reset_exec_stats()
     batch.sweep(cfgs, n_seeds=2, n_events=EV, chunk=2)
     st2 = batch.exec_stats()
-    assert st2["dispatches"] == 3 and st2["compiles"] == 0
+    assert st2["dispatches"] == 2 and st2["compiles"] == 0
+
+
+def test_sweep_three_bucket_ragged_counts_and_bitwise():
+    """Dispatch/compile accounting across a 3-bucket ragged sweep under the
+    pipelined path: per bucket (6, 4, 2 rows at chunk=2) the superchunk
+    decomposition is [4, 2] / [4] / [2] rows — 4 dispatches, one compile
+    per distinct (runner, rows) shape, zero compiles on the rerun — and
+    results stay bitwise-equal to the unsharded layout."""
+    ev = EV - 100     # own shape keys: no executable reuse across tests
+    cfgs = ([SimConfig("alock", 2, 2, 8, l, (2, 3), seed=i)
+             for i, l in enumerate((0.85, 0.9, 1.0))]
+            + [SimConfig("mcs", 2, 2, 8, l, seed=3 + i)
+               for i, l in enumerate((0.5, 0.95))]
+            + [SimConfig("spinlock", 2, 2, 8, 0.9, seed=5)])
+    assert len({batch.shape_key(c, ev) for c in cfgs}) == 3
+    base = batch.sweep(cfgs, n_seeds=2, n_events=ev)
+    batch.reset_exec_stats()
+    ch = batch.sweep(cfgs, n_seeds=2, n_events=ev, chunk=1)
+    st = batch.exec_stats()
+    # alock bucket: 6 rows -> units [4, 2] -> 2 dispatches; mcs: 4 rows
+    # -> [4] -> 1; spinlock: 2 rows -> [2] -> 1
+    assert st["dispatches"] == 4
+    # each bucket runner compiles once per distinct row count it saw:
+    # alock {4, 2}, mcs {4}, spinlock {2} -> 4 executables
+    assert st["compiles"] == 4
+    for b, c in zip(base, ch):
+        np.testing.assert_array_equal(b.lat_ns, c.lat_ns)
+        np.testing.assert_array_equal(b.ops, c.ops)
+        np.testing.assert_array_equal(b.per_thread_ops, c.per_thread_ops)
+    batch.reset_exec_stats()
+    batch.sweep(cfgs, n_seeds=2, n_events=ev, chunk=1)
+    st2 = batch.exec_stats()
+    assert st2["dispatches"] == 4 and st2["compiles"] == 0
 
 
 def test_sweep_devices_path_matches_unsharded():

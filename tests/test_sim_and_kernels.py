@@ -132,30 +132,6 @@ def test_alock_tick_kernel_pads_nonmultiple_tables():
     _run_tick_vs_machine(rng_seed=11, Tab=6, T=3, steps=150, tile=4)
 
 
-def test_blockwise_flash_layer_grads():
-    """The model's jnp flash (custom_vjp) against the naive layer oracle."""
-    from repro.models.layers import _mask, _sdpa, blockwise_sdpa
-    key = jax.random.key(0)
-    B, S, K, R, hd = 2, 64, 2, 2, 8
-    q = jax.random.normal(jax.random.fold_in(key, 1), (B, S, K, R, hd))
-    k = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, hd))
-    v = jax.random.normal(jax.random.fold_in(key, 3), (B, S, K, hd))
-    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
-    for window in (None, 16):
-        def f1(q, k, v):
-            return blockwise_sdpa(q, k, v, pos, causal=True, window=window,
-                                  kv_chunk=16).sum()
-
-        def f2(q, k, v):
-            m = _mask(pos, jnp.arange(S), causal=True, window=window)
-            return _sdpa(q, k, v, m).sum()
-        g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
-        g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
-        for a, b in zip(g1, g2):
-            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                       atol=2e-5, rtol=2e-5)
-
-
 def test_flash_bwd_kernels_match_oracle():
     from repro.kernels.flash_attention.ops import mha_vjp
     from repro.kernels.flash_attention.ref import attention_ref

@@ -235,3 +235,27 @@ def test_impossible_budget_through_run_events():
     with pytest.raises(ValueError, match="budget"):
         run_events_pairs("alock", 4, 2, 8, ev, wl, tn, ln, interpret=True,
                          vmem_budget=1024)
+
+
+def test_plan_for_run_minimizes_edge_padding():
+    """The grid keeps its tile count but sheds dead edge rows: B=9 at a
+    requested tile of 8 runs two tiles of 5 (pad 1), not 8+1 (pad 7);
+    exact divisors and B <= tile stay untouched; and the VMEM halving
+    composes with the minimized tile, not the requested one."""
+    from repro.kernels.event_loop.ops import plan_for_run
+    shape = dict(T=12, N=3, K=6)
+    assert plan_for_run(9, 2, 64, tile=8, interpret=True,
+                        **shape).tile == 5
+    assert plan_for_run(5, 2, 64, tile=2, interpret=True,
+                        **shape).tile == 2
+    assert plan_for_run(9, 2, 64, tile=3, interpret=True,
+                        **shape).tile == 3
+    assert plan_for_run(6, 2, 64, tile=6, interpret=True,
+                        **shape).tile == 6
+    # budget pressure: 5 does not fit, one halving lands on 2 (which the
+    # budget below is sized to fit exactly)
+    fit2 = vmem.plan_vmem(tile=2, ev_chunk=64, P=2, repr32=True,
+                          lat_samples=LAT_SAMPLES, **shape).total_bytes
+    p = plan_for_run(9, 2, 64, tile=8, interpret=True,
+                     representation="i32pair", vmem_budget=fit2, **shape)
+    assert (p.requested_tile, p.tile, p.shrunk) == (5, 2, True)
